@@ -1,0 +1,78 @@
+"""Per-kernel microbenchmarks: jnp dispatch paths + interpret-mode checks.
+
+Wall-clock timings on this container compare the *jnp* paths (the Pallas
+kernels themselves are TPU-target; interpret mode is a correctness tool,
+not a performance proxy).  Derived column reports the kernel's modeled
+VMEM-resident traffic advantage.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.elevator_scan.ops import elevator_scan
+from repro.kernels.elevator_scan.ref import elevator_scan_ref
+from repro.kernels.local_attention.ref import attention_blockwise, attention_ref
+from repro.kernels.token_shift.ops import token_shift
+from repro.core import from_thread_or_const
+
+
+def _time(fn, *args, reps=10):
+    f = jax.jit(fn)
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # elevator_scan: log-depth vs sequential reference.
+    b, t, d = 4, 2048, 256
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    t_log = _time(lambda a_, x_: elevator_scan(a_, x_, use_kernel=False), a, x)
+    t_seq = _time(elevator_scan_ref, a, x)
+    rows.append(("elevator_scan_logdepth", t_log, f"seq_ref_us={t_seq:.0f}"))
+
+    # token_shift vs unfused shifts.
+    w = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
+    t_fused = _time(lambda x_, w_: token_shift(x_, w_, use_kernel=False), x, w)
+
+    def unfused(x_, w_):
+        out = jnp.zeros_like(x_)
+        for k in range(4):
+            out = out + w_[k] * jnp.pad(x_, ((0, 0), (k, 0), (0, 0)))[:, :t]
+        return out
+
+    t_unf = _time(unfused, x, w)
+    rows.append(("token_shift", t_fused, f"unfused_us={t_unf:.0f}"))
+
+    # blockwise attention vs full-matrix reference (memory win).
+    q = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)).astype(np.float32))
+    t_block = _time(
+        lambda q_: attention_blockwise(q_, q_, q_, causal=True, block=256), q
+    )
+    t_full = _time(lambda q_: attention_ref(q_, q_, q_, causal=True), q)
+    rows.append(("attention_blockwise", t_block, f"full_ref_us={t_full:.0f}"))
+
+    # elevator shift primitive.
+    big = jnp.asarray(rng.standard_normal(1 << 20).astype(np.float32))
+    t_shift = _time(lambda v: from_thread_or_const(v, 5, 0.0, window=4096), big)
+    rows.append(("from_thread_or_const_1M", t_shift, "window=4096"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render the §Roofline table from experiments/dryrun/*.json."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _norm(s: str) -> str:
+    return s.replace("-", "_").replace(".", "_")
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    # Dedupe dashed/underscored arch spellings: keep the newest artifact.
+    by_key: dict[tuple, tuple[float, dict]] = {}
+    for f in DRYRUN_DIR.glob(f"*__{mesh}.json"):
+        d = json.loads(f.read_text())
+        key = (_norm(d["arch"]), d["shape"])
+        mtime = f.stat().st_mtime
+        if key not in by_key or mtime > by_key[key][0]:
+            by_key[key] = (mtime, d)
+    return [d for _, (_, d) in sorted(by_key.items())]
+
+
+def fmt_row(c: dict) -> str:
+    if c.get("skipped"):
+        return (f"| {c['arch']} | {c['shape']} | — | — | — | — | — | skip | "
+                f"{c['skipped'][:42]}… |")
+    if not c.get("ok"):
+        return f"| {c['arch']} | {c['shape']} | FAIL | | | | | | {c.get('error','')[:40]} |"
+    r = c.get("roofline")
+    if not r:
+        return f"| {c['arch']} | {c['shape']} | compiled (no roofline) | | | | | | |"
+    peak = c["memory"]["peak_estimate_bytes"] / 2**30
+    ratio = c.get("useful_flops_ratio")
+    return (
+        f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | {r['memory_s']:.3f} "
+        f"| {r['memory_analytic_s']:.4f} | {r['collective_s']:.4f} "
+        f"| {r.get('dominant_fused', r['dominant'])} | {peak:.1f} "
+        f"| {ratio:.2f} |" if ratio else
+        f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | {r['memory_s']:.3f} "
+        f"| {r['memory_analytic_s']:.4f} | {r['collective_s']:.4f} "
+        f"| {r.get('dominant_fused', r['dominant'])} | {peak:.1f} | n/a |"
+    )
+
+
+def main():
+    print("| arch | shape | compute_s | mem_hlo_s | mem_fused_s | coll_s | dominant | peak_GiB | useful_flops |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in load_cells("16x16"):
+        print(fmt_row(c))
+    print()
+    print("multi-pod (2x16x16) compile status:")
+    for c in load_cells("2x16x16"):
+        status = "skip" if c.get("skipped") else ("ok" if c["ok"] else "FAIL")
+        peak = c.get("memory", {}).get("peak_estimate_bytes")
+        peak_s = f" peak={peak/2**30:.1f}GiB" if peak else ""
+        print(f"  {c['arch']:24s} {c['shape']:12s} {status}{peak_s}")
+
+
+if __name__ == "__main__":
+    main()

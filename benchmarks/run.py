@@ -1,0 +1,36 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  rodinia      -> paper Fig. 11 (speedup) + Fig. 12 (energy) analogs
+  delta_cdf    -> paper Fig. 5 (ΔTID CDF)
+  kernel_bench -> per-kernel microbenchmarks
+  roofline     -> §Roofline table from the dry-run artifacts (if present)
+
+Prints ``name,us_per_call,derived`` CSV blocks.
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import delta_cdf, kernel_bench, rodinia
+
+    print("== rodinia (paper Fig. 11/12 analog) ==")
+    rodinia.main()
+    print()
+    print("== delta CDF (paper Fig. 5 analog) ==")
+    delta_cdf.main()
+    print()
+    print("== kernel microbenchmarks ==")
+    kernel_bench.main()
+    print()
+    print("== roofline table (from dry-run artifacts) ==")
+    try:
+        from benchmarks import roofline_table
+
+        roofline_table.main()
+    except Exception as e:  # noqa: BLE001
+        print(f"(roofline table unavailable: {e})")
+
+
+if __name__ == "__main__":
+    main()

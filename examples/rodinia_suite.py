@@ -1,0 +1,14 @@
+"""Paper benchmark suite (Table 3) — shared-memory vs direct forwarding.
+
+Run:  PYTHONPATH=src:. python examples/rodinia_suite.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import rodinia
+
+if __name__ == "__main__":
+    rodinia.main()

@@ -1,0 +1,26 @@
+"""Gemma3-1B [hf:google/gemma-3-1b-pt; unverified].
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144 — 5 local : 1 global
+interleave, local window 1024, 128k+ context.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=6912,
+    vocab_size=262144,
+    head_dim=256,
+    rope_theta=1_000_000.0,
+    pattern=("local", "local", "local", "local", "local", "global"),
+    attn_window=1024,
+    mlp_type="geglu",
+    tie_embeddings=True,
+    sub_quadratic=True,   # local-dominant; global layers decode O(S)
+    microbatch=2,
+)

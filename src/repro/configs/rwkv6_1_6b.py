@@ -1,0 +1,26 @@
+"""RWKV6-1.6B "Finch" [arXiv:2404.05892; unverified].
+
+24L d_model=2048 (attention-free) d_ff=7168 vocab=65536 — data-dependent
+decay WKV recurrence + token shift: the paper-technique showcase (both are
+fromThreadOrConst Δ=1 patterns).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,        # internal WKV heads (d=2048 / head_dim=64)
+    num_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    head_dim=64,
+    pattern=("rwkv",),
+    mlp_type="swiglu",
+    rwkv=True,
+    tie_embeddings=False,
+    sub_quadratic=True,
+    microbatch=2,
+)

@@ -1,0 +1,61 @@
+"""dMT-CGRA inter-thread communication — the paper's contribution in JAX.
+
+Public API:
+  from_thread_or_const / from_thread_or_const_nd / tag_value  (elevator node)
+  from_thread_or_mem                                          (eLDST)
+  plan_cascade / CascadePlan                                  (§4.3 cascades)
+  linear_scan / chunked_linear_scan / device_linear_scan_carry
+  device_shift / halo_exchange / ring_pass / seq_carry_scan   (ICI elevators)
+  pipeline_apply                                              (PP forwarding)
+  stage_through_memory / barrier / SharedBuffer               (vN baseline)
+"""
+
+from repro.core.elevator import (
+    TOKEN_BUFFER_SIZE,
+    CascadePlan,
+    cascaded_from_thread_or_const,
+    from_thread_or_const,
+    from_thread_or_const_nd,
+    plan_cascade,
+    tag_value,
+)
+from repro.core.eldst import ForwardStats, forward_stats, from_thread_or_mem
+from repro.core.chunk_scan import (
+    chunked_linear_scan,
+    device_linear_scan_carry,
+    linear_scan,
+)
+from repro.core.device_comm import (
+    device_shift,
+    halo_exchange,
+    ring_pass,
+    seq_carry_scan,
+)
+from repro.core.pipeline import pipeline_apply
+from repro.core.scratchpad import SharedBuffer, barrier, stage_through_memory
+from repro.core import cost_model
+
+__all__ = [
+    "TOKEN_BUFFER_SIZE",
+    "CascadePlan",
+    "cascaded_from_thread_or_const",
+    "from_thread_or_const",
+    "from_thread_or_const_nd",
+    "plan_cascade",
+    "tag_value",
+    "ForwardStats",
+    "forward_stats",
+    "from_thread_or_mem",
+    "chunked_linear_scan",
+    "device_linear_scan_carry",
+    "linear_scan",
+    "device_shift",
+    "halo_exchange",
+    "ring_pass",
+    "seq_carry_scan",
+    "pipeline_apply",
+    "SharedBuffer",
+    "barrier",
+    "stage_through_memory",
+    "cost_model",
+]

@@ -1,0 +1,133 @@
+"""Windowed linear-recurrence scans built from elevator carries.
+
+The paper's prefix-sum example (Fig. 6) is the degenerate case of
+
+    h[t] = a[t] * h[t-1] + b[t]          (a ≡ 1, b = loaded value)
+
+with the inter-thread edge ``fromThreadOrConst<sum, Δ=1, C=0>``.  This module
+generalizes the pattern into the workhorse behind the SSM/hybrid
+architectures (RG-LRU, RWKV6 decay):
+
+* :func:`linear_scan` — reference associative scan (log-depth, in-core).
+* :func:`chunked_linear_scan` — two-level scheme: dense within-chunk scans +
+  an across-chunk carry chain.  The carry chain is exactly a cascade of
+  elevator nodes with Δ=1 over chunk space; the Pallas kernel
+  (:mod:`repro.kernels.elevator_scan`) keeps the carry in VMEM scratch.
+* :func:`device_linear_scan_carry` — the same composition across a *mesh*
+  axis: each shard contributes its segment summary ``(A, B)``; a log-depth
+  Hillis–Steele chain of ``ppermute`` shifts (device-space elevator nodes)
+  delivers the entering carry to every shard.  Point-to-point, no gather.
+
+Segment composition law (associative):
+    (a1, b1) ∘then∘ (a2, b2) = (a2·a1, a2·b1 + b2)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device_comm
+
+__all__ = [
+    "linear_scan",
+    "chunked_linear_scan",
+    "device_linear_scan_carry",
+]
+
+
+def _compose(first, second):
+    """Compose two recurrence segments; ``first`` is applied first."""
+    a1, b1 = first
+    a2, b2 = second
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan(a: jax.Array, b: jax.Array, *, axis: int = 0, h0=None) -> jax.Array:
+    """h[t] = a[t]*h[t-1] + b[t] with h[-1] = h0 (default 0). Log-depth."""
+    if h0 is not None:
+        # Fold h0 into the first step: h[0] = a[0]*h0 + b[0].
+        h0 = jnp.asarray(h0, b.dtype)
+        idx = [slice(None)] * b.ndim
+        idx[axis] = slice(0, 1)
+        first = tuple(idx)
+        b = b.at[first].set(a[first] * h0 + b[first]) if hasattr(b, "at") else b
+    _, h = jax.lax.associative_scan(lambda x, y: _compose(x, y), (a, b), axis=axis)
+    return h
+
+
+def chunked_linear_scan(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    chunk: int,
+    axis: int = 0,
+    h0=None,
+) -> jax.Array:
+    """Two-level scan: intra-chunk associative scans + inter-chunk carries.
+
+    Mirrors the dMT-CGRA structure: the within-chunk scan is the dataflow
+    graph body; the across-chunk carry is the elevator edge (Δ=1 over chunk
+    index, C = h0).  Functionally identical to :func:`linear_scan` — the
+    tests assert allclose — but exposes the chunked schedule the Pallas
+    kernel implements with a VMEM carry.
+    """
+    a = jnp.moveaxis(a, axis, 0)
+    b = jnp.moveaxis(b, axis, 0)
+    t = a.shape[0]
+    if t % chunk:
+        raise ValueError(f"sequence length {t} not divisible by chunk {chunk}")
+    n_chunks = t // chunk
+    rest = a.shape[1:]
+    ac = a.reshape((n_chunks, chunk) + rest)
+    bc = b.reshape((n_chunks, chunk) + rest)
+
+    # Intra-chunk inclusive scans (dense, parallel over chunks).
+    acum, bcum = jax.lax.associative_scan(_compose, (ac, bc), axis=1)
+
+    # Chunk summaries = last element of each inclusive scan.
+    a_sum = acum[:, -1]
+    b_sum = bcum[:, -1]
+
+    # Across-chunk carry chain: exclusive scan over chunk summaries.  This is
+    # the elevator cascade: carry[k] enters chunk k.
+    def step(carry, summary):
+        a_s, b_s = summary
+        new_carry = a_s * carry + b_s
+        return new_carry, carry
+
+    h_init = jnp.zeros(rest, b.dtype) if h0 is None else jnp.broadcast_to(
+        jnp.asarray(h0, b.dtype), rest
+    )
+    _, carries = jax.lax.scan(step, h_init, (a_sum, b_sum))
+
+    # Inject the entering carry into every position of the chunk.
+    h = acum * carries[:, None] + bcum
+    h = h.reshape((t,) + rest)
+    return jnp.moveaxis(h, 0, axis)
+
+
+def device_linear_scan_carry(a_seg: jax.Array, b_seg: jax.Array, axis_name: str):
+    """Entering carry per shard for a sequence sharded over ``axis_name``.
+
+    ``a_seg``/``b_seg`` are the local segment summaries (product of decays,
+    accumulated input).  Returns ``(carry_a, carry_b)`` such that the state
+    entering shard ``i`` is ``carry_a * h0 + carry_b`` — i.e. the composition
+    of all predecessor segments.  log2(n) ppermute hops (Hillis–Steele),
+    each a device-space elevator shift with the identity segment (1, 0) as
+    the boundary constant.
+    """
+    n = jax.lax.axis_size(axis_name)
+    acc_a, acc_b = a_seg, b_seg
+    d = 1
+    while d < n:
+        shifted_a = device_comm.device_shift(acc_a, axis_name, delta=d, fill=1.0)
+        shifted_b = device_comm.device_shift(acc_b, axis_name, delta=d, fill=0.0)
+        # Predecessor block applied first, current block second.
+        acc_a, acc_b = _compose((shifted_a, shifted_b), (acc_a, acc_b))
+        d *= 2
+    # acc now holds the inclusive composition; the entering carry is the
+    # predecessor's inclusive value — one more elevator shift.
+    carry_a = device_comm.device_shift(acc_a, axis_name, delta=1, fill=1.0)
+    carry_b = device_comm.device_shift(acc_b, axis_name, delta=1, fill=0.0)
+    return carry_a, carry_b

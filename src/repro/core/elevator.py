@@ -1,0 +1,215 @@
+"""Elevator node semantics (paper §3, §4.1, §4.3).
+
+The elevator node is the hardware primitive behind ``fromThreadOrConst``:
+for every thread ``TID`` it delivers the token produced by thread
+``TID - delta``; when the producer falls outside the thread block or outside
+the current *transmission window*, the preconfigured constant ``C`` is
+delivered instead (paper Fig. 4).
+
+On TPU the "thread axis" is an array axis.  A positive ``delta`` therefore
+becomes a shift *toward higher indices* with ``const`` injected at the window
+boundary.  The in-core version below is pure ``jnp`` (it lowers to VREG lane
+rotates / VMEM block shifts — never an HBM round trip); the cross-device
+version lives in :mod:`repro.core.device_comm`, and the block-carry (token
+buffer) version inside the Pallas kernels in :mod:`repro.kernels`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "from_thread_or_const",
+    "from_thread_or_const_nd",
+    "tag_value",
+    "CascadePlan",
+    "plan_cascade",
+    "TOKEN_BUFFER_SIZE",
+]
+
+# Paper Table 2 / §4.3: each elevator node carries a 16-entry token buffer.
+TOKEN_BUFFER_SIZE = 16
+
+
+def tag_value(x: jax.Array, name: str | None = None) -> jax.Array:
+    """``tagValue<var>()`` — mark the exported version of a variable.
+
+    JAX traces SSA values, so versions are implicit; the call is kept for
+    API fidelity with the paper and as a documentation anchor.  It is the
+    identity on the value (optionally named for debugging/HLO inspection).
+    """
+    if name is not None:
+        # Named identity so the tagged value is findable in lowered HLO.
+        return jax.named_call(lambda v: v, name=f"tag_value_{name}")(x)
+    return x
+
+
+def _window_ids(n: int, window: int | None) -> jax.Array:
+    if window is None:
+        return jnp.zeros((n,), dtype=jnp.int32)
+    return (jnp.arange(n, dtype=jnp.int32) // window).astype(jnp.int32)
+
+
+def from_thread_or_const(
+    x: jax.Array,
+    delta: int,
+    const,
+    *,
+    window: int | None = None,
+    axis: int = 0,
+) -> jax.Array:
+    """``fromThreadOrConst<var, delta, const[, window]>()`` over one axis.
+
+    out[tid] = x[tid - delta]  if ``tid - delta`` lies in the same
+    transmission window (and inside the thread block), else ``const``.
+
+    ``delta`` may be negative (receive from a *higher* TID, e.g. the
+    ``tid + 1`` operand of the paper's convolution example).
+    ``window`` partitions the thread axis into consecutive groups of that
+    size; communication never crosses a group boundary (paper §3.2).
+    """
+    if delta == 0:
+        return x
+    n = x.shape[axis]
+    x = jnp.moveaxis(x, axis, 0)
+
+    # Shift by delta along the (leading) thread axis.
+    shifted = jnp.roll(x, delta, axis=0)
+
+    tid = jnp.arange(n, dtype=jnp.int32)
+    src = tid - delta
+    valid = (src >= 0) & (src < n)
+    if window is not None:
+        valid &= (tid // window) == (src // window)
+
+    const_arr = jnp.asarray(const, dtype=x.dtype)
+    valid = valid.reshape((n,) + (1,) * (x.ndim - 1))
+    out = jnp.where(valid, shifted, const_arr)
+    return jnp.moveaxis(out, 0, axis)
+
+
+def from_thread_or_const_nd(
+    x: jax.Array,
+    deltas: Sequence[int],
+    const,
+    *,
+    axes: Sequence[int] | None = None,
+    windows: Sequence[int | None] | None = None,
+) -> jax.Array:
+    """Multi-dimensional ``fromThreadOrConst`` (2D/3D TID spaces, Table 1).
+
+    ``deltas[i]`` applies along ``axes[i]``.  A token is valid only if the
+    source coordinate is in-bounds (and in-window) along *every* axis,
+    matching the paper's multi-dimensional ΔTID encoding.
+    """
+    if axes is None:
+        axes = tuple(range(len(deltas)))
+    if windows is None:
+        windows = (None,) * len(deltas)
+    if len(axes) != len(deltas) or len(windows) != len(deltas):
+        raise ValueError("deltas/axes/windows length mismatch")
+
+    const_arr = jnp.asarray(const, dtype=x.dtype)
+    shifted = x
+    valid = jnp.ones((), dtype=bool)
+    # Broadcastable validity over all thread axes.
+    valid_shape = [1] * x.ndim
+    valid = jnp.ones(tuple(valid_shape), dtype=bool)
+    for delta, axis, window in zip(deltas, axes, windows):
+        if delta == 0:
+            continue
+        n = x.shape[axis]
+        shifted = jnp.roll(shifted, delta, axis=axis)
+        tid = jnp.arange(n, dtype=jnp.int32)
+        src = tid - delta
+        ok = (src >= 0) & (src < n)
+        if window is not None:
+            ok &= (tid // window) == (src // window)
+        shape = [1] * x.ndim
+        shape[axis] = n
+        valid = valid & ok.reshape(shape)
+    return jnp.where(valid, shifted, const_arr)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadePlan:
+    """Compile-time cascade of elevator nodes for a large ΔTID (paper §4.3).
+
+    ``node_deltas`` chains token buffers: e.g. Δ=18 with a 16-entry buffer
+    maps to two cascaded nodes with Δ=16 and Δ=2 (paper Fig. 10a).  When the
+    chain would exceed ``max_nodes``, the value spills to memory (the paper's
+    Live Value Cache fallback; HBM on TPU).
+    """
+
+    delta: int
+    node_deltas: tuple[int, ...]
+    spilled: bool
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_deltas)
+
+
+def plan_cascade(
+    delta: int,
+    *,
+    token_buffer: int = TOKEN_BUFFER_SIZE,
+    max_nodes: int = 16,
+) -> CascadePlan:
+    """Plan the elevator cascade for ``delta`` (paper §4.3).
+
+    num_nodes = ceil(|Δ| / token_buffer); spill if it exceeds ``max_nodes``.
+    """
+    mag = abs(delta)
+    if mag == 0:
+        return CascadePlan(delta, (), False)
+    sign = 1 if delta > 0 else -1
+    n_full, rem = divmod(mag, token_buffer)
+    deltas = [token_buffer * sign] * n_full + ([rem * sign] if rem else [])
+    if len(deltas) > max_nodes:
+        return CascadePlan(delta, (), True)
+    return CascadePlan(delta, tuple(deltas), False)
+
+
+def cascaded_from_thread_or_const(
+    x: jax.Array,
+    delta: int,
+    const,
+    *,
+    window: int | None = None,
+    axis: int = 0,
+    token_buffer: int = TOKEN_BUFFER_SIZE,
+    max_nodes: int = 16,
+) -> tuple[jax.Array, CascadePlan]:
+    """Apply ``from_thread_or_const`` through an explicit cascade.
+
+    Functionally identical to a single shift by ``delta`` (the tests assert
+    this); structurally it mirrors the hardware chaining so the cost model
+    can count nodes/spills.  A spilled plan falls back to the direct shift —
+    the semantic equivalent of staging through the Live Value Cache.
+    """
+    plan = plan_cascade(delta, token_buffer=token_buffer, max_nodes=max_nodes)
+    if plan.spilled or not plan.node_deltas:
+        return from_thread_or_const(x, delta, const, window=window, axis=axis), plan
+    # Chain the nodes.  Validity must be evaluated against the *total* delta
+    # (a token dying at any hop dies overall), so chain shifts with a
+    # sentinel-free approach: shift values hop by hop, then apply the total
+    # boundary/window mask once (equivalent because shifts compose).
+    n = x.shape[axis]
+    shifted = x
+    for d in plan.node_deltas:
+        shifted = jnp.roll(shifted, d, axis=axis)
+    tid = jnp.arange(n, dtype=jnp.int32)
+    src = tid - delta
+    valid = (src >= 0) & (src < n)
+    if window is not None:
+        valid &= (tid // window) == (src // window)
+    shape = [1] * x.ndim
+    shape[axis] = n
+    out = jnp.where(valid.reshape(shape), shifted, jnp.asarray(const, x.dtype))
+    return out, plan

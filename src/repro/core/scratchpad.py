@@ -1,0 +1,80 @@
+"""Von-Neumann baseline: shared-memory staging + barrier (paper Fig. 1b/2a).
+
+The GPGPU pattern the paper argues against: producers write intermediate
+values to a shared scratchpad, a workgroup barrier orders the phases, and
+consumers read the staged values back.  We reproduce it faithfully so the
+benchmarks can compare both paths on identical math:
+
+* the scratchpad is an explicitly materialized buffer (on TPU this is an
+  HBM round-trip — XLA may not fuse through ``optimization_barrier``);
+* the barrier is ``jax.lax.optimization_barrier``, which orders the produce
+  and consume phases exactly like ``__syncthreads`` orders warps.
+
+The byte counts reported by :mod:`repro.core.cost_model` charge the staged
+buffer twice (write + read), matching the paper's energy accounting.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["stage_through_memory", "barrier", "SharedBuffer"]
+
+
+def barrier(*arrays):
+    """Workgroup barrier: forces every staged value to materialize before any
+    consumer reads it (the ``__syncthreads`` analog)."""
+    out = jax.lax.optimization_barrier(tuple(arrays))
+    return out[0] if len(out) == 1 else out
+
+
+def stage_through_memory(x: jax.Array) -> jax.Array:
+    """Write ``x`` to the scratchpad and read it back after a barrier."""
+    return barrier(x)
+
+
+class SharedBuffer:
+    """A CUDA ``__shared__`` array emulation with phase tracking.
+
+    Usage mirrors Fig. 1b: ``buf.write(values)`` then ``buf.sync()`` then
+    ``buf.read(idx)``.  Reads before a sync raise, mirroring the data race
+    the barrier exists to prevent.  Byte traffic is tracked for the cost
+    model.
+    """
+
+    def __init__(self, values_shape, dtype=jnp.float32):
+        self._shape = tuple(values_shape)
+        self._dtype = dtype
+        self._buf = None
+        self._synced = False
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def write(self, values: jax.Array):
+        if values.shape != self._shape:
+            raise ValueError(f"shape {values.shape} != buffer {self._shape}")
+        self._buf = values.astype(self._dtype)
+        self._synced = False
+        self.bytes_written += values.size * values.dtype.itemsize
+        return self
+
+    def sync(self):
+        if self._buf is None:
+            raise RuntimeError("sync before any write")
+        self._buf = barrier(self._buf)
+        self._synced = True
+        return self
+
+    def read(self, idx=None) -> jax.Array:
+        if not self._synced:
+            raise RuntimeError("shared-memory read before barrier (data race)")
+        out = self._buf if idx is None else self._buf[idx]
+        self.bytes_read += (
+            out.size * out.dtype.itemsize
+            if hasattr(out, "size")
+            else self._buf.dtype.itemsize
+        )
+        return out

@@ -1,0 +1,73 @@
+"""Deterministic, stateless, resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) via counter-based hashing
+(threefry) — no iterator state to checkpoint, so restart-after-failure
+resumes exactly by replaying the step index, and elastic re-sharding is
+trivial (any host can materialize any slice).
+
+The synthetic stream is Zipf-distributed token ids with a repeated-ngram
+structure so the LM loss actually decreases during the example runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_exponent: float = 1.1
+
+
+def _zipf_from_uniform(u: jax.Array, vocab: int, s: float) -> jax.Array:
+    """Inverse-CDF Zipf sampling (approximate, vectorized)."""
+    # P(k) ~ k^-s; approximate inverse CDF with the continuous formula.
+    k = jnp.power(1.0 - u, -1.0 / (s - 1.0))
+    k = jnp.clip(k, 1.0, float(vocab))
+    return (k - 1.0).astype(jnp.int32)
+
+
+def make_batch(cfg: DataConfig, step: int | jax.Array):
+    """Returns {"tokens": (B, S) int32, "labels": (B, S) int32}.
+
+    Labels are next-token targets (shift-by-one; the elevator Δ=-1 edge).
+    """
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    b, s = cfg.global_batch, cfg.seq_len
+    u = jax.random.uniform(key, (b, s))
+    tokens = _zipf_from_uniform(u, cfg.vocab_size, cfg.zipf_exponent)
+    # Inject learnable structure: every 8th position repeats the token from
+    # 4 positions earlier (a deterministic n-gram pattern).
+    pos = jnp.arange(s)
+    shifted = jnp.roll(tokens, 4, axis=1)
+    tokens = jnp.where((pos % 8 == 0) & (pos >= 4), shifted, tokens)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def batch_specs(cfg: DataConfig):
+    """ShapeDtypeStructs for one batch (dry-run inputs)."""
+    shape = (cfg.global_batch, cfg.seq_len)
+    return {
+        "tokens": jax.ShapeDtypeStruct(shape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(shape, jnp.int32),
+    }
+
+
+def host_batch_numpy(cfg: DataConfig, step: int) -> dict:
+    """Host-side numpy variant (no device allocation), for loaders."""
+    rng = np.random.default_rng((cfg.seed << 32) ^ step)
+    b, s = cfg.global_batch, cfg.seq_len
+    u = rng.random((b, s))
+    k = np.power(1.0 - u, -1.0 / (cfg.zipf_exponent - 1.0))
+    tokens = (np.clip(k, 1.0, float(cfg.vocab_size)) - 1.0).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,147 @@
+"""Fault tolerance: step watchdog, restart driver, straggler detection.
+
+At thousand-node scale the failure model is: (a) hard node loss — the job
+must restart from the last checkpoint on a (possibly smaller) mesh;
+(b) hangs — a collective never completes because one participant stalled;
+(c) stragglers — a slow node stretches every synchronous step.
+
+This module implements the *driver-side* machinery, which is identical at
+container scale and cluster scale:
+
+  * :class:`StepWatchdog` — wall-clock deadline per step; a stuck step
+    raises :class:`StepTimeout` in the driver, which triggers
+    restart-from-checkpoint (the standard TPU preemption pattern).
+  * :func:`run_with_restarts` — the outer resilience loop: run -> on
+    failure restore latest checkpoint -> resume at the checkpointed step
+    (the stateless data pipeline re-keys itself by step, so no data is
+    skipped or repeated).
+  * :class:`StragglerDetector` — EWMA of step times; flags steps slower
+    than ``threshold×`` the moving median so the scheduler can evict/
+    replace the slow host.  Mitigation at the collective level comes from
+    gradient compression (fewer bytes on the slow link) and the point-to-
+    point elevator collectives (a straggler delays only its neighbors'
+    edges, not a global barrier — the paper's barrier-free argument at
+    cluster scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class NodeFailure(RuntimeError):
+    """Raised by failure-injection hooks in tests / chaos drills."""
+
+
+class StepWatchdog:
+    """Deadline enforcement for (potentially hanging) steps."""
+
+    def __init__(self, timeout_s: float):
+        self.timeout_s = timeout_s
+
+    def run(self, fn: Callable[[], Any]) -> Any:
+        result: list[Any] = []
+        error: list[BaseException] = []
+
+        def target():
+            try:
+                result.append(fn())
+            except BaseException as e:  # noqa: BLE001 — propagated below
+                error.append(e)
+
+        t = threading.Thread(target=target, daemon=True)
+        t.start()
+        t.join(self.timeout_s)
+        if t.is_alive():
+            raise StepTimeout(f"step exceeded {self.timeout_s}s (hung collective?)")
+        if error:
+            raise error[0]
+        return result[0]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    threshold: float = 2.0
+    alpha: float = 0.1
+    _ewma: float | None = None
+    flagged: int = 0
+
+    def observe(self, step_time_s: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self._ewma is None:
+            self._ewma = step_time_s
+            return False
+        is_straggler = step_time_s > self.threshold * self._ewma
+        # Slow samples update the EWMA less (don't let stragglers poison it).
+        a = self.alpha * (0.25 if is_straggler else 1.0)
+        self._ewma = (1 - a) * self._ewma + a * step_time_s
+        if is_straggler:
+            self.flagged += 1
+        return is_straggler
+
+    @property
+    def baseline_s(self) -> float | None:
+        return self._ewma
+
+
+def run_with_restarts(
+    *,
+    make_state: Callable[[], Any],
+    step_fn: Callable[[Any, int], Any],
+    save_fn: Callable[[Any, int], None],
+    restore_fn: Callable[[], tuple[Any, int] | None],
+    num_steps: int,
+    checkpoint_every: int = 50,
+    max_restarts: int = 3,
+    watchdog_timeout_s: float = 3600.0,
+    on_event: Callable[[str], None] | None = None,
+) -> tuple[Any, dict]:
+    """The resilience loop: survive StepTimeout / NodeFailure via restore.
+
+    Returns (final_state, stats).  ``step_fn(state, step) -> state``.
+    """
+    log = on_event or (lambda msg: None)
+    watchdog = StepWatchdog(watchdog_timeout_s)
+    straggler = StragglerDetector()
+    restarts = 0
+    stats = {"restarts": 0, "stragglers": 0, "steps_run": 0}
+
+    restored = restore_fn()
+    if restored is not None:
+        state, start = restored
+        log(f"restored checkpoint at step {start}")
+    else:
+        state, start = make_state(), 0
+
+    step = start
+    while step < num_steps:
+        try:
+            t0 = time.monotonic()
+            state = watchdog.run(lambda: step_fn(state, step))
+            dt = time.monotonic() - t0
+            stats["steps_run"] += 1
+            if straggler.observe(dt):
+                stats["stragglers"] += 1
+                log(f"straggler at step {step}: {dt:.3f}s vs ~{straggler.baseline_s:.3f}s")
+            step += 1
+            if step % checkpoint_every == 0 or step == num_steps:
+                save_fn(state, step)
+        except (StepTimeout, NodeFailure) as e:
+            restarts += 1
+            stats["restarts"] = restarts
+            log(f"failure at step {step}: {e}; restart {restarts}/{max_restarts}")
+            if restarts > max_restarts:
+                raise
+            restored = restore_fn()
+            if restored is None:
+                state, step = make_state(), 0
+            else:
+                state, step = restored
+    return state, stats

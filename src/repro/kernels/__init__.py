@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper with backend dispatch) and ref.py (pure-jnp oracle used by tests).
+"""
+
+from repro.kernels.elevator_scan.ops import elevator_scan
+from repro.kernels.local_attention.ops import flash_attention
+from repro.kernels.matmul_fwd.ops import matmul_fwd
+from repro.kernels.stencil2d.ops import stencil2d
+from repro.kernels.token_shift.ops import token_shift
+
+__all__ = [
+    "elevator_scan",
+    "flash_attention",
+    "matmul_fwd",
+    "stencil2d",
+    "token_shift",
+]

@@ -1,0 +1,59 @@
+"""Public op: decayed sequence scan with automatic backend dispatch.
+
+On TPU this runs the Pallas kernel; on CPU (this container) the kernel runs
+in interpret mode for validation, while the jitted associative-scan reference
+is used for speed-sensitive callers (models) via ``use_kernel=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elevator_scan.kernel import elevator_scan_pallas
+from repro.kernels.elevator_scan.ref import elevator_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# NOTE: intentionally un-jitted — called under the model's outer jit; a
+# nested jit would cache across the scan_unroll() lowering flag.
+def elevator_scan(
+    a: jax.Array,
+    x: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """h[b,t,d] = a[b,t,d] * h[b,t-1,d] + x[b,t,d].
+
+    ``use_kernel=None`` auto-selects: Pallas on TPU, log-depth
+    associative scan elsewhere (identical math, validated against each other
+    in tests/test_kernel_elevator_scan.py).
+    """
+    kernel = _on_tpu() if use_kernel is None else use_kernel
+    if kernel:
+        interpret = not _on_tpu()
+        t = x.shape[1]
+        c = min(chunk, t)
+        while t % c:
+            c //= 2
+        return elevator_scan_pallas(a, x, h0, chunk=c, interpret=interpret)
+
+    # Log-depth path (jnp): chunk-free associative scan in float32.
+    a32, x32 = a.astype(jnp.float32), x.astype(jnp.float32)
+    if h0 is not None:
+        x32 = x32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def compose(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(compose, (a32, x32), axis=1)
+    return h.astype(x.dtype)

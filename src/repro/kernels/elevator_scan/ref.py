@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the elevator scan kernel.
+
+h[b, t, d] = a[b, t, d] * h[b, t-1, d] + x[b, t, d],   h[b, -1, d] = h0[b, d]
+
+This is the paper's prefix-sum dataflow (Fig. 6) generalized with a
+data-dependent decay ``a`` — the recurrence underlying RG-LRU and the
+diagonal part of RWKV6.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def elevator_scan_ref(
+    a: jax.Array, x: jax.Array, h0: jax.Array | None = None
+) -> jax.Array:
+    """O(T) sequential reference (float32 accumulation)."""
+    b, t, d = x.shape
+    a32 = a.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    init = (
+        jnp.zeros((b, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def step(h, inputs):
+        at, xt = inputs
+        h = at * h + xt
+        return h, h
+
+    _, hs = jax.lax.scan(step, init, (a32.swapaxes(0, 1), x32.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,211 @@
+"""Pallas TPU kernel: flash attention with sliding-window K/V forwarding.
+
+The eLDST pattern (paper §4.2) at VMEM granularity: each K/V block is pulled
+from HBM *once* per query block that needs it, held in VMEM, and consumed by
+the MXU — the online-softmax accumulators (m, l, acc) are the token buffers
+that let query tiles consume key tiles as a producer/consumer stream instead
+of materializing the (T×T) score matrix in memory (the "scratchpad" of the
+von-Neumann formulation).
+
+For *local* attention (window W) the kernel visits only ceil(W/Bk)+1 key
+blocks per query block — the transmission window of the elevator chain — so
+compute and traffic are O(T·W) instead of O(T²).
+
+Grid: (B·H, n_q_blocks, n_kv_steps), kv innermost.  GQA is handled by the
+K/V index maps (kv head = q head // group).  Causal/full/windowed variants
+share one body; masking is positional.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    n_kv_steps: int,
+    t_real: int,
+    s_real: int,
+    t_pad: int,
+    s_pad: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)      # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)      # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)      # (block_k, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                              # (block_q, block_k)
+
+    # Global positions.  The kv block index is recomputed from (qi, kj) with
+    # the same formula as the index map (pre-clamp), then masked.
+    kv_block = _kv_block_index(
+        qi, kj, s_real - t_real, causal, window, block_q, block_k
+    )
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kv_block * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    # Decode alignment: query i sits at absolute position s_real - t_real + i.
+    offset = s_real - t_real
+    mask = (k_pos < s_real) & (q_pos < t_real)
+    if causal:
+        mask &= k_pos <= (q_pos + offset)
+        if window is not None:
+            mask &= k_pos > (q_pos + offset - window)
+    elif window is not None:
+        mask &= jnp.abs(k_pos - q_pos) < window
+    # Out-of-range (clamped) kv blocks contribute nothing.
+    valid_block = (kv_block >= 0) & (kv_block * block_k < s_pad)
+    mask &= valid_block
+
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                    # (block_q, 128) replicated
+    m_cur = jnp.max(s, axis=1, keepdims=True)          # (block_q, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])      # (block_q, 1)
+    p = jnp.exp(s - m_new[:, :1])                      # (block_q, block_k)
+    p = jnp.where(mask, p, 0.0)
+
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == n_kv_steps - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        out = acc_ref[...] / safe_l
+        out_ref[0, :, :] = jnp.where(l > 0.0, out, 0.0).astype(out_ref.dtype)
+
+
+def _kv_block_index(qi, kj, offset, causal, window, block_q, block_k):
+    """KV block visited at step kj for query block qi (pre-clamp, may be <0).
+
+    Windowed: steps sweep backwards from the diagonal block of the *last*
+    query row in the block (absolute key position qi·Bq + Bq - 1 + offset).
+    """
+    if causal and window is not None:
+        top = (qi * block_q + block_q - 1 + offset) // block_k
+        return top - (pl.num_programs(2) - 1 - kj)
+    # Full/causal-full: sweep all blocks from 0; causal masking trims.
+    return kj
+
+
+def _kv_index_map_factory(group, causal, window, block_q, block_k, n_kv_blocks, offset):
+    def index_map(bh, qi, kj):
+        kv_block = _kv_block_index(qi, kj, offset, causal, window, block_q, block_k)
+        kv_block = jnp.clip(kv_block, 0, n_kv_blocks - 1)
+        return (bh // group if group > 1 else bh, kv_block, 0)
+
+    return index_map
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention.  q: (B, Hq, T, D); k/v: (B, Hkv, S, D), Hkv | Hq."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    # Pad T and S to block multiples.
+    t_pad = -(-t // block_q) * block_q
+    s_pad = -(-s // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    # Flatten (B, H) into one grid axis.
+    qp = qp.reshape(b * hq, t_pad, d)
+    kp = kp.reshape(b * hkv, s_pad, d)
+    vp = vp.reshape(b * hkv, s_pad, d)
+
+    n_q_blocks = t_pad // block_q
+    n_kv_blocks = s_pad // block_k
+    offset = s - t
+    if causal and window is not None:
+        n_kv_steps = min(n_kv_blocks, (window + block_q) // block_k + 2)
+    else:
+        n_kv_steps = n_kv_blocks
+
+    kv_index_map = _kv_index_map_factory(
+        group, causal, window, block_q, block_k, n_kv_blocks, offset
+    )
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_steps=n_kv_steps,
+        t_real=t,
+        s_real=s,
+        t_pad=t_pad,
+        s_pad=s_pad,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q_blocks, n_kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index_map),
+            pl.BlockSpec((1, block_k, d), kv_index_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, t_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+
+    return out.reshape(b, hq, t_pad, d)[:, :, :t]

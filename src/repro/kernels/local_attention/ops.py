@@ -1,0 +1,50 @@
+"""Public op: flash attention (full / causal / sliding-window, GQA)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.local_attention.kernel import flash_attention_pallas
+from repro.kernels.local_attention.ref import attention_blockwise, attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# NOTE: intentionally un-jitted — called under the model's outer jit; a
+# nested jit would cache across the scan_unroll() lowering flag.
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Attention over (B, H, T, D) queries and (B, Hkv, S, D) keys/values.
+
+    Dispatch: Pallas kernel on TPU; on CPU, the blockwise (flash-structured,
+    O(T·block) memory) jnp path for long sequences — so dry-run lowering
+    reflects the kernel's memory/flop profile — and the exact masked-einsum
+    reference for short ones.  All three agree numerically (tests).
+    """
+    kernel = _on_tpu() if use_kernel is None else use_kernel
+    if kernel:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=not _on_tpu(),
+        )
+    if q.shape[2] > 1024 or k.shape[2] > 1024:
+        from repro.model.lowering import scan_unroll
+
+        # Under unrolled-cost lowering, bigger blocks keep the HLO compact.
+        block = 2048 if scan_unroll() is True else 512
+        return attention_blockwise(
+            q, k, v, causal=causal, window=window, scale=scale, block=block
+        )
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)

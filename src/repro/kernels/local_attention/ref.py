@@ -1,0 +1,161 @@
+"""Pure-jnp oracle for (windowed/causal/full) attention with GQA."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.model.lowering import scan_unroll
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D) with Hkv | Hq.  float32 math.
+
+    ``window``: token t attends to keys in (t-window, t] (sliding window).
+    """
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    s = k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+
+    logits = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        # Align the causal diagonal to the *end* of the key sequence
+        # (supports decode where t < s and query i sits at position s-t+i).
+        offset = s - t
+        mask &= k_pos <= (q_pos + offset)
+        if window is not None:
+            mask &= k_pos > (q_pos + offset - window)
+    elif window is not None:
+        mask &= jnp.abs(k_pos - q_pos) < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block: int = 512,
+) -> jax.Array:
+    """Flash-structured attention in pure jnp: O(T·block) live memory.
+
+    Same math as :func:`attention_ref` (tests assert allclose) but the
+    score matrix is never materialized — a ``lax.scan`` over query blocks
+    with an inner scan over key blocks carries online-softmax accumulators
+    (m, l, acc), mirroring the Pallas kernel's VMEM schedule.  This is the
+    lowering path used by the dry-run on CPU so compiled memory reflects
+    the TPU kernel's profile, not an O(T²) reference.
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale_ = scale if scale is not None else 1.0 / (d ** 0.5)
+    offset = s - t
+
+    bq = min(block, t)
+    bk = min(block, s)
+    tp = -(-t // bq) * bq
+    sp = -(-s // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, tp - t), (0, 0))).astype(jnp.float32)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sp - s), (0, 0))).astype(jnp.float32)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sp - s), (0, 0))).astype(jnp.float32)
+    n_q, n_k = tp // bq, sp // bk
+
+    kb = kp.reshape(b, hkv, n_k, bk, d)
+    vb = vp.reshape(b, hkv, n_k, bk, d)
+    qb = qp.reshape(b, hq, n_q, bq, d)
+
+    # Windowed-causal: each q block only visits the last `n_steps` kv blocks
+    # ending at its diagonal (the transmission window) — FLOPs scale with
+    # the window, not with T, matching the Pallas kernel's restricted grid.
+    banded = causal and window is not None
+    n_steps = min(n_k, (window + bq) // bk + 2) if banded else n_k
+
+    def q_step(_, qi):
+        q_blk = qb[:, :, qi] * scale_                       # (B,Hq,bq,D)
+        q_pos = qi * bq + jnp.arange(bq)
+        top = (qi * bq + bq - 1 + offset) // bk if banded else 0
+
+        def k_step(carry, j):
+            m, l, acc = carry
+            kj_raw = top - (n_steps - 1 - j) if banded else j
+            kj = jnp.clip(kj_raw, 0, n_k - 1)
+            k_blk = kb[:, :, kj]                            # (B,Hkv,bk,D)
+            v_blk = vb[:, :, kj]
+            k_pos = kj * bk + jnp.arange(bk)
+            sc = _grouped_scores(q_blk, k_blk, group)
+            mask = (k_pos[None, :] < s) & (q_pos[:, None] < t)
+            if banded:
+                mask &= (kj_raw >= 0) & (kj_raw == kj)
+            if causal:
+                mask &= k_pos[None, :] <= (q_pos[:, None] + offset)
+                if window is not None:
+                    mask &= k_pos[None, :] > (q_pos[:, None] + offset - window)
+            elif window is not None:
+                mask &= jnp.abs(k_pos[None, :] - q_pos[:, None]) < window
+            sc = jnp.where(mask, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = _grouped_pv(p, v_blk, group)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hq, bq), -1e30),
+            jnp.zeros((b, hq, bq)),
+            jnp.zeros((b, hq, bq, d)),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, init, jnp.arange(n_steps), unroll=scan_unroll()
+        )
+        out_blk = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out_blk
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(n_q), unroll=scan_unroll())
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, tp, d)[:, :, :t]
+    return out.astype(q.dtype)
+
+
+def _grouped_scores(q_blk, k_blk, group):
+    b, hq, bq, d = q_blk.shape
+    hkv = hq // group
+    qg = q_blk.reshape(b, hkv, group, bq, d)
+    sc = jnp.einsum("bhgqd,bhsd->bhgqs", qg, k_blk)
+    return sc.reshape(b, hq, bq, -1)
+
+
+def _grouped_pv(p, v_blk, group):
+    b, hq, bq, bk = p.shape
+    hkv = hq // group
+    pg = p.reshape(b, hkv, group, bq, bk)
+    pv = jnp.einsum("bhgqs,bhsd->bhgqd", pg, v_blk)
+    return pv.reshape(b, hq, bq, -1)

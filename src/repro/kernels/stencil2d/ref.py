@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the 5-point stencil (hotspot/SRAD/pathfinder class)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil2d_ref(x: jax.Array, coeffs: jax.Array, boundary: float = 0.0) -> jax.Array:
+    """out[i,j] = c0*x[i,j] + c1*x[i-1,j] + c2*x[i+1,j] + c3*x[i,j-1] + c4*x[i,j+1].
+
+    x: (H, W); coeffs: (5,).  Out-of-grid neighbors read ``boundary``.
+    """
+    x32 = x.astype(jnp.float32)
+    padded = jnp.pad(x32, 1, constant_values=boundary)
+    up = padded[:-2, 1:-1]
+    down = padded[2:, 1:-1]
+    left = padded[1:-1, :-2]
+    right = padded[1:-1, 2:]
+    c = coeffs.astype(jnp.float32)
+    out = c[0] * x32 + c[1] * up + c[2] * down + c[3] * left + c[4] * right
+    return out.astype(x.dtype)

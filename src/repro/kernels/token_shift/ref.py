@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the token-shift kernel.
+
+out[b, t, d] = sum_{k=0..K-1} w[k, d] * x[b, t-k, d]   (x[t<0] = 0)
+
+A depthwise *causal* short convolution — the paper's 1D convolution
+(Fig. 1) expressed as elevator shifts, and exactly the short-conv /
+token-shift used by RecurrentGemma (width-4 conv1d) and RWKV (Δ=1 lerp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_shift_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, T, D); w: (K, D) per-channel taps, tap k reads x[t-k]."""
+    k, d = w.shape
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    for tap in range(k):
+        shifted = jnp.pad(x32, ((0, 0), (tap, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + w32[tap] * shifted
+    return out.astype(x.dtype)

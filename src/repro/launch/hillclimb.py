@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing: A/B config variants on the three chosen cells.
+
+Each experiment = (cell, variant-name, config-transform).  For every
+variant we re-run the exact roofline extraction (bilinear extrapolated
+unrolled lowers) and the full-model compile (memory), then record
+hypothesis -> before -> after into experiments/perf/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell moe   # qwen3 train
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell vl    # qwen2-vl prefill
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell rwkv  # rwkv6 train
+  PYTHONPATH=src python -m repro.launch.hillclimb --variant a2a --cell moe
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+
+def _variants():
+    """cell key -> (arch, shape, {variant: transform})."""
+    return {
+        "moe": (
+            "qwen3-moe-235b-a22b", "train_4k",
+            {
+                "baseline": lambda c: c,
+                # H1: replace gather-MoE (GSPMD all-gathers the token
+                # activations per layer) with shard_map all-to-all dispatch:
+                # collective bytes per MoE layer should drop from
+                # O(tokens*d*tp) to 2*k*cf*tokens*d.
+                "a2a": lambda c: dataclasses.replace(c, moe_impl="a2a"),
+                # H2: a2a + fewer microbatches => fewer FSDP param re-gathers
+                # (params re-gather once per microbatch); activation memory
+                # rises, traded against collective time.
+                "a2a_mb8": lambda c: dataclasses.replace(
+                    c, moe_impl="a2a", microbatch=8
+                ),
+                # H3: lighter remat: keep dots, recompute elementwise only —
+                # trades HBM for fewer recomputed FLOPs.
+                "a2a_remat_dots": lambda c: dataclasses.replace(
+                    c, moe_impl="a2a", remat="dots"
+                ),
+                # H4: ZeRO-3 weight gathering — gather FSDP weight shards at
+                # use instead of letting GSPMD all-reduce partial activations
+                # (collective bytes: activations >> weights at 4k tokens).
+                "a2a_wgather": lambda c: dataclasses.replace(
+                    c, moe_impl="a2a", fsdp_gather_weights=True
+                ),
+            },
+        ),
+        "vl": (
+            "qwen2-vl-7b", "prefill_32k",
+            {
+                "baseline": lambda c: c,
+                # H1: 28 heads don't divide TP=16 -> GSPMD replicates
+                # attention activations over the model axis.  Pad to 32
+                # zero-capacity heads (2 per shard): activations shard, the
+                # resharding all-gathers disappear.
+                "head_pad32": lambda c: dataclasses.replace(c, head_pad=4),
+                # H2: head padding + chunked prefill (batch 32 -> 4 chunks):
+                # bounds live activations; collectives unchanged per token.
+                "head_pad32_chunked": lambda c: dataclasses.replace(
+                    c, head_pad=4, prefill_chunks=4
+                ),
+                # H3: weight gathering on top — prefill contracts sharded
+                # weight dims against 1M-token activations otherwise.
+                "head_pad32_wgather": lambda c: dataclasses.replace(
+                    c, head_pad=4, fsdp_gather_weights=True
+                ),
+            },
+        ),
+        "rwkv": (
+            "rwkv6-1.6b", "train_4k",
+            {
+                "baseline": lambda c: c,
+                # H1: microbatch 2 -> 1: halves per-step FSDP param
+                # re-gathers (grad accumulation re-gathers every microbatch);
+                # WKV activations are small, memory can absorb it.
+                "mb1": lambda c: dataclasses.replace(c, microbatch=1),
+                # H2: wider WKV head-state chunks: chunk 16 -> 64 quarters
+                # the number of inter-chunk state round-trips per layer
+                # (carry traffic), at slightly higher in-chunk flops.
+                # (chunk is a call-site arg; exposed via rwkv_chunk.)
+                "mb1_remat_dots": lambda c: dataclasses.replace(
+                    c, microbatch=1, remat="dots"
+                ),
+                # H3: weight gathering (118GB/dev of all-reduce in the
+                # baseline comes from contracting FSDP-sharded weight dims).
+                "mb1_wgather": lambda c: dataclasses.replace(
+                    c, microbatch=1, fsdp_gather_weights=True
+                ),
+            },
+        ),
+    }
+
+
+def run_variant(arch, shape_name, name, transform, out_dir: Path):
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.launch import roofline as R
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.roofline_run import extrapolated_costs
+
+    # Patch get_config so every downstream consumer sees the variant.
+    import repro.configs.registry as reg
+
+    base = get_config(arch)
+    cfg_v = transform(base)
+    orig = reg.get_config
+    reg.get_config = lambda n: cfg_v if reg.canonical(n) == reg.canonical(arch) else orig(n)
+    result = {"arch": arch, "shape": shape_name, "variant": name}
+    t0 = time.time()
+    try:
+        ex = extrapolated_costs(arch, shape_name, multi_pod=False, base_cfg=cfg_v)
+        tot = ex["extrapolated"]
+        terms = R.roofline_terms(
+            {"flops": tot["flops"], "bytes accessed": tot["bytes"]},
+            {"total_bytes": tot["coll"]},
+        )
+        result["roofline"] = terms.as_dict()
+        result["collectives_by_op"] = tot["coll_by_op"]
+
+        lowered, *_ = lower_cell(arch, shape_name, multi_pod=False,
+                                 cfg_override=cfg_v)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        result["peak_bytes"] = (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        )
+        result["ok"] = True
+        del compiled, lowered
+    except Exception as e:  # noqa: BLE001
+        import traceback
+
+        result["ok"] = False
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-3000:]
+    finally:
+        reg.get_config = orig
+    result["total_s"] = round(time.time() - t0, 1)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}__{name}.json").write_text(
+        json.dumps(result, indent=1)
+    )
+    r = result.get("roofline", {})
+    status = "OK" if result["ok"] else f"FAIL {result.get('error', '')[:60]}"
+    print(
+        f"[{status}] {arch} {shape_name} {name}: "
+        f"comp={r.get('compute_s', 0):.4f}s coll={r.get('collective_s', 0):.4f}s "
+        f"mem={r.get('memory_s', 0):.3f}s "
+        f"peak={result.get('peak_bytes', 0)/2**30:.2f}GiB ({result['total_s']}s)",
+        flush=True,
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["moe", "vl", "rwkv"], required=True)
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+
+    arch, shape, variants = _variants()[args.cell]
+    todo = {args.variant: variants[args.variant]} if args.variant else variants
+    for name, transform in todo.items():
+        run_variant(arch, shape, name, transform, PERF_DIR)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + PartitionSpecs per cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+``train_step`` / ``prefill_step`` / ``decode_step`` against these.
+
+Family conventions (see DESIGN.md §5):
+  * vlm: first seq_len//4 positions are precomputed patch embeddings
+    (stub vision frontend) + M-RoPE (3, B, S) positions.
+  * audio enc-dec: encoder consumes precomputed frame embeddings (B, S, D);
+    the decoder sees seq_len text tokens (train/prefill) or a KV cache of
+    seq_len (decode) with cross-attention onto the S-frame encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.model import model as M
+from repro.model.sharding import to_pspec
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Training/prefill batch: SDS tree + PartitionSpec tree."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    pspecs = {"tokens": ("batch", "seq")}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        pspecs["labels"] = ("batch", "seq")
+    if cfg.frontend == "vision":
+        s_f = s // 4
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct((b, s_f, cfg.d_model), _dt(cfg))
+        pspecs["frontend_embeds"] = ("batch", "seq", "act_embed")
+        specs["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        pspecs["positions"] = (None, "batch", "seq")
+    if cfg.is_enc_dec:
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg))
+        pspecs["enc_embeds"] = ("batch", "seq", "act_embed")
+    return specs, pspecs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Decode step inputs: (state_sds, tokens_sds, length_sds) + pspec trees."""
+    b, s = shape.global_batch, shape.seq_len
+    state = M.abstract_decode_state(cfg, batch=b, max_len=s)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    extras = {}
+    extras_pspecs = {}
+    if cfg.is_enc_dec:
+        extras["enc_out"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg))
+        extras_pspecs["enc_out"] = ("batch", "kv_seq", "act_embed")
+    return state, tokens, length, extras, extras_pspecs
+
+
+def resolve_pspecs(axes_tree, rules):
+    """Map logical-axes tuples -> PartitionSpec via the rules table."""
+    return jax.tree.map(
+        lambda axes: to_pspec(axes, rules) if isinstance(axes, tuple) else P(),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+def cell_is_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §5 skips)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            f"{cfg.name} is pure full-attention; 500k decode requires "
+            "sub-quadratic context handling (documented skip, DESIGN.md §5)"
+        )
+    return True, ""

@@ -1,0 +1,189 @@
+"""Attention: GQA with RoPE/M-RoPE, full/local windows, KV-cache decode.
+
+Train/prefill use the flash-attention Pallas kernel (jnp oracle on CPU);
+decode uses a jnp path whose KV-sequence axis may be sharded — softmax over
+the sharded axis lowers to the flash-decoding log-sum-exp combine under
+GSPMD (partial max/sum per shard + small cross-shard reductions), i.e. the
+point-to-point pattern rather than a KV all-gather.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.local_attention.ops import flash_attention
+from repro.model.layers import apply_rope, init_rmsnorm, rms_norm
+from repro.model.sharding import constrain, gather_for_use
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, Hkv, S, Dh)
+    v: jax.Array          # (B, Hkv, S, Dh)
+    length: jax.Array     # () int32 — tokens filled
+
+
+def init_attention(mk, cfg, name: str, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads + cfg.head_pad, cfg.num_kv_heads
+    p = {
+        "wq": mk(f"{name}.wq", (d, nq * hd), ("embed", "heads_out")),
+        "wk": mk(f"{name}.wk", (d, nkv * hd), ("embed", "kv_out")),
+        "wv": mk(f"{name}.wv", (d, nkv * hd), ("embed", "kv_out")),
+        "wo": mk(f"{name}.wo", (nq * hd, d), ("heads_out", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(f"{name}.bq", (nq * hd,), ("heads_out",), "zeros")
+        p["bk"] = mk(f"{name}.bk", (nkv * hd,), ("kv_out",), "zeros")
+        p["bv"] = mk(f"{name}.bv", (nkv * hd,), ("kv_out",), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(mk, hd, f"{name}.q_norm")
+        p["k_norm"] = init_rmsnorm(mk, hd, f"{name}.k_norm")
+    return p
+
+
+def _project_qkv(params, x, x_kv, cfg):
+    b, t, _ = x.shape
+    s = x_kv.shape[1]
+    nq, nkv, hd = cfg.num_heads + cfg.head_pad, cfg.num_kv_heads, cfg.head_dim
+    g = cfg.fsdp_gather_weights
+    q = x @ gather_for_use(params["wq"], ("embed", "heads_out"), g)
+    k = x_kv @ gather_for_use(params["wk"], ("embed", "kv_out"), g)
+    v = x_kv @ gather_for_use(params["wv"], ("embed", "kv_out"), g)
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = constrain(q, "batch", "seq", "act_heads")
+    k = constrain(k, "batch", "seq", "act_heads")
+    v = constrain(v, "batch", "seq", "act_heads")
+    q = q.reshape(b, t, nq, hd).swapaxes(1, 2)     # (B, Hq, T, Dh)
+    k = k.reshape(b, s, nkv, hd).swapaxes(1, 2)
+    v = v.reshape(b, s, nkv, hd).swapaxes(1, 2)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _softcap(logits, cap):
+    return cap * jnp.tanh(logits / cap) if cap else logits
+
+
+def apply_attention(
+    params,
+    x: jax.Array,
+    cfg,
+    *,
+    kind: str = "attn",                    # attn | local | global
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    x_kv: jax.Array | None = None,         # cross-attention memory
+    kv_cache: KVCache | None = None,       # decode
+):
+    """Returns (out, new_kv_cache_or_None)."""
+    b, t, _ = x.shape
+    cross = x_kv is not None
+    src = x_kv if cross else x
+    q, k, v = _project_qkv(params, x, src, cfg)
+
+    window = cfg.attn_window if kind == "local" else None
+    if positions is None:
+        base = jnp.arange(t, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(base, (b, t))
+
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        kpos = positions if kv_cache is None else positions
+        k = apply_rope(k, kpos, cfg.rope_theta, cfg.mrope_sections)
+
+    new_cache = None
+    if kv_cache is not None and not cross:
+        # Decode: append this step's K/V and attend to the cache.  Local
+        # layers use a ring buffer of size window+1 (slot = pos mod S) — the
+        # insert-position arithmetic below is universal because for a
+        # full-length cache length < S, so length mod S == length.
+        s_cache = kv_cache.k.shape[2]
+        insert_at = kv_cache.length % s_cache
+        k_cache = _masked_insert(kv_cache.k, k, insert_at)
+        v_cache = _masked_insert(kv_cache.v, v, insert_at)
+        new_cache = KVCache(k_cache, v_cache, kv_cache.length + t)
+        out = _decode_attention(
+            q, k_cache, v_cache, kv_cache.length, cfg, window=window
+        )
+    else:
+        out = flash_attention(
+            q, k, v,
+            causal=causal and not cross,
+            window=window,
+            use_kernel=None,
+        )
+
+    out = out.swapaxes(1, 2).reshape(
+        b, t, (cfg.num_heads + cfg.head_pad) * cfg.head_dim
+    )
+    out = constrain(out, "batch", "seq", "act_heads")
+    wo = gather_for_use(params["wo"], ("heads_out", "embed"), cfg.fsdp_gather_weights)
+    return out @ wo, new_cache
+
+
+def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array):
+    """Insert `new` (B,H,t,D) at position `length` along axis 2.
+
+    Uses a positional where-mask instead of dynamic_update_slice so the
+    cache's sequence sharding is preserved (no gather/dynamic-slice
+    resharding under GSPMD) — each shard updates only the slots it owns:
+    the eLDST write-once discipline.
+    """
+    s = cache.shape[2]
+    t = new.shape[2]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    if t == 1:
+        sel = (idx == length)[None, None, :, None]
+        return jnp.where(sel, new.astype(cache.dtype), cache)
+    sel = (idx >= length) & (idx < length + t)
+    # Align `new` to cache positions: roll new into place.
+    padded = jnp.zeros_like(cache[:, :, :s])
+    padded = jax.lax.dynamic_update_slice_in_dim(
+        padded, new.astype(cache.dtype), length, axis=2
+    )
+    return jnp.where(sel[None, None, :, None], padded, cache)
+
+
+def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):
+    """Single-step attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, Hq, t, Dh) with t == new tokens (1); ``cur_pos`` is the absolute
+    position of the current token (== pre-insert cache length).  Softmax
+    over the cache axis is written max/exp/sum-explicitly; if `kv_seq` is
+    sharded, GSPMD lowers it to per-shard partials + a tiny psum
+    (flash-decoding combine).  Ring-buffer caches are handled positionally:
+    slot i holds absolute position cur_pos - ((cur_pos - i) mod S).
+    """
+    b, hq, t, hd = q.shape
+    nkv = k_cache.shape[1]
+    group = hq // nkv
+    s = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, nkv, group * t, hd)
+    logits = jnp.einsum(
+        "bhqd,bhsd->bhqs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+
+    slot = jnp.arange(s, dtype=jnp.int32)
+    abs_pos = cur_pos - jnp.mod(cur_pos - slot, s)   # newest pos <= cur_pos in slot
+    valid = abs_pos[None, None, None, :] >= 0
+    if window is not None:
+        valid &= abs_pos[None, None, None, :] > (cur_pos - window)
+    logits = jnp.where(valid, logits, -1e30)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(valid, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqs,bhsd->bhqd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(denom, 1e-30)
+    return out.reshape(b, hq, t, hd).astype(q.dtype)

@@ -1,0 +1,230 @@
+"""Top-level model: init / abstract / spec params, forward, prefill, decode.
+
+One code path (the ``mk`` protocol) produces real params, ShapeDtypeStructs
+(dry-run) and PartitionSpecs (sharding), so they can never drift.
+
+Input conventions per family:
+  * text archs: ``tokens (B, S) int32``.
+  * vlm (qwen2-vl): ``tokens (B, S)`` + ``frontend_embeds (B, S_f, D)``
+    (precomputed patch embeddings, stub frontend) occupying the first S_f
+    positions, + M-RoPE ``positions (3, B, S)``.
+  * audio enc-dec (seamless): encoder consumes ``frontend_embeds (B, S, D)``
+    (precomputed frame embeddings); decoder consumes ``tokens (B, S_dec)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.model import transformer as tf
+from repro.model.attention import KVCache
+from repro.model.layers import (
+    embed_tokens,
+    init_embeddings,
+    init_rmsnorm,
+    logits_projection,
+    rms_norm,
+)
+from repro.model.recurrent import RWKV_HEAD_DIM, RecState
+from repro.model.sharding import abstract_mk, constrain, init_mk, spec_mk, to_pspec
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# Parameter construction (three interpretations of one code path)
+# --------------------------------------------------------------------------
+
+def _build_params(cfg, mk_factory):
+    p: dict[str, Any] = {
+        "tok": init_embeddings(mk_factory(-1), cfg),
+        "final_norm": init_rmsnorm(mk_factory(-2), cfg.d_model, "final_norm"),
+        "decoder": tf.init_stack(
+            mk_factory, cfg, cross=cfg.is_enc_dec, name="dec"
+        ),
+    }
+    if cfg.is_enc_dec:
+        import dataclasses
+
+        enc_cfg = dataclasses.replace(cfg, pattern=("attn",), num_experts=0)
+        enc_factory = lambda i: mk_factory(10_000 + i)
+        p["encoder"] = tf.init_stack(
+            enc_factory, enc_cfg, num_layers=cfg.encoder_layers, name="enc"
+        )
+        p["enc_final_norm"] = init_rmsnorm(
+            mk_factory(-3), cfg.d_model, "enc_final_norm"
+        )
+    return p
+
+
+def init_params(cfg, key: jax.Array):
+    """Real parameters (smoke tests, examples, small-scale training)."""
+    def factory(i):
+        return init_mk(jax.random.fold_in(key, i % (2**30)), _dtype(cfg))
+    return _build_params(cfg, factory)
+
+
+def abstract_params(cfg):
+    """ShapeDtypeStruct tree — dry-run lowering, no allocation."""
+    mk = abstract_mk(_dtype(cfg))
+    return _build_params(cfg, lambda i: mk)
+
+
+def param_pspecs(cfg, rules: dict):
+    """PartitionSpec tree aligned with the param tree."""
+    mk = spec_mk(rules)
+    return _build_params(cfg, lambda i: mk)
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(
+    params,
+    cfg,
+    tokens: jax.Array | None = None,
+    *,
+    positions: jax.Array | None = None,
+    frontend_embeds: jax.Array | None = None,
+    enc_tokens_embeds: jax.Array | None = None,
+) -> jax.Array:
+    """Returns logits (B, S, V) (decoder logits for enc-dec)."""
+    enc_out = None
+    if cfg.is_enc_dec:
+        assert enc_tokens_embeds is not None, "enc-dec needs encoder inputs"
+        import dataclasses
+
+        enc_cfg = dataclasses.replace(cfg, pattern=("attn",), num_experts=0)
+        ex = enc_tokens_embeds.astype(_dtype(cfg))
+        ex, _ = tf.apply_stack(
+            params["encoder"], ex, enc_cfg, causal=False,
+            num_layers=cfg.encoder_layers,
+        )
+        enc_out = rms_norm(params["enc_final_norm"], ex, cfg.norm_eps)
+
+    x = embed_tokens(params["tok"], tokens, cfg)
+    if frontend_embeds is not None:
+        s_f = frontend_embeds.shape[1]
+        x = jnp.concatenate(
+            [frontend_embeds.astype(x.dtype), x[:, s_f:]], axis=1
+        )
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    x, _ = tf.apply_stack(
+        params["decoder"], x, cfg, positions=positions, causal=True,
+        enc_out=enc_out,
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return logits_projection(params["tok"], x, cfg)
+
+
+# --------------------------------------------------------------------------
+# Decode state (KV caches / recurrent states), concrete + abstract
+# --------------------------------------------------------------------------
+
+def _layer_state_shape(cfg, kind: str, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    if kind in tf.ATTN_KINDS:
+        window = cfg.attn_window if kind == "local" else None
+        s = min(max_len, window) if window else max_len
+        # Local layers only retain a window-sized cache (ring-buffer slots).
+        kv_shape = (batch, cfg.num_kv_heads, s, cfg.head_dim)
+        return KVCache(
+            k=jax.ShapeDtypeStruct(kv_shape, dt),
+            v=jax.ShapeDtypeStruct(kv_shape, dt),
+            length=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+    if kind == "rec":
+        return RecState(
+            h=jax.ShapeDtypeStruct((batch, cfg.d_rnn), jnp.float32),
+            conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.d_rnn), dt),
+        )
+    if kind == "rwkv":
+        h = cfg.d_model // RWKV_HEAD_DIM
+        return RecState(
+            h=jax.ShapeDtypeStruct((batch, h, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32),
+            conv=jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dt),
+        )
+    raise ValueError(kind)
+
+
+def abstract_decode_state(cfg, batch: int, max_len: int):
+    pattern, n_periods, remainder = tf.plan_groups(cfg)
+
+    def stack(sds_tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_periods,) + s.shape, s.dtype),
+            sds_tree,
+        )
+
+    scanned = (
+        [stack(_layer_state_shape(cfg, k, batch, max_len)) for k in pattern]
+        if n_periods > 0
+        else None
+    )
+    rem = [_layer_state_shape(cfg, k, batch, max_len) for k in remainder]
+    return {"scanned": scanned, "remainder": rem}
+
+
+def init_decode_state(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), abstract_decode_state(cfg, batch, max_len)
+    )
+
+
+def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict):
+    """PartitionSpecs for the decode state.
+
+    KV caches shard (batch, ·, kv_seq, ·); recurrent states shard
+    (batch, rnn-ish) — built by walking the typed abstract tree, so stacked
+    (leading ``layers``) axes are detected from rank deltas.
+    """
+    abstract = abstract_decode_state(cfg, batch, max_len)
+
+    def node_spec(node):
+        if isinstance(node, KVCache):
+            extra = len(node.k.shape) - 4  # 0 = unstacked, 1 = (L, B, H, S, D)
+            prefix = ("layers",) * extra
+            kv = to_pspec(prefix + ("batch", None, "kv_seq", None), rules)
+            ln = to_pspec(prefix, rules)
+            return KVCache(k=kv, v=kv, length=ln)
+        if isinstance(node, RecState):
+            extra = len(node.conv.shape) - 3
+            prefix = ("layers",) * extra
+            h_axes = prefix + ("batch",) + (None,) * (len(node.h.shape) - extra - 1)
+            c_axes = prefix + ("batch", None, "rnn")
+            return RecState(h=to_pspec(h_axes, rules), conv=to_pspec(c_axes, rules))
+        raise TypeError(type(node))
+
+    return jax.tree.map(
+        node_spec, abstract, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+    )
+
+
+# --------------------------------------------------------------------------
+# Decode step
+# --------------------------------------------------------------------------
+
+def decode_step(params, cfg, state, tokens: jax.Array, length: jax.Array,
+                *, enc_out: jax.Array | None = None):
+    """One serve step: tokens (B, 1) given caches filled to ``length``.
+
+    Returns (logits (B, 1, V), new_state).
+    """
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(length.reshape(1, 1), (b, 1)).astype(jnp.int32)
+    x = embed_tokens(params["tok"], tokens, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x, new_state = tf.apply_stack(
+        params["decoder"], x, cfg, positions=positions, causal=True,
+        states=state, enc_out=enc_out,
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return logits_projection(params["tok"], x, cfg), new_state

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with sort-based capacity dispatch and expert parallelism.
+
+The dispatch is *point-to-point token forwarding*: tokens are sorted by
+destination expert and gathered into per-expert buffers (on the production
+mesh the expert axis is sharded over "model", so the gather lowers to an
+all-to-all-class exchange) — the dMT-CGRA pattern of sending a value
+directly to its consumer rather than staging it in a shared buffer behind a
+barrier.  Dropped-on-overflow capacity semantics (standard Switch/DBRX
+style); the residual path carries dropped tokens unchanged.
+
+Router math in float32.  DBRX: 16 experts top-4; Qwen3-MoE: 128 experts
+top-8 with normalized top-k probabilities (both fine-grained, no shared
+expert).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.model.sharding import constrain, gather_for_use
+
+
+def init_moe(mk, cfg, name: str):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    # Experts take the "model" axis (EP); within an expert the FFN dims stay
+    # local (no TP inside an expert — fine-grained experts are small), and
+    # the d_model axis carries FSDP over "data".
+    p = {
+        "router": mk(f"{name}.router", (d, e), ("embed", "experts")),
+        "w_gate": mk(f"{name}.w_gate", (e, d, f), ("experts", "embed", None)),
+        "w_up": mk(f"{name}.w_up", (e, d, f), ("experts", "embed", None)),
+        "w_down": mk(f"{name}.w_down", (e, f, d), ("experts", None, "embed")),
+    }
+    return p
+
+
+def _topk_routing(logits: jax.Array, k: int):
+    """Returns (weights (T,k) float32, experts (T,k) int32), renormalized."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, experts
+
+
+def apply_moe(params, x: jax.Array, cfg, *, capacity_factor: float | None = None):
+    """x: (B, T, D) -> (B, T, D).  Capacity-dropped top-k MoE."""
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    n = b * t
+    cap = max(1, int(n * k * cf / e))
+    # Hardware-align the per-expert buffer (lane width).
+    cap = -(-cap // 8) * 8
+
+    xf = x.reshape(n, d)
+    router_logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    weights, experts = _topk_routing(router_logits, k)   # (n, k)
+
+    # ---- build dispatch indices by stable-sorting assignments by expert ----
+    flat_expert = experts.reshape(-1)                     # (n*k,)
+    flat_token = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_weight = weights.reshape(-1)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_weight = flat_weight[order]
+
+    # Position of each assignment within its expert's run.
+    counts = jnp.bincount(flat_expert, length=e)          # (e,)
+    starts = jnp.cumsum(counts) - counts                  # run start offsets
+    pos_in_expert = jnp.arange(n * k, dtype=jnp.int32) - starts[sorted_expert]
+    keep = pos_in_expert < cap                            # capacity drop
+
+    # Scatter token ids into the (e, cap) dispatch grid.
+    slot = sorted_expert * cap + pos_in_expert            # (n*k,)
+    slot = jnp.where(keep, slot, e * cap)                 # overflow -> spill row
+    dispatch_tok = jnp.zeros(e * cap + 1, jnp.int32).at[slot].set(sorted_token + 1)
+    dispatch_w = jnp.zeros(e * cap + 1, jnp.float32).at[slot].set(sorted_weight)
+    dispatch_tok = dispatch_tok[: e * cap].reshape(e, cap)   # 0 = empty slot
+    dispatch_w = dispatch_w[: e * cap].reshape(e, cap)
+
+    # ---- gather -> expert FFN -> weighted scatter-add back ------------------
+    valid = dispatch_tok > 0
+    tok_idx = jnp.maximum(dispatch_tok - 1, 0)            # (e, cap)
+    xe = jnp.take(xf, tok_idx.reshape(-1), axis=0).reshape(e, cap, d)
+    xe = jnp.where(valid[..., None], xe, 0.0)
+    xe = constrain(xe, "experts", "expert_cap", "act_embed")
+
+    if cfg.mlp_type == "geglu":
+        act = lambda g: jax.nn.gelu(g, approximate=True)
+    else:
+        act = jax.nn.silu
+    g = cfg.fsdp_gather_weights
+    w_gate = gather_for_use(params["w_gate"], ("experts", "embed", None), g)
+    w_up = gather_for_use(params["w_up"], ("experts", "embed", None), g)
+    w_down = gather_for_use(params["w_down"], ("experts", None, "embed"), g)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", xe, w_up
+    )
+    h = constrain(h, "experts", "expert_cap", None)  # EP owns the model axis
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)
+    ye = ye * dispatch_w[..., None]
+    ye = jnp.where(valid[..., None], ye, 0.0)
+
+    out = jnp.zeros((n + 1, d), ye.dtype).at[dispatch_tok.reshape(-1)].add(
+        ye.reshape(-1, d)
+    )[1:]
+    out = out.reshape(b, t, d).astype(x.dtype)
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+def load_balance_loss(router_logits: jax.Array, experts: jax.Array, e: int):
+    """Switch-style auxiliary loss: E * sum(frac_tokens * frac_probs)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    frac_probs = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(experts[:, 0], e)
+    frac_tokens = onehot.mean(axis=0)
+    return e * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,265 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both are direct consumers of the paper's technique: the hidden-state
+hand-off h[t-1] -> h[t] is literally ``fromThreadOrConst<h, Δ=1, C=h0>``
+(the paper's prefix-sum dataflow, Fig. 6), and the token-shift mixing of
+RWKV is ``fromThreadOrConst<x, Δ=1, C=0>``.  Sequence-chunked execution
+keeps the carries in VMEM (elevator token buffers) via the
+``elevator_scan`` / ``token_shift`` Pallas kernels.
+
+Decode is O(1) per token: the recurrent state *is* the entire context —
+which is why these archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from repro.model.lowering import scan_unroll
+
+from repro.kernels.elevator_scan.ops import elevator_scan
+from repro.kernels.token_shift.ops import token_shift
+from repro.model.layers import init_rmsnorm, rms_norm
+from repro.model.sharding import constrain, gather_for_use
+
+_RGLRU_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+class RecState(NamedTuple):
+    """Decode-time state for one recurrent layer."""
+
+    h: jax.Array           # RG-LRU hidden (B, d_rnn) | RWKV S (B, H, dk, dv)
+    conv: jax.Array        # conv tail (B, width-1, d_rnn) | x_prev (B, 1, D)
+
+
+# ==========================================================================
+# RG-LRU (RecurrentGemma)
+# ==========================================================================
+
+def init_rglru_block(mk, cfg, name: str):
+    d, dr, w = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    return {
+        "w_y": mk(f"{name}.w_y", (d, dr), ("embed", "rnn")),
+        "w_x": mk(f"{name}.w_x", (d, dr), ("embed", "rnn")),
+        "conv_w": mk(f"{name}.conv_w", (w, dr), ("taps", "rnn"), "normal", 0.1),
+        "gate_a": mk(f"{name}.gate_a", (dr, dr), ("embed", "rnn")),
+        "gate_x": mk(f"{name}.gate_x", (dr, dr), ("embed", "rnn")),
+        "log_lambda": mk(f"{name}.log_lambda", (dr,), ("rnn",), "normal", 0.5),
+        "w_out": mk(f"{name}.w_out", (dr, d), ("rnn", "embed")),
+    }
+
+
+def _rglru_gates(params, xb):
+    r = jax.nn.sigmoid(xb @ params["gate_a"])
+    i = jax.nn.sigmoid(xb @ params["gate_x"])  # gates gathered by caller
+    log_a = -_RGLRU_C * jax.nn.softplus(params["log_lambda"]) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xb
+    # sqrt(1 - a^2) normalizer keeps the state variance bounded.
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * gated_x
+    return a, b
+
+
+def apply_rglru_block(params, x: jax.Array, cfg, *, state: RecState | None = None):
+    """x: (B, T, D) -> ((B, T, D), new_state_or_None)."""
+    b_, t, _ = x.shape
+    g_ = cfg.fsdp_gather_weights
+    w_y = gather_for_use(params["w_y"], ("embed", "rnn"), g_)
+    w_x = gather_for_use(params["w_x"], ("embed", "rnn"), g_)
+    y = jax.nn.gelu(x @ w_y, approximate=True)                  # gate branch
+    xb = x @ w_x                                                # recurrent branch
+    xb = constrain(xb, "batch", "seq", "rnn")
+
+    # Temporal conv (width 4): the token-shift elevator chain.
+    if state is not None:
+        ext = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
+        xb_conv = token_shift(ext, params["conv_w"])[:, state.conv.shape[1]:]
+        conv_tail = ext[:, ext.shape[1] - (cfg.conv_width - 1):]
+    else:
+        xb_conv = token_shift(xb, params["conv_w"])
+        conv_tail = xb[:, t - (cfg.conv_width - 1):] if t >= cfg.conv_width - 1 else None
+
+    gate_params = {
+        "gate_a": gather_for_use(params["gate_a"], ("embed", "rnn"), g_),
+        "gate_x": gather_for_use(params["gate_x"], ("embed", "rnn"), g_),
+        "log_lambda": params["log_lambda"],
+    }
+    a, bb = _rglru_gates(gate_params, xb_conv)
+    a32, b32 = a.astype(jnp.float32), bb.astype(jnp.float32)
+    h0 = state.h.astype(jnp.float32) if state is not None else None
+    h = elevator_scan(a32, b32, h0, use_kernel=False if t == 1 else None)
+    h = h.astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = RecState(h=h[:, -1].astype(jnp.float32), conv=conv_tail)
+    out = (h * y) @ gather_for_use(params["w_out"], ("rnn", "embed"), g_)
+    return constrain(out, "batch", "seq", "act_embed"), new_state
+
+
+# ==========================================================================
+# RWKV6 (Finch)
+# ==========================================================================
+
+RWKV_HEAD_DIM = 64
+
+
+def init_rwkv_block(mk, cfg, name: str):
+    d = cfg.d_model
+    return {
+        "mu": mk(f"{name}.mu", (5, d), ("taps", "embed"), "normal", 0.2),
+        "w_r": mk(f"{name}.w_r", (d, d), ("embed", "heads_out")),
+        "w_k": mk(f"{name}.w_k", (d, d), ("embed", "heads_out")),
+        "w_v": mk(f"{name}.w_v", (d, d), ("embed", "heads_out")),
+        "w_g": mk(f"{name}.w_g", (d, d), ("embed", "heads_out")),
+        # Data-dependent decay (the Finch signature): base + low-rank delta.
+        "w_decay_base": mk(f"{name}.w_decay_base", (d,), ("heads_out",), "normal", 0.5),
+        "w_decay_lora_a": mk(f"{name}.w_decay_a", (d, 64), ("embed", None)),
+        "w_decay_lora_b": mk(f"{name}.w_decay_b", (64, d), (None, "heads_out")),
+        "u_bonus": mk(f"{name}.u_bonus", (d,), ("heads_out",), "normal", 0.3),
+        "w_o": mk(f"{name}.w_o", (d, d), ("heads_out", "embed")),
+        "out_norm": init_rmsnorm(mk, d, f"{name}.out_norm"),
+    }
+
+
+def _rwkv_mix(x, x_prev, mu_row):
+    """Token-shift lerp: x + (shift(x) - x) * mu  (Δ=1 elevator edge)."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    return x + (shifted - x) * mu_row
+
+
+def _wkv_chunked(r, k, v, w, u, h0, chunk: int):
+    """Chunked WKV: S_t = diag(w_t) S_{t-1} + k_t^T v_t;  o_t = r_t·(S + u k_t^T v_t).
+
+    All inputs (B, H, T, Dh); returns (out (B,H,T,Dh), S_out (B,H,Dh,Dh)).
+    Chunk carries S through a lax.scan — the elevator chain over chunk space.
+    Within a chunk, decay ratios turn the recurrence into two einsums
+    (intra-chunk "attention" + inter-chunk state read).
+    """
+    b, h, t, dh = r.shape
+    if t % chunk:
+        chunk = t  # fall back to a single chunk for odd lengths
+    n = t // chunk
+    rc = r.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    kc = k.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    vc = v.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    wc = w.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+
+    logw = jnp.log(jnp.clip(wc, 1e-8, 1.0))
+    # cum_excl[t] = sum_{s<t} log w_s  (decay applied to the entering state).
+    cum_incl = jnp.cumsum(logw, axis=3)
+    cum_excl = cum_incl - logw
+    # w_total = prod over the chunk.
+    w_total = jnp.exp(cum_incl[:, :, :, -1])                  # (B,H,N,Dh)
+
+    r_dec = rc * jnp.exp(cum_excl)                            # r_t * D_{<t}
+    k_inv = kc * jnp.exp(-cum_incl)                           # k_s / D_{<=s}
+    k_rem = kc * jnp.exp(cum_incl[:, :, :, -1:] - cum_incl)   # k_s * D_{(s..L]}
+
+    # Intra-chunk pair scores: A[t,s] = (r_t D_{<t}) · (k_s / D_{<=s}), s < t.
+    scores = jnp.einsum("bhntd,bhnsd->bhnts", r_dec, k_inv)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask, scores, 0.0)
+    u_b = u.reshape(1, h, 1, 1, dh)
+    bonus = jnp.einsum("bhntd,bhntd->bhnt", rc * u_b, kc)     # u-weighted diag
+    intra = jnp.einsum("bhnts,bhnsd->bhntd", scores, vc)
+    intra = intra + bonus[..., None] * vc
+
+    def chunk_step(S, inputs):
+        r_d, k_r, v_, wt = inputs                             # (B,H,chunk,Dh)...
+        inter = jnp.einsum("bhtd,bhde->bhte", r_d, S)
+        S_new = S * wt[..., None] + jnp.einsum("bhtd,bhte->bhde", k_r, v_)
+        return S_new, inter
+
+    per_chunk = (
+        jnp.moveaxis(r_dec, 2, 0),
+        jnp.moveaxis(k_rem, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+        jnp.moveaxis(w_total, 2, 0),
+    )
+    S_out, inter = jax.lax.scan(
+        chunk_step, h0.astype(jnp.float32), per_chunk, unroll=scan_unroll()
+    )
+    inter = jnp.moveaxis(inter, 0, 2)                         # (B,H,N,chunk,Dh)
+
+    out = (intra + inter).reshape(b, h, t, dh)
+    return out, S_out
+
+
+def wkv_sequential_ref(r, k, v, w, u, h0):
+    """O(T) sequential oracle for the WKV recurrence (tests)."""
+    b, h, t, dh = r.shape
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u.reshape(1, h, dh, 1) * kv)
+        S = S * wt[..., None] + kv
+        return S, out
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0) for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 2), S
+
+
+def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None,
+                     chunk: int = 16):
+    """x: (B, T, D) -> ((B, T, D), new_state_or_None)."""
+    b, t, d = x.shape
+    h = d // RWKV_HEAD_DIM
+    dh = RWKV_HEAD_DIM
+
+    x_prev = (
+        state.conv.astype(x.dtype)
+        if state is not None
+        else jnp.zeros((b, 1, d), x.dtype)
+    )
+    mu = params["mu"]
+    xr = _rwkv_mix(x, x_prev, mu[0])
+    xk = _rwkv_mix(x, x_prev, mu[1])
+    xv = _rwkv_mix(x, x_prev, mu[2])
+    xg = _rwkv_mix(x, x_prev, mu[3])
+    xw = _rwkv_mix(x, x_prev, mu[4])
+
+    gg = cfg.fsdp_gather_weights
+    r = xr @ gather_for_use(params["w_r"], ("embed", "heads_out"), gg)
+    k = xk @ gather_for_use(params["w_k"], ("embed", "heads_out"), gg)
+    v = xv @ gather_for_use(params["w_v"], ("embed", "heads_out"), gg)
+    g = jax.nn.silu(xg @ gather_for_use(params["w_g"], ("embed", "heads_out"), gg))
+    # Data-dependent decay in (0, 1): exp(-exp(...)) (Finch).  The logit is
+    # clamped so |log w| <= 4: the chunked ratio trick in _wkv_chunked holds
+    # per-chunk decay products in fp32, which stays finite iff
+    # chunk * |log w| < ~80 (chunk=16 below -> max exponent 64).
+    decay_logit = params["w_decay_base"] + (
+        jax.nn.tanh(xw @ params["w_decay_lora_a"]) @ params["w_decay_lora_b"]
+    )
+    decay_logit = jnp.clip(decay_logit.astype(jnp.float32), -6.0, 1.386)
+    w = jnp.exp(-jnp.exp(decay_logit))
+
+    def heads(z):
+        return z.reshape(b, t, h, dh).swapaxes(1, 2)  # (B,H,T,Dh)
+
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(w.astype(x.dtype))
+    u = params["u_bonus"].reshape(h, dh)
+
+    h0 = (
+        state.h.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, h, dh, dh), jnp.float32)
+    )
+    if t == 1:
+        out, S = wkv_sequential_ref(r_, k_, v_, w_, u, h0)
+    else:
+        out, S = _wkv_chunked(
+            r_.astype(jnp.float32), k_.astype(jnp.float32),
+            v_.astype(jnp.float32), w_.astype(jnp.float32), u, h0, chunk
+        )
+
+    out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)
+    out = rms_norm(params["out_norm"], out, cfg.norm_eps) * g
+    out = out @ gather_for_use(params["w_o"], ("heads_out", "embed"), gg)
+
+    new_state = None
+    if state is not None:
+        new_state = RecState(h=S, conv=x[:, -1:])
+    return constrain(out, "batch", "seq", "act_embed"), new_state

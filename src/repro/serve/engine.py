@@ -1,0 +1,123 @@
+"""Serving: prefill + decode steps and a batched greedy-decoding engine.
+
+``make_prefill_step`` / ``make_decode_step`` are the lowering targets for
+the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells; ``ServeEngine``
+drives them for the runnable example (batched requests, greedy sampling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.model import model as M
+
+
+def make_prefill_step(cfg):
+    """(params, tokens, **extras) -> logits (B, S, V).
+
+    ``cfg.prefill_chunks > 1`` splits the request batch into chunks
+    processed sequentially (a ``lax.scan``), bounding live activation /
+    MoE-dispatch memory — sequences are independent, so this is exact.
+    """
+    from repro.model.lowering import scan_unroll
+
+    def prefill_step(params, tokens, **kw):
+        from repro.model.sharding import _CTX
+
+        n = cfg.prefill_chunks
+        b = tokens.shape[0]
+        # Mesh-aware: never chunk below one sequence per data shard (chunked
+        # batches that don't cover the batch-sharding axes lose parallelism
+        # and force replication).
+        if _CTX.mesh is not None and _CTX.rules is not None:
+            data = _CTX.rules.get("batch")
+            size = 1
+            if data:
+                for a in (data if isinstance(data, tuple) else (data,)):
+                    size *= _CTX.mesh.shape[a]
+            n = max(1, min(n, b // max(size, 1)))
+        if n <= 1 or b % n:
+            return M.forward(params, cfg, tokens, **kw)
+
+        def split(x, batch_axis=0):
+            return x.reshape(
+                x.shape[:batch_axis] + (n, x.shape[batch_axis] // n)
+                + x.shape[batch_axis + 1:]
+            ).swapaxes(0, batch_axis) if batch_axis else x.reshape(
+                (n, b // n) + x.shape[1:]
+            )
+
+        tk = split(tokens)
+        kw_split = {}
+        for key, v in kw.items():
+            if key == "positions" and v.ndim == 3 and v.shape[0] == 3:
+                kw_split[key] = jnp.moveaxis(
+                    v.reshape(3, n, b // n, v.shape[2]), 1, 0
+                )
+            else:
+                kw_split[key] = split(v)
+
+        keys = sorted(kw_split)
+
+        def chunk_fn(_, inputs):
+            tok = inputs[0]
+            kw_i = dict(zip(keys, inputs[1:]))
+            return None, M.forward(params, cfg, tok, **kw_i)
+
+        xs = (tk,) + tuple(kw_split[k] for k in keys)
+        _, logits = jax.lax.scan(chunk_fn, None, xs, unroll=scan_unroll())
+        return logits.reshape((b,) + logits.shape[2:])
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """(params, state, tokens (B,1), length ()) -> (logits, new_state)."""
+
+    def decode_step(params, state, tokens, length, enc_out=None):
+        return M.decode_step(params, cfg, state, tokens, length, enc_out=enc_out)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Minimal batched greedy server: prefill token-by-token into the cache
+    (correct for ring-buffer local layers too), then decode new tokens."""
+
+    cfg: Any
+    params: Any
+    max_len: int = 256
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self._decode = jax.jit(
+            lambda p, s, t, l: M.decode_step(p, cfg, s, t, l)
+        )
+
+    def generate(self, prompts: jax.Array, num_new_tokens: int) -> jax.Array:
+        """prompts: (B, P) int32 -> (B, P + num_new_tokens)."""
+        b, p_len = prompts.shape
+        state = M.init_decode_state(self.cfg, batch=b, max_len=self.max_len)
+
+        logits = None
+        for i in range(p_len):
+            logits, state = self._decode(
+                self.params, state, prompts[:, i : i + 1], jnp.int32(i)
+            )
+        out = [prompts]
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for j in range(num_new_tokens):
+            out.append(cur)
+            if j == num_new_tokens - 1:
+                break
+            logits, state = self._decode(
+                self.params, state, cur, jnp.int32(p_len + j)
+            )
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return jnp.concatenate(out, axis=1)

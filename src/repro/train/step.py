@@ -1,0 +1,154 @@
+"""Training step: microbatched grad accumulation, CE loss, AdamW, options.
+
+The step is a pure function (TrainState, batch) -> (TrainState, metrics),
+jittable and shardable; microbatching runs as a ``lax.scan`` over
+grad-accumulation chunks so activation memory scales with the microbatch,
+not the global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from repro.model.lowering import scan_unroll
+
+from repro.model import model as M
+from repro.model.sharding import constrain
+from repro.optim import adamw
+from repro.optim.compression import (
+    ErrorFeedbackState,
+    compressed_gradients,
+    init_error_feedback,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    ef: ErrorFeedbackState | None = None
+
+
+def init_train_state(cfg, key, opt_cfg=None, *, compress=False) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=adamw.init_state(params),
+        ef=init_error_feedback(params) if compress else None,
+    )
+
+
+def abstract_train_state(cfg, *, compress=False) -> TrainState:
+    params = M.abstract_params(cfg)
+    ef = None
+    if compress:
+        ef = ErrorFeedbackState(
+            residual=jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params
+            )
+        )
+    return TrainState(params=params, opt=adamw.abstract_state(params), ef=ef)
+
+
+def train_state_pspecs(cfg, rules) -> TrainState:
+    pspecs = M.param_pspecs(cfg, rules)
+    ef = ErrorFeedbackState(residual=pspecs)
+    return TrainState(params=pspecs, opt=adamw.state_pspecs(pspecs), ef=None)
+
+
+def _model_kwargs(cfg, batch):
+    kw = {}
+    if "frontend_embeds" in batch:
+        kw["frontend_embeds"] = batch["frontend_embeds"]
+    if "positions" in batch:
+        kw["positions"] = batch["positions"]
+    if "enc_embeds" in batch:
+        kw["enc_tokens_embeds"] = batch["enc_embeds"]
+    return kw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        logits = M.forward(params, cfg, batch["tokens"], **_model_kwargs(cfg, batch))
+        return cross_entropy(logits, batch["labels"])
+
+    return loss_fn
+
+
+def _split_micro(batch, n_micro: int):
+    def split(x):
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} not divisible by microbatch {n_micro}")
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    # `positions` for M-RoPE is (3, B, S): batch axis is 1.
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim == 3 and v.shape[0] == 3:
+            b = v.shape[1]
+            out[k] = jnp.moveaxis(
+                v.reshape(3, n_micro, b // n_micro, v.shape[2]), 1, 0
+            )
+        else:
+            out[k] = split(v)
+    return out
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    *,
+    compress: bool = False,
+    accum_dtype=jnp.float32,
+):
+    """Build the jittable train step for ``cfg``."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    loss_fn = make_loss_fn(cfg)
+    n_micro = max(1, cfg.microbatch)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def accum(carry, mb):
+                loss_acc, grads_acc = carry
+                loss_i, grads_i = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), grads_acc, grads_i
+                )
+                return (loss_acc + loss_i, grads_acc), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0.0), zero), micro, unroll=scan_unroll()
+            )
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        ef = state.ef
+        if compress and ef is not None:
+            grads, ef = compressed_gradients(grads, ef)
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, state.opt, opt_cfg
+        )
+        metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return train_step

@@ -1,0 +1,124 @@
+"""Tests for the eLDST unit (fromThreadOrMem): load-once, forward-many."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forward_stats, from_thread_or_mem
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def ref_eldst(mem, pred, delta, window=None, const=0):
+    """Direct transcription of the recurrence (paper §4.2)."""
+    n = mem.shape[0]
+    win = window if window is not None else n
+    out = np.full_like(np.asarray(mem), const)
+    for t in range(n):
+        if pred[t]:
+            out[t] = mem[t]
+        else:
+            src = t - delta
+            if src >= 0 and t // win == src // win:
+                out[t] = out[src]
+    return out
+
+
+class TestFromThreadOrMem:
+    def test_single_loader_broadcast_chain(self):
+        # Thread 0 loads; everyone else forwards (matmul column pattern).
+        mem = jnp.arange(10.0, 20.0)
+        pred = jnp.zeros(10, bool).at[0].set(True)
+        out = from_thread_or_mem(mem, pred, delta=1)
+        np.testing.assert_array_equal(out, np.full(10, 10.0))
+
+    def test_strided_loaders(self):
+        # Every 4th thread loads (window=4, delta=1): matmul tile pattern.
+        mem = jnp.arange(12.0)
+        pred = jnp.asarray([t % 4 == 0 for t in range(12)])
+        out = from_thread_or_mem(mem, pred, delta=1, window=4)
+        expected = np.repeat([0.0, 4.0, 8.0], 4)
+        np.testing.assert_array_equal(out, expected)
+
+    def test_delta_gt_one_interleaved_chains(self):
+        # delta=2: even and odd chains are independent.
+        mem = jnp.arange(8.0)
+        pred = jnp.asarray([True, True, False, False, False, False, False, False])
+        out = from_thread_or_mem(mem, pred, delta=2)
+        np.testing.assert_array_equal(out, [0, 1, 0, 1, 0, 1, 0, 1])
+
+    def test_const_when_no_producer(self):
+        mem = jnp.arange(4.0)
+        pred = jnp.asarray([False, False, True, False])
+        out = from_thread_or_mem(mem, pred, delta=1, const=-9.0)
+        np.testing.assert_array_equal(out, [-9, -9, 2, 2])
+
+    def test_window_resets_forwarding(self):
+        mem = jnp.arange(8.0)
+        pred = jnp.zeros(8, bool).at[0].set(True)
+        out = from_thread_or_mem(mem, pred, delta=1, window=4, const=0.0)
+        np.testing.assert_array_equal(out, [0, 0, 0, 0, 0, 0, 0, 0])
+        pred2 = jnp.zeros(8, bool).at[0].set(True).at[4].set(True)
+        out2 = from_thread_or_mem(mem, pred2, delta=1, window=4, const=-1.0)
+        np.testing.assert_array_equal(out2, [0, 0, 0, 0, 4, 4, 4, 4])
+
+    def test_vector_payload(self):
+        mem = jnp.arange(12.0).reshape(6, 2)
+        pred = jnp.zeros(6, bool).at[0].set(True)
+        out = from_thread_or_mem(mem, pred, delta=1)
+        np.testing.assert_array_equal(out, np.tile([0.0, 1.0], (6, 1)))
+
+    def test_rejects_nonpositive_delta(self):
+        with pytest.raises(ValueError):
+            from_thread_or_mem(jnp.arange(4.0), jnp.ones(4, bool), delta=0)
+
+    @given(
+        n=st.integers(2, 48),
+        delta=st.integers(1, 8),
+        window=st.one_of(st.none(), st.integers(2, 12)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_matches_recurrence(self, n, delta, window, seed):
+        rng = np.random.default_rng(seed)
+        mem = rng.standard_normal(n).astype(np.float32)
+        pred = rng.random(n) < 0.3
+        out = from_thread_or_mem(
+            jnp.asarray(mem), jnp.asarray(pred), delta, window=window, const=5.0
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out), ref_eldst(mem, pred, delta, window, 5.0)
+        )
+
+    def test_matmul_load_reduction_nkm_to_nm(self):
+        # Paper §3.3: N*K*M naive loads -> N*M with forwarding.  Model the A
+        # operand of a (N,K)x(K,M) matmul: N*M threads each need K values of
+        # their row; only threads with ty==0 load.
+        n_, k_, m_ = 4, 5, 6
+        pred = jnp.asarray([ty == 0 for tx in range(n_) for ty in range(m_)])
+        stats = forward_stats(np.asarray(pred), delta=1)
+        assert stats.loads_issued == n_   # one loader per row
+        assert stats.loads_forwarded == n_ * m_ - n_
+        # Per-element traffic across the K-loop:
+        naive_loads = n_ * k_ * m_
+        direct_loads = n_ * k_
+        assert naive_loads // direct_loads == m_
+
+
+class TestJitAndGrad:
+    def test_jit(self):
+        f = jax.jit(lambda m, p: from_thread_or_mem(m, p, 2, window=6))
+        mem = jnp.arange(12.0)
+        pred = jnp.asarray([t % 6 < 2 for t in range(12)])
+        np.testing.assert_array_equal(
+            f(mem, pred), ref_eldst(np.asarray(mem), np.asarray(pred), 2, 6)
+        )
+
+    def test_grad_flows_to_loaded_values(self):
+        # d(sum(out))/d(mem) counts how many threads consume each load.
+        mem = jnp.arange(4.0)
+        pred = jnp.asarray([True, False, False, False])
+        g = jax.grad(lambda m: from_thread_or_mem(m, pred, 1).sum())(mem)
+        np.testing.assert_array_equal(g, [4.0, 0.0, 0.0, 0.0])

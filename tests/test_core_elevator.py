@@ -1,0 +1,142 @@
+"""Unit + property tests for the elevator node (fromThreadOrConst)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TOKEN_BUFFER_SIZE,
+    cascaded_from_thread_or_const,
+    from_thread_or_const,
+    from_thread_or_const_nd,
+    plan_cascade,
+    tag_value,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def ref_elevator(x, delta, const, window=None):
+    """Direct transcription of paper Fig. 4 pseudo-code (per-thread loop)."""
+    n = x.shape[0]
+    out = np.full_like(np.asarray(x), const)
+    for tid in range(n):
+        src = tid - delta
+        if 0 <= src < n and (window is None or tid // window == src // window):
+            out[tid] = x[src]
+    return out
+
+
+class TestFromThreadOrConst:
+    def test_basic_shift(self):
+        x = jnp.arange(8.0)
+        out = from_thread_or_const(x, delta=1, const=-1.0)
+        np.testing.assert_array_equal(out, [-1, 0, 1, 2, 3, 4, 5, 6])
+
+    def test_negative_delta(self):
+        # Paper Fig. 1c: conv reads tid+1 -> delta = -1.
+        x = jnp.arange(5.0)
+        out = from_thread_or_const(x, delta=-1, const=0.0)
+        np.testing.assert_array_equal(out, [1, 2, 3, 4, 0])
+
+    def test_zero_delta_identity(self):
+        x = jnp.arange(4.0)
+        np.testing.assert_array_equal(from_thread_or_const(x, 0, 9.0), x)
+
+    def test_window_boundary(self):
+        # Window 4: thread 4 must NOT receive from thread 3.
+        x = jnp.arange(8.0)
+        out = from_thread_or_const(x, delta=1, const=-1.0, window=4)
+        np.testing.assert_array_equal(out, [-1, 0, 1, 2, -1, 4, 5, 6])
+
+    def test_multidim_values(self):
+        x = jnp.arange(12.0).reshape(6, 2)
+        out = from_thread_or_const(x, delta=2, const=0.0)
+        np.testing.assert_array_equal(out[:2], np.zeros((2, 2)))
+        np.testing.assert_array_equal(out[2:], np.asarray(x[:4]))
+
+    def test_axis_argument(self):
+        x = jnp.arange(12.0).reshape(2, 6)
+        out = from_thread_or_const(x, delta=1, const=0.0, axis=1)
+        expected = np.stack([ref_elevator(np.asarray(x[i]), 1, 0.0) for i in range(2)])
+        np.testing.assert_array_equal(out, expected)
+
+    @given(
+        n=st.integers(2, 64),
+        delta=st.integers(-70, 70),
+        window=st.one_of(st.none(), st.integers(1, 16)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_matches_paper_pseudocode(self, n, delta, window, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(n).astype(np.float32)
+        out = from_thread_or_const(jnp.asarray(x), delta, 7.5, window=window)
+        np.testing.assert_array_equal(np.asarray(out), ref_elevator(x, delta, 7.5, window))
+
+    def test_2d_tid_space(self):
+        # Paper Fig. 2b: fromThreadOrMem<{0,-1}> style 2D deltas.
+        x = jnp.arange(12.0).reshape(3, 4)
+        out = from_thread_or_const_nd(x, deltas=(1, 0), const=-1.0)
+        np.testing.assert_array_equal(np.asarray(out[0]), [-1, -1, -1, -1])
+        np.testing.assert_array_equal(out[1:], np.asarray(x[:2]))
+
+    def test_2d_both_axes(self):
+        x = jnp.arange(16.0).reshape(4, 4)
+        out = from_thread_or_const_nd(x, deltas=(1, 1), const=0.0)
+        ref = np.zeros((4, 4), np.float32)
+        ref[1:, 1:] = np.asarray(x)[:3, :3]
+        np.testing.assert_array_equal(out, ref)
+
+    def test_tag_value_identity(self):
+        x = jnp.arange(4.0)
+        np.testing.assert_array_equal(tag_value(x, "sum"), x)
+        np.testing.assert_array_equal(tag_value(x), x)
+
+    def test_jit_compatible(self):
+        f = jax.jit(lambda x: from_thread_or_const(x, 3, 0.0, window=8))
+        x = jnp.arange(16.0)
+        np.testing.assert_array_equal(f(x), ref_elevator(np.asarray(x), 3, 0.0, 8))
+
+
+class TestCascade:
+    def test_paper_example_delta18(self):
+        # Paper Fig. 10a: delta 18, buffer 16 -> nodes [16, 2].
+        plan = plan_cascade(18)
+        assert plan.node_deltas == (16, 2)
+        assert not plan.spilled
+
+    def test_small_delta_single_node(self):
+        assert plan_cascade(5).node_deltas == (5,)
+        assert plan_cascade(16).node_deltas == (16,)
+
+    def test_node_count_formula(self):
+        # ceil(delta / token_buffer) nodes (paper §4.3).
+        import math
+
+        for delta in [1, 15, 16, 17, 31, 32, 33, 100]:
+            plan = plan_cascade(delta)
+            assert plan.num_nodes == math.ceil(delta / TOKEN_BUFFER_SIZE)
+
+    def test_spill_when_exceeding_nodes(self):
+        plan = plan_cascade(16 * 17, max_nodes=16)
+        assert plan.spilled
+
+    def test_negative_delta(self):
+        plan = plan_cascade(-18)
+        assert plan.node_deltas == (-16, -2)
+
+    @given(
+        n=st.integers(4, 128),
+        delta=st.integers(1, 90),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_cascade_equals_single_shift(self, n, delta, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        direct = from_thread_or_const(x, delta, 3.0)
+        chained, plan = cascaded_from_thread_or_const(x, delta, 3.0, token_buffer=8)
+        np.testing.assert_array_equal(np.asarray(direct), np.asarray(chained))

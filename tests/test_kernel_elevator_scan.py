@@ -1,0 +1,99 @@
+"""elevator_scan Pallas kernel vs pure-jnp oracle: shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.elevator_scan.kernel import elevator_scan_pallas
+from repro.kernels.elevator_scan.ops import elevator_scan
+from repro.kernels.elevator_scan.ref import elevator_scan_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.bfloat16:
+        return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32).astype(dtype)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+SHAPES = [
+    (1, 8, 128),
+    (2, 64, 128),
+    (1, 256, 256),
+    (3, 128, 384),
+    (2, 512, 128),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_matches_ref(shape, dtype):
+    b, t, d = shape
+    seed = hash((shape, str(dtype))) % 2**31
+    rng = np.random.default_rng(seed)
+    # Decay in (0.5, 1] — the RG-LRU/RWKV regime.
+    a = jnp.asarray(rng.uniform(0.5, 1.0, shape).astype(np.float32)).astype(dtype)
+    x = _rand(shape, dtype, seed + 1)
+    chunk = min(t, 64)
+    out = elevator_scan_pallas(a, x, chunk=chunk, interpret=True)
+    ref = elevator_scan_ref(a, x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_h0_carry_boundary():
+    b, t, d = 2, 64, 128
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    out = elevator_scan_pallas(a, x, h0, chunk=16, interpret=True)
+    ref = elevator_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_chunk_invariance():
+    # The VMEM carry must make chunking invisible (cascade correctness).
+    b, t, d = 1, 256, 128
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(0.6, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    outs = [
+        np.asarray(elevator_scan_pallas(a, x, chunk=c, interpret=True))
+        for c in (8, 32, 128, 256)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_sum_special_case():
+    # Paper Fig. 6: a == 1 -> prefix sum.
+    b, t, d = 1, 128, 128
+    x = jnp.ones((b, t, d), jnp.float32)
+    out = elevator_scan_pallas(jnp.ones_like(x), x, chunk=32, interpret=True)
+    expected = np.broadcast_to(np.arange(1.0, t + 1)[None, :, None], (b, t, d))
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-6)
+
+
+def test_ops_dispatch_matches():
+    b, t, d = 2, 128, 128
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    jnp_path = elevator_scan(a, x, h0, use_kernel=False)
+    kernel_path = elevator_scan(a, x, h0, use_kernel=True)
+    ref = elevator_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(jnp_path), np.asarray(ref), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(kernel_path), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+def test_rejects_bad_chunk():
+    a = jnp.ones((1, 96, 128))
+    with pytest.raises(ValueError):
+        elevator_scan_pallas(a, a, chunk=64, interpret=True)

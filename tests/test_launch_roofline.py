@@ -1,0 +1,159 @@
+"""Tests for the roofline extraction machinery and launch helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.launch import roofline as R
+from repro.launch.inputs import batch_specs, cell_is_applicable, decode_specs
+from repro.model.lowering import scan_unroll, unrolled_cost_mode
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestCollectiveParsing:
+    HLO = """
+  %ag = bf16[16,512]{1,0} all-gather(%p0), channel_id=1
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+  %ars = (f32[64]{0}, f32[32]{0}) all-reduce-start(%a, %b), channel_id=2
+  %ard = (f32[64]{0}, f32[32]{0}) all-reduce-done(%ars)
+  %cp = bf16[8,128]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %a2a = f32[4,256]{1,0} all-to-all(%z), dimensions={0}
+  %rs = bf16[32]{0} reduce-scatter(%w), to_apply=%add
+  %unrelated = f32[2,2]{1,0} add(%u, %v)
+"""
+
+    def test_bytes_and_counts(self):
+        out = R.parse_collective_bytes(self.HLO)
+        assert out["all-gather"]["bytes"] == 16 * 512 * 2
+        assert out["all-gather"]["count"] == 1
+        # all-reduce: plain (128*4) + start tuple (64+32)*4; done skipped.
+        assert out["all-reduce"]["bytes"] == 128 * 4 + (64 + 32) * 4
+        assert out["all-reduce"]["count"] == 2
+        assert out["collective-permute"]["bytes"] == 8 * 128 * 2
+        assert out["all-to-all"]["bytes"] == 4 * 256 * 4
+        assert out["reduce-scatter"]["bytes"] == 32 * 2
+        assert out["total_bytes"] == sum(
+            out[k]["bytes"] for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+        )
+
+    def test_real_compiled_module(self):
+        # End-to-end: a psum over 1 device still emits an all-reduce line.
+        def f(x):
+            return x * 2.0
+
+        txt = jax.jit(f).lower(jnp.ones(4)).compile().as_text()
+        out = R.parse_collective_bytes(txt)
+        assert out["total_bytes"] == 0
+
+
+class TestRooflineTerms:
+    def test_terms_and_dominant(self):
+        t = R.roofline_terms(
+            {"flops": 197e12, "bytes accessed": 819e9 * 2},
+            {"total_bytes": 50e9 * 4 * 3},
+        )
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(2.0)
+        assert t.collective_s == pytest.approx(3.0)
+        assert t.dominant == "collective"
+        assert t.bound_time_s == pytest.approx(3.0)
+
+    def test_model_flops_train_vs_prefill(self):
+        cfg = get_config("minitron-8b")
+        tr = R.model_flops(cfg, SHAPES["train_4k"])
+        pf = R.model_flops(cfg, SHAPES["prefill_32k"])
+        # train ~3x forward per token; prefill has more tokens here.
+        assert tr > 0 and pf > 0
+        # 6ND dominates: check within 2x of hand calc.
+        hand = 6 * cfg.param_count() * 4096 * 256
+        assert 0.5 < tr / hand < 2.0
+
+    def test_decode_flops_scale_with_active_params(self):
+        moe = get_config("qwen3-moe-235b-a22b")
+        f_moe = R.model_flops(moe, SHAPES["decode_32k"])
+        # decode flops = ACTIVE params (22B, not 235B) + attention reads.
+        expected = (
+            2.0 * moe.active_param_count() * 128
+            + R._decode_attention_flops(moe, 32768, 128)
+        )
+        assert f_moe == pytest.approx(expected, rel=1e-6)
+        assert f_moe < 2.0 * moe.param_count() * 128  # far below total-params cost
+
+    def test_analytic_bytes_positive_all_modes(self):
+        cfg = get_config("gemma3-1b")
+        for shape_name, mode in [
+            ("train_4k", "train"), ("prefill_32k", "prefill"),
+            ("decode_32k", "decode"), ("long_500k", "decode_long"),
+        ]:
+            b = R.analytic_hbm_bytes(cfg, SHAPES[shape_name], 256, mode)
+            assert b > 0
+
+    def test_local_window_caps_decode_kv_bytes(self):
+        g = get_config("gemma3-1b")       # 5:1 local:global, window 1024
+        m = get_config("minitron-8b")     # all full attention
+        bg = R.analytic_hbm_bytes(g, SHAPES["long_500k"], 256, "decode")
+        # For gemma3, local layers read only window-sized KV.
+        full_equiv = 26 * SHAPES["long_500k"].seq_len * g.num_kv_heads * g.head_dim * 2 * 2 / 256
+        assert bg < full_equiv  # ring buffers beat full caches
+
+
+class TestInputs:
+    def test_applicability_skips(self):
+        ok, _ = cell_is_applicable(get_config("minitron-8b"), "long_500k")
+        assert not ok
+        ok, _ = cell_is_applicable(get_config("rwkv6-1.6b"), "long_500k")
+        assert ok
+        ok, _ = cell_is_applicable(get_config("minitron-8b"), "train_4k")
+        assert ok
+
+    def test_batch_specs_no_allocation(self):
+        cfg = get_config("qwen2-vl-7b")
+        specs, pspecs = batch_specs(cfg, SHAPES["train_4k"])
+        assert isinstance(specs["tokens"], jax.ShapeDtypeStruct)
+        assert specs["tokens"].shape == (256, 4096)
+        assert specs["frontend_embeds"].shape == (256, 1024, 3584)
+        assert specs["positions"].shape == (3, 256, 4096)
+        assert set(pspecs) == set(specs)
+
+    def test_decode_specs_state_structure(self):
+        cfg = get_config("gemma3-1b")
+        state, tok, ln, extras, _ = decode_specs(cfg, SHAPES["decode_32k"])
+        assert tok.shape == (128, 1)
+        # Local layers get ring buffers (window), global layers full length.
+        leaves = jax.tree.leaves(state)
+        shapes = {l.shape for l in leaves if hasattr(l, "shape") and len(l.shape) == 5}
+        seq_lens = {s[3] for s in shapes}
+        assert 1024 in seq_lens and 32768 in seq_lens
+
+
+class TestUnrollFlag:
+    def test_flag_toggles(self):
+        assert scan_unroll() == 1
+        with unrolled_cost_mode():
+            assert scan_unroll() is True
+        assert scan_unroll() == 1
+
+    def test_unrolled_flops_scale_with_scan_length(self):
+        # NOTE: fresh closures per mode — jit caches by function identity,
+        # which is why the dry-run builds new step closures per lower.
+        def make():
+            def f(x):
+                def body(c, _):
+                    return c @ c * 0.5, None
+
+                out, _ = jax.lax.scan(body, x, None, length=8, unroll=scan_unroll())
+                return out
+
+            return f
+
+        x = jnp.eye(64)
+        rolled = jax.jit(make()).lower(x).compile().cost_analysis()["flops"]
+        with unrolled_cost_mode():
+            unrolled = jax.jit(make()).lower(x).compile().cost_analysis()["flops"]
+        assert unrolled > 4 * rolled  # 8 bodies vs 1 visited

@@ -1,0 +1,266 @@
+"""Tests: optimizer, compression, data pipeline, checkpoint, fault tolerance,
+training convergence on a tiny model, serve engine."""
+
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, batch_specs, make_batch
+from repro.ft.watchdog import (
+    NodeFailure,
+    StepTimeout,
+    StepWatchdog,
+    StragglerDetector,
+    run_with_restarts,
+)
+from repro.model import model as M
+from repro.optim import adamw
+from repro.optim.compression import (
+    compressed_gradients,
+    compression_ratio,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+from repro.serve.engine import ServeEngine
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw.init_state(params)
+        cfg = adamw.AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=0, total_steps=200)
+        loss = lambda p: jnp.sum(jnp.square(p["w"]))
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.apply_updates(params, g, state, cfg)
+        assert float(loss(params)) < 1e-2
+
+    def test_clip_norm(self):
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init_state(params)
+        cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        g = {"w": jnp.full(4, 100.0)}
+        _, _, metrics = adamw.apply_updates(params, g, state, cfg)
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+        assert float(adamw.schedule(cfg, jnp.int32(0))) == 0.0
+        assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+class TestCompression:
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 3000))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_roundtrip_error_bounded(self, seed, n):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32)) * 10
+        q, scale, shape, pad = quantize_int8(x)
+        deq = dequantize_int8(q, scale, shape, pad)
+        # Error bounded by half a quantization bucket per element.
+        bound = np.repeat(np.asarray(scale), 256)[: x.size].reshape(x.shape) * 0.5 + 1e-6
+        assert np.all(np.abs(np.asarray(deq - x)) <= bound)
+
+    def test_error_feedback_preserves_sum(self):
+        # With error feedback, the *accumulated* compressed gradient tracks
+        # the accumulated true gradient (residual never lost).
+        rng = np.random.default_rng(0)
+        g_true = [jnp.asarray(rng.standard_normal(512).astype(np.float32)) for _ in range(20)]
+        ef = init_error_feedback({"w": g_true[0]})
+        total_c = jnp.zeros(512)
+        for g in g_true:
+            gc, ef = compressed_gradients({"w": g}, ef)
+            total_c = total_c + gc["w"]
+        total_t = sum(g_true)
+        # Outstanding residual is the only difference.
+        np.testing.assert_allclose(
+            np.asarray(total_c + ef.residual["w"]), np.asarray(total_t), rtol=1e-4, atol=1e-4
+        )
+
+    def test_ratio_beats_bf16(self):
+        grads = {"w": jnp.zeros((1024, 1024), jnp.float32)}
+        assert compression_ratio(grads) < 0.27  # ~4x vs fp32
+
+
+class TestDataPipeline:
+    def test_deterministic_and_step_keyed(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        b1 = make_batch(cfg, 7)
+        b2 = make_batch(cfg, 7)
+        b3 = make_batch(cfg, 8)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=50, seq_len=16, global_batch=2)
+        b = make_batch(cfg, 0)
+        np.testing.assert_array_equal(
+            np.asarray(b["labels"])[:, :-1], np.asarray(b["tokens"])[:, 1:]
+        )
+
+    def test_specs_match_batch(self):
+        cfg = DataConfig(vocab_size=50, seq_len=16, global_batch=2)
+        specs = batch_specs(cfg)
+        b = make_batch(cfg, 0)
+        for k in specs:
+            assert specs[k].shape == b[k].shape
+            assert specs[k].dtype == b[k].dtype
+
+    def test_tokens_in_vocab(self):
+        cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=4)
+        b = make_batch(cfg, 3)
+        assert int(b["tokens"].min()) >= 0
+        assert int(b["tokens"].max()) < 100
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.int32(7)}}
+        ckpt.save(tmp_path, 5, tree)
+        restored, step = ckpt.restore(tmp_path, tree)
+        assert step == 5
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        assert int(restored["b"]["c"]) == 7
+
+    def test_latest_pointer_and_multiple_steps(self, tmp_path):
+        tree = {"a": jnp.zeros(2)}
+        ckpt.save(tmp_path, 1, tree)
+        ckpt.save(tmp_path, 2, {"a": jnp.ones(2)})
+        assert ckpt.latest_step(tmp_path) == 2
+        restored, step = ckpt.restore(tmp_path, tree)
+        assert step == 2
+        np.testing.assert_array_equal(restored["a"], np.ones(2))
+
+    def test_async_saver(self, tmp_path):
+        saver = ckpt.AsyncSaver()
+        saver.save_async(tmp_path, 3, {"x": jnp.full(4, 2.0)})
+        saver.wait()
+        restored, _ = ckpt.restore(tmp_path, {"x": jnp.zeros(4)})
+        np.testing.assert_array_equal(restored["x"], np.full(4, 2.0))
+
+    def test_elastic_restore_new_sharding(self, tmp_path):
+        # Save unsharded, restore with an explicit (trivial) NamedSharding —
+        # the elastic path used when the mesh changes between jobs.
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        ckpt.save(tmp_path, 1, tree, mesh_shape=(2, 2))
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        shardings = {"w": NamedSharding(mesh, P("data", "model"))}
+        restored, _ = ckpt.restore(tmp_path, tree, shardings=shardings)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+        assert restored["w"].sharding == shardings["w"]
+
+
+class TestFaultTolerance:
+    def test_watchdog_timeout(self):
+        import time
+
+        wd = StepWatchdog(timeout_s=0.2)
+        with pytest.raises(StepTimeout):
+            wd.run(lambda: time.sleep(2.0))
+
+    def test_watchdog_passthrough(self):
+        wd = StepWatchdog(timeout_s=5.0)
+        assert wd.run(lambda: 42) == 42
+
+    def test_straggler_detector(self):
+        det = StragglerDetector(threshold=2.0)
+        for _ in range(10):
+            det.observe(1.0)
+        assert det.observe(5.0) is True
+        assert det.observe(1.0) is False
+        assert det.flagged == 1
+
+    def test_restart_loop_survives_injected_failures(self, tmp_path):
+        """Node failure at steps 7 and 13 -> restore -> completes 20 steps."""
+        saved = {}
+
+        def make_state():
+            return {"x": jnp.float32(0.0)}
+
+        fail_at = {7, 13}
+        seen_failures = []
+
+        def step_fn(state, step):
+            if step in fail_at and step not in seen_failures:
+                seen_failures.append(step)
+                raise NodeFailure(f"injected at {step}")
+            return {"x": state["x"] + 1.0}
+
+        def save_fn(state, step):
+            saved["state"], saved["step"] = state, step
+
+        def restore_fn():
+            if "state" not in saved:
+                return None
+            return saved["state"], saved["step"]
+
+        state, stats = run_with_restarts(
+            make_state=make_state, step_fn=step_fn, save_fn=save_fn,
+            restore_fn=restore_fn, num_steps=20, checkpoint_every=5,
+            max_restarts=5,
+        )
+        assert stats["restarts"] == 2
+        assert float(state["x"]) == 20.0  # no lost or repeated steps
+
+
+class TestTrainingEndToEnd:
+    def test_loss_decreases_tiny_model(self):
+        cfg = get_config("qwen2-0.5b").reduced()
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, num_layers=2, microbatch=2)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=1)
+        state = init_train_state(cfg, jax.random.key(0))
+        step_fn = jax.jit(make_train_step(
+            cfg, adamw.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+        ))
+        losses = []
+        for i in range(30):
+            state, metrics = step_fn(state, make_batch(dcfg, i))
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+    def test_microbatch_equals_full_batch_grads(self):
+        cfg = get_config("qwen2-0.5b").reduced()
+        import dataclasses
+
+        cfg1 = dataclasses.replace(cfg, num_layers=1, microbatch=1)
+        cfg4 = dataclasses.replace(cfg, num_layers=1, microbatch=4)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+        batch = make_batch(dcfg, 0)
+        s1 = init_train_state(cfg1, jax.random.key(0))
+        s4 = TrainState(s1.params, s1.opt, s1.ef)
+        n1, m1 = make_train_step(cfg1)(s1, batch)
+        n4, m4 = make_train_step(cfg4)(s4, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+        l1 = jax.tree.leaves(n1.params)
+        l4 = jax.tree.leaves(n4.params)
+        for a, b in zip(l1, l4):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+class TestServeEngine:
+    def test_generate_shapes_and_determinism(self):
+        cfg = get_config("gemma3-1b").reduced()
+        params = M.init_params(cfg, jax.random.key(0))
+        eng = ServeEngine(cfg, params, max_len=64)
+        prompts = jnp.asarray([[3, 5, 7], [11, 2, 9]], jnp.int32)
+        out1 = eng.generate(prompts, num_new_tokens=4)
+        out2 = eng.generate(prompts, num_new_tokens=4)
+        assert out1.shape == (2, 7)
+        np.testing.assert_array_equal(out1, out2)
+        assert int(out1.max()) < cfg.vocab_size
