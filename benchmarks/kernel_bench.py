@@ -4,6 +4,9 @@ Wall-clock timings on this container compare the *jnp* paths (the Pallas
 kernels themselves are TPU-target; interpret mode is a correctness tool,
 not a performance proxy).  Derived column reports the kernel's modeled
 VMEM-resident traffic advantage.
+
+``main()`` prints the CSV block and returns the rows so
+:mod:`benchmarks.run` can emit them machine-readable (BENCH_kernels.json).
 """
 
 from __future__ import annotations
@@ -14,24 +17,56 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import from_thread_or_const
+from repro.core.cost_model import wkv_traffic
+from repro.core.scratchpad import stage_through_memory
 from repro.kernels.elevator_scan.ops import elevator_scan
 from repro.kernels.elevator_scan.ref import elevator_scan_ref
 from repro.kernels.local_attention.ref import attention_blockwise, attention_ref
 from repro.kernels.token_shift.ops import token_shift
-from repro.core import from_thread_or_const
+from repro.kernels.wkv.ops import wkv_fused
+from repro.kernels.wkv.ref import wkv_chunked_ref
 
 
 def _time(fn, *args, reps=10):
+    # Best-of-reps: the minimum is the noise-robust estimator on a shared
+    # container (mean-of-reps flips close comparisons under load).
     f = jax.jit(fn)
     jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
-def main():
+def _time_interleaved(fns, *args, reps=8):
+    """Best-of-reps for several functions with rounds interleaved
+    (A,B,...,A,B,...) so load drift on the container hits every candidate
+    equally — the fair way to compare near-identical workloads."""
+    jitted = [jax.jit(fn) for fn in fns]
+    for f in jitted:
+        jax.block_until_ready(f(*args))
+    best = [float("inf")] * len(jitted)
+    for _ in range(reps):
+        for i, f in enumerate(jitted):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
+
+
+def wkv_unfused(r, k, v, w, u, h0, chunk: int = 64):
+    """The pre-kernel WKV path rendered as Fig. 1b: the oracle's own math
+    with every per-chunk intermediate (decay tensors, scores, scan carry)
+    staged through a materialized buffer behind a barrier before its
+    consumer reads it — the scratchpad pattern the fused kernel
+    eliminates."""
+    return wkv_chunked_ref(r, k, v, w, u, h0, chunk, stage=stage_through_memory)
+
+
+def main() -> list[dict]:
     rng = np.random.default_rng(0)
     rows = []
 
@@ -56,6 +91,31 @@ def main():
     t_unf = _time(unfused, x, w)
     rows.append(("token_shift", t_fused, f"unfused_us={t_unf:.0f}"))
 
+    # wkv: fused dispatch vs the Fig. 1b staged path, (B=4, T=2048, D=256).
+    bh, hh, tw, dh = 4, 4, 2048, 64            # D = hh * dh = 256
+    chunk = 64
+    rw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
+    kw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
+    vw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
+    ww = jnp.asarray(rng.uniform(0.9, 0.999, (bh, hh, tw, dh)).astype(np.float32))
+    uw = jnp.asarray(rng.standard_normal((hh, dh)).astype(np.float32))
+    h0w = jnp.zeros((bh, hh, dh, dh), jnp.float32)
+    t_wkv, t_wkv_chunked, t_wkv_staged = _time_interleaved(
+        [
+            lambda *args: wkv_fused(*args, chunk=chunk, use_kernel=False)[0],
+            lambda *args: wkv_chunked_ref(*args, chunk=chunk)[0],
+            lambda *args: wkv_unfused(*args, chunk=chunk)[0],
+        ],
+        rw, kw, vw, ww, uw, h0w,
+    )
+    _, shared_cost, direct_cost = wkv_traffic(bh, hh, tw, dh, chunk)
+    energy_red = shared_cost.energy_pj / max(direct_cost.energy_pj, 1e-9)
+    rows.append((
+        "wkv_fused", t_wkv,
+        f"chunked_us={t_wkv_chunked:.0f} staged_us={t_wkv_staged:.0f} "
+        f"modeled_energy_reduction={energy_red:.2f}",
+    ))
+
     # blockwise attention vs full-matrix reference (memory win).
     q = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)).astype(np.float32))
     t_block = _time(
@@ -72,6 +132,10 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    return [
+        {"name": name, "us_per_call": round(us, 1), "derived": derived}
+        for name, us, derived in rows
+    ]
 
 
 if __name__ == "__main__":

@@ -2,13 +2,20 @@
 
   rodinia      -> paper Fig. 11 (speedup) + Fig. 12 (energy) analogs
   delta_cdf    -> paper Fig. 5 (ΔTID CDF)
-  kernel_bench -> per-kernel microbenchmarks
+  kernel_bench -> per-kernel microbenchmarks (also written to
+                  BENCH_kernels.json at the repo root as the
+                  machine-readable perf baseline for future PRs)
   roofline     -> §Roofline table from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV blocks.
 """
 
 from __future__ import annotations
+
+import json
+import pathlib
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
 
 
 def main() -> None:
@@ -21,7 +28,12 @@ def main() -> None:
     delta_cdf.main()
     print()
     print("== kernel microbenchmarks ==")
-    kernel_bench.main()
+    kernel_rows = kernel_bench.main()
+    BENCH_JSON.write_text(
+        json.dumps({"schema": "kernel_bench.v1", "rows": kernel_rows}, indent=2)
+        + "\n"
+    )
+    print(f"(wrote {BENCH_JSON})")
     print()
     print("== roofline table (from dry-run artifacts) ==")
     try:

@@ -46,12 +46,16 @@ def _compose(first, second):
 def linear_scan(a: jax.Array, b: jax.Array, *, axis: int = 0, h0=None) -> jax.Array:
     """h[t] = a[t]*h[t-1] + b[t] with h[-1] = h0 (default 0). Log-depth."""
     if h0 is not None:
-        # Fold h0 into the first step: h[0] = a[0]*h0 + b[0].
+        # Fold h0 into the first step: h[0] = a[0]*h0 + b[0].  Promote to
+        # jax arrays first so the fold is unconditional — the old
+        # ``hasattr(b, "at")`` guard silently dropped h0 for numpy inputs.
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
         h0 = jnp.asarray(h0, b.dtype)
         idx = [slice(None)] * b.ndim
         idx[axis] = slice(0, 1)
         first = tuple(idx)
-        b = b.at[first].set(a[first] * h0 + b[first]) if hasattr(b, "at") else b
+        b = b.at[first].set(a[first] * h0 + b[first])
     _, h = jax.lax.associative_scan(lambda x, y: _compose(x, y), (a, b), axis=axis)
     return h
 
@@ -117,7 +121,7 @@ def device_linear_scan_carry(a_seg: jax.Array, b_seg: jax.Array, axis_name: str)
     each a device-space elevator shift with the identity segment (1, 0) as
     the boundary constant.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = device_comm.axis_size(axis_name)
     acc_a, acc_b = a_seg, b_seg
     d = 1
     while d < n:

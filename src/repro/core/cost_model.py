@@ -161,6 +161,44 @@ def stencil2d_traffic(h: int, w: int, pts: int = 5, itemsize: int = 4):
     )
 
 
+def wkv_traffic(b: int, h: int, t: int, dh: int, chunk: int = 64,
+                itemsize: int = 4):
+    """RWKV6 WKV recurrence (decay-ratio chunked form), per forward pass.
+
+    naive:  sequential scan — the (dh, dh) state round-trips through memory
+            every token (the decode pattern applied to a full sequence).
+    shared: the chunked jnp path — inputs load once, but the per-chunk decay
+            tensors (logw, cum_incl, cum_excl, r_dec, k_inv, k_rem), the
+            masked score matrix, the intra/inter partial outputs and the
+            ``lax.scan`` state carry all stage through HBM (Fig. 1b).
+    direct: the fused Pallas kernel — the state lives in a VMEM scratch and
+            the decay tensors never leave the fabric (kernels/wkv).
+    """
+    n = max(1, t // chunk)
+    state = dh * dh
+    # Unavoidable I/O: r/k/v/w in, out + final state + h0.
+    io = b * h * (4 * t * dh + t * dh + 2 * state) * itemsize
+    naive = Traffic(dram_bytes=io + b * h * t * 2 * state * itemsize)
+    staged = b * h * (
+        6 * t * dh            # logw, cum_incl, cum_excl, r_dec, k_inv, k_rem
+        + n * chunk * chunk   # masked intra-chunk scores
+        + 2 * t * dh          # intra, inter partial outputs
+        + 2 * n * state       # scan carry: S written + read per chunk
+    ) * itemsize
+    shared = Traffic(dram_bytes=io, scratchpad_bytes=2 * staged)
+    direct = Traffic(dram_bytes=io, fabric_bytes=staged)
+    # Scores + intra matmul + inter read + state update, 2 flops per MAC.
+    flops = b * h * (
+        2 * 2 * n * chunk * chunk * dh   # scores + scores @ v
+        + 2 * 2 * t * dh * dh            # inter read + k^T v update
+    )
+    return (
+        KernelCost("wkv", "naive", naive, flops),
+        KernelCost("wkv", "shared", shared, flops),
+        KernelCost("wkv", "direct", direct, flops),
+    )
+
+
 def reduce_traffic(n: int, itemsize: int = 4):
     """Tree reduction: shared version stages each level through scratchpad;
     direct uses windowed elevator edges per level."""

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "axis_size",
     "device_shift",
     "halo_exchange",
     "ring_pass",
@@ -24,8 +25,10 @@ __all__ = [
 ]
 
 
-def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+def axis_size(axis_name: str) -> int:
+    # jax 0.4.x has no jax.lax.axis_size; psum of a literal 1 over the named
+    # axis folds to the static mesh size inside shard_map.
+    return jax.lax.psum(1, axis_name)
 
 
 def device_shift(x: jax.Array, axis_name: str, delta: int = 1, fill=0.0) -> jax.Array:
@@ -34,7 +37,7 @@ def device_shift(x: jax.Array, axis_name: str, delta: int = 1, fill=0.0) -> jax.
     Boundary shards (no producer) receive ``fill`` — the elevator constant C.
     Exactly one collective-permute; O(|x|) bytes point-to-point on ICI.
     """
-    n = _axis_size(axis_name)
+    n = axis_size(axis_name)
     if delta == 0:
         return x
     perm = [(i, i + delta) for i in range(n) if 0 <= i + delta < n]
@@ -51,7 +54,7 @@ def ring_pass(x: jax.Array, axis_name: str, delta: int = 1) -> jax.Array:
     Used by ring-style forwarding (e.g. rotating K/V or operand tiles so a
     value loaded from HBM once visits every shard — the eLDST pattern).
     """
-    n = _axis_size(axis_name)
+    n = axis_size(axis_name)
     perm = [(i, (i + delta) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis_name, perm)
 
@@ -105,7 +108,7 @@ def seq_carry_scan(
     :mod:`repro.core.chunk_scan` for the log-depth alternative when the
     recurrence is associative.
     """
-    n = _axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
 
     init = jax.tree.map(jnp.asarray, carry_init)

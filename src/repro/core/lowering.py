@@ -1,0 +1,36 @@
+"""Lowering-mode flags.
+
+``unrolled_cost_mode``: XLA's HLO cost analysis visits a while-loop body
+ONCE, so any ``lax.scan`` hides (trip_count - 1)/trip_count of its FLOPs/
+bytes from ``cost_analysis()``.  For roofline extraction the dry-run lowers
+a reduced-depth model with every scan unrolled (this flag), then
+extrapolates exactly: cost(2 periods) - cost(1 period) = per-period cost.
+Normal execution keeps scans rolled (compile time, code size).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Flags(threading.local):
+    unroll = False
+
+
+_FLAGS = _Flags()
+
+
+@contextlib.contextmanager
+def unrolled_cost_mode():
+    prev = _FLAGS.unroll
+    _FLAGS.unroll = True
+    try:
+        yield
+    finally:
+        _FLAGS.unroll = prev
+
+
+def scan_unroll() -> bool | int:
+    """Value to pass as ``lax.scan(..., unroll=)``."""
+    return True if _FLAGS.unroll else 1

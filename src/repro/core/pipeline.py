@@ -46,7 +46,7 @@ def pipeline_apply(
     hand-off is one collective-permute per tick — point-to-point, no global
     barrier, exactly the paper's producer/consumer firing rule.
     """
-    n_stages = jax.lax.axis_size(axis_name)
+    n_stages = jax.lax.psum(1, axis_name)
     stage = jax.lax.axis_index(axis_name)
     n_micro = x_micro.shape[0]
     ticks = n_micro + n_stages - 1
@@ -77,8 +77,10 @@ def pipeline_apply(
     init_in = jnp.zeros(buf_shape, x_micro.dtype)
     init_out = jnp.zeros_like(x_micro)
     # The loop-carried buffers become shard-varying after the first ppermute;
-    # mark them varying up front so the scan carry types are stable.
-    init_in = jax.lax.pvary(init_in, (axis_name,))
-    init_out = jax.lax.pvary(init_out, (axis_name,))
+    # mark them varying up front so the scan carry types are stable.  jax
+    # 0.4.x has no pvary (no varying-axis types either) — identity there.
+    pvary = getattr(jax.lax, "pvary", lambda v, _axes: v)
+    init_in = pvary(init_in, (axis_name,))
+    init_out = pvary(init_out, (axis_name,))
     (_, outputs), _ = jax.lax.scan(tick, (init_in, init_out), jnp.arange(ticks))
     return outputs

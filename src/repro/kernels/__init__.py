@@ -9,6 +9,7 @@ from repro.kernels.local_attention.ops import flash_attention
 from repro.kernels.matmul_fwd.ops import matmul_fwd
 from repro.kernels.stencil2d.ops import stencil2d
 from repro.kernels.token_shift.ops import token_shift
+from repro.kernels.wkv.ops import wkv_fused
 
 __all__ = [
     "elevator_scan",
@@ -16,4 +17,5 @@ __all__ = [
     "matmul_fwd",
     "stencil2d",
     "token_shift",
+    "wkv_fused",
 ]

@@ -1,0 +1,133 @@
+"""Shared carry/grid machinery for the chunked sequence kernels.
+
+Every sequence kernel in this package (``elevator_scan``, ``token_shift``,
+``wkv``) runs the same schedule, which is the TPU rendering of the paper's
+elevator-node chain (§4.1/§4.3):
+
+* grid ``(batch, ..., seq_chunks)`` with the sequence axis iterating
+  *fastest*, so a VMEM scratch is private to its leading-grid tile;
+* the inter-chunk carry lives in that scratch — the elevator *token buffer*
+  for a Δ=1 edge over chunk space — and is reset at chunk 0 to the boundary
+  constant ``C`` (``h0`` or zeros);
+* at the end of each grid step the carry is retagged TID → TID+1 by
+  overwriting the scratch with this chunk's exit state.
+
+The helpers here centralize that contract plus the chunk/d_block validation
+and interpret-mode plumbing the per-kernel ``ops.py`` wrappers share.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "on_tpu",
+    "interpret_default",
+    "reset_carry",
+    "shift_rows",
+    "cumsum_rows",
+    "validate_divisible",
+    "pick_d_block",
+    "largest_divisor_chunk",
+    "halving_chunk",
+]
+
+
+# --------------------------------------------------------------------------
+# Backend dispatch (ops.py plumbing)
+# --------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    """True when the Pallas kernels compile for real TPU hardware."""
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Interpret-mode default: real lowering on TPU, interpreter elsewhere
+    (this container) so the kernels stay testable everywhere."""
+    return not on_tpu()
+
+
+# --------------------------------------------------------------------------
+# In-kernel carry helpers
+# --------------------------------------------------------------------------
+
+def reset_carry(carry_ref, value=None, *, seq_axis: int = 2) -> None:
+    """Reset the VMEM carry scratch at chunk 0 (the elevator boundary).
+
+    ``value`` is the boundary constant ``C`` (e.g. ``h0``); ``None`` means
+    zeros.  ``seq_axis`` names the grid axis that walks the sequence chunks
+    — it must be the fastest-iterating axis so the scratch never leaks
+    across (batch, head/d_block) tiles.
+    """
+    s = pl.program_id(seq_axis)
+
+    @pl.when(s == 0)
+    def _init():
+        if value is None:
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+        else:
+            carry_ref[...] = value.astype(carry_ref.dtype)
+
+
+def shift_rows(v: jax.Array, delta: int, fill: float) -> jax.Array:
+    """Shift rows toward higher indices by ``delta``, filling with ``fill``.
+
+    The in-VMEM rendering of an elevator shift: rows are sublanes, so this
+    lowers to sublane rotates plus a select against the boundary constant.
+    """
+    rolled = jnp.roll(v, delta, axis=0)
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+    return jnp.where(idx >= delta, rolled, jnp.asarray(fill, v.dtype))
+
+
+def cumsum_rows(v: jax.Array, rows: int) -> jax.Array:
+    """Inclusive cumulative sum along axis 0 via log-depth doubling.
+
+    Hillis–Steele on the VPU — ``ceil(log2(rows))`` shift+add steps, the
+    same forwarding network :func:`shift_rows` models, with 0 as the
+    identity boundary constant.  Used instead of ``jnp.cumsum`` inside
+    kernels so the lowering stays a static chain of vector ops.
+    """
+    acc = v
+    shift = 1
+    while shift < rows:
+        acc = acc + shift_rows(acc, shift, 0.0)
+        shift *= 2
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Chunk / block validation (kernel wrappers)
+# --------------------------------------------------------------------------
+
+def validate_divisible(name: str, total: int, block: int) -> None:
+    if block < 1 or total % block:
+        raise ValueError(f"{name}={total} not divisible by block={block}")
+
+
+def pick_d_block(d: int, cap: int = 512) -> int:
+    """Feature-axis block: lane-friendly cap, must tile D exactly."""
+    d_block = min(d, cap)
+    if d % d_block:
+        raise ValueError(f"D={d} not divisible by d_block={d_block}")
+    return d_block
+
+
+def largest_divisor_chunk(t: int, chunk: int) -> int:
+    """Largest c <= min(chunk, t) with t % c == 0 (always exists: c=1)."""
+    for c in range(min(chunk, t), 0, -1):
+        if t % c == 0:
+            return c
+    return 1
+
+
+def halving_chunk(t: int, chunk: int) -> int:
+    """Shrink ``chunk`` by halving until it divides ``t`` (power-of-two
+    kernels: preserves two-ness when the caller starts from a power of two)."""
+    c = min(chunk, t)
+    while c > 1 and t % c:
+        c //= 2
+    return c

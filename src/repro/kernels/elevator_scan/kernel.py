@@ -27,6 +27,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import (
+    pick_d_block,
+    reset_carry,
+    shift_rows,
+    validate_divisible,
+)
+
 
 def _chunk_scan_doubling(a: jax.Array, x: jax.Array, chunk: int):
     """Inclusive scan of h=a*h_prev+x along axis 0 via log-depth doubling.
@@ -40,30 +47,19 @@ def _chunk_scan_doubling(a: jax.Array, x: jax.Array, chunk: int):
     while shift < chunk:
         # Compose with the segment ending `shift` rows above (elevator shift
         # with identity constant: a=1, b=0 injected at the boundary).
-        a_shift = _shift_rows(acc, shift, fill=1.0)
-        h_shift = _shift_rows(h, shift, fill=0.0)
+        a_shift = shift_rows(acc, shift, fill=1.0)
+        h_shift = shift_rows(h, shift, fill=0.0)
         h = acc * h_shift + h
         acc = acc * a_shift
         shift *= 2
     return acc, h
 
 
-def _shift_rows(v: jax.Array, delta: int, fill: float) -> jax.Array:
-    """Shift rows toward higher indices by delta, filling with `fill`."""
-    rolled = jnp.roll(v, delta, axis=0)
-    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
-    return jnp.where(idx >= delta, rolled, jnp.asarray(fill, v.dtype))
-
-
 def elevator_scan_kernel(
     a_ref, x_ref, h0_ref, out_ref, carry_ref, *, chunk: int, n_chunks: int
 ):
-    s = pl.program_id(2)
-
     # Boundary: chunk 0 receives the elevator constant h0.
-    @pl.when(s == 0)
-    def _init():
-        carry_ref[...] = h0_ref[...].astype(jnp.float32)
+    reset_carry(carry_ref, h0_ref[...], seq_axis=2)
 
     a = a_ref[0].astype(jnp.float32)   # (chunk, d_block)
     x = x_ref[0].astype(jnp.float32)
@@ -89,13 +85,10 @@ def elevator_scan_pallas(
 ) -> jax.Array:
     """h[t] = a[t]*h[t-1] + x[t] scanned along axis 1 of (B, T, D) arrays."""
     b, t, d = x.shape
-    if t % chunk:
-        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    validate_divisible("T", t, chunk)
     if chunk & (chunk - 1):
         raise ValueError(f"chunk must be a power of two, got {chunk}")
-    d_block = min(d, 512)
-    if d % d_block:
-        raise ValueError(f"D={d} not divisible by d_block={d_block}")
+    d_block = pick_d_block(d)
     n_chunks = t // chunk
     if h0 is None:
         h0 = jnp.zeros((b, d), x.dtype)

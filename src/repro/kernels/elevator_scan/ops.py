@@ -7,17 +7,12 @@ is used for speed-sensitive callers (models) via ``use_kernel=False``.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import halving_chunk, interpret_default, on_tpu
 from repro.kernels.elevator_scan.kernel import elevator_scan_pallas
 from repro.kernels.elevator_scan.ref import elevator_scan_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 # NOTE: intentionally un-jitted — called under the model's outer jit; a
@@ -36,14 +31,10 @@ def elevator_scan(
     associative scan elsewhere (identical math, validated against each other
     in tests/test_kernel_elevator_scan.py).
     """
-    kernel = _on_tpu() if use_kernel is None else use_kernel
+    kernel = on_tpu() if use_kernel is None else use_kernel
     if kernel:
-        interpret = not _on_tpu()
-        t = x.shape[1]
-        c = min(chunk, t)
-        while t % c:
-            c //= 2
-        return elevator_scan_pallas(a, x, h0, chunk=c, interpret=interpret)
+        c = halving_chunk(x.shape[1], chunk)
+        return elevator_scan_pallas(a, x, h0, chunk=c, interpret=interpret_default())
 
     # Log-depth path (jnp): chunk-free associative scan in float32.
     a32, x32 = a.astype(jnp.float32), x.astype(jnp.float32)

@@ -40,7 +40,7 @@ def flash_attention(
             interpret=not _on_tpu(),
         )
     if q.shape[2] > 1024 or k.shape[2] > 1024:
-        from repro.model.lowering import scan_unroll
+        from repro.core.lowering import scan_unroll
 
         # Under unrolled-cost lowering, bigger blocks keep the HLO compact.
         block = 2048 if scan_unroll() is True else 512

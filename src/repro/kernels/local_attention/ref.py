@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from repro.model.lowering import scan_unroll
+from repro.core.lowering import scan_unroll
 
 
 def attention_ref(

@@ -24,15 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import pick_d_block, reset_carry, validate_divisible
+
 MAX_TAPS = 8  # hardware-aligned token-buffer budget (paper uses 16)
 
 
 def token_shift_kernel(x_ref, w_ref, out_ref, carry_ref, *, taps: int, chunk: int):
-    s = pl.program_id(2)
-
-    @pl.when(s == 0)
-    def _init():
-        carry_ref[...] = jnp.zeros_like(carry_ref)
+    reset_carry(carry_ref, seq_axis=2)
 
     x = x_ref[0].astype(jnp.float32)          # (chunk, d_block)
     w = w_ref[...].astype(jnp.float32)        # (taps, d_block)
@@ -69,13 +67,10 @@ def token_shift_pallas(
     if w.shape[1] != d:
         raise ValueError(f"w dim {w.shape[1]} != D {d}")
     chunk = min(chunk, t)
-    if t % chunk:
-        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    validate_divisible("T", t, chunk)
     if chunk < taps:
         raise ValueError(f"chunk {chunk} must be >= taps {taps}")
-    d_block = min(d, 512)
-    if d % d_block:
-        raise ValueError(f"D={d} not divisible by d_block={d_block}")
+    d_block = pick_d_block(d)
 
     grid = (b, d // d_block, t // chunk)
     kernel = functools.partial(token_shift_kernel, taps=taps, chunk=chunk)

@@ -2,24 +2,18 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import interpret_default, on_tpu
 from repro.kernels.token_shift.kernel import token_shift_pallas
 from repro.kernels.token_shift.ref import token_shift_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 # NOTE: intentionally un-jitted — called under the model's outer jit; a
 # nested jit would cache across the scan_unroll() lowering flag.
 def token_shift(x: jax.Array, w: jax.Array, *, use_kernel: bool | None = None):
     """out[b,t,d] = Σ_k w[k,d]·x[b,t-k,d] (causal, zero-padded history)."""
-    kernel = _on_tpu() if use_kernel is None else use_kernel
+    kernel = on_tpu() if use_kernel is None else use_kernel
     if kernel:
-        return token_shift_pallas(x, w, interpret=not _on_tpu())
+        return token_shift_pallas(x, w, interpret=interpret_default())
     return token_shift_ref(x, w)

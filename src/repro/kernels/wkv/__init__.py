@@ -1,0 +1,22 @@
+"""Fused WKV elevator kernel (RWKV6 matrix-state recurrence).
+
+Paper mapping (§4.3, token buffers): the WKV state ``S`` — a (Dh × Dh)
+matrix per (batch, head) — is the loop-carried value of a Δ=1 elevator
+edge over sequence-chunk space.  The Pallas kernel keeps it in a
+``pltpu.VMEM((dh, dh))`` scratch: each grid step along the chunk axis
+withdraws the predecessor's token (the entering state), fuses the
+intra-chunk decay-ratio attention with the inter-chunk state read and the
+state update, and deposits the exit state for its successor.  ``h0`` is
+the ``fromThreadOrConst`` boundary constant withdrawn by chunk 0.  The
+jnp fallback (``ref.wkv_chunked_ref``) computes identical math but stages
+every per-chunk intermediate and the scan carry through HBM — the
+Fig. 1b scratchpad pattern the kernel eliminates.
+
+Ships as kernel.py (pallas_call), ops.py (dispatch + chunk policy) and
+ref.py (sequential + chunked oracles), like the other kernel packages.
+"""
+
+from repro.kernels.wkv.ops import wkv_fused
+from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+
+__all__ = ["wkv_fused", "wkv_chunked_ref", "wkv_sequential_ref"]

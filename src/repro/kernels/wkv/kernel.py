@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused RWKV6 WKV recurrence, matrix state in VMEM.
+
+The heaviest loop-carried value in this repo is the WKV state — a
+(Dh × Dh) matrix per (batch, head) forwarded from chunk to chunk.  This
+kernel is the paper's §4.3 construction applied to it:
+
+* the ``pltpu.VMEM((dh, dh))`` scratch is the elevator *token buffer* of a
+  Δ=1 edge over chunk space: chunk ``s`` deposits its exit state, chunk
+  ``s+1`` (the next grid step on the same (batch, head) tile) withdraws it
+  — a point-to-point hand-off that never touches HBM, where the jnp
+  fallback's ``lax.scan`` carry round-trips every chunk (Fig. 1b);
+* ``h0`` is the boundary constant ``C`` of ``fromThreadOrConst``: chunk 0
+  withdraws it instead of a predecessor token;
+* the per-chunk decay tensors (``r_dec``, ``k_inv``, ``k_rem``, cumulative
+  log-decays) and the masked score matrix are fused into the same pass —
+  in-fabric values on the VPU/MXU, never materialized.
+
+Grid: ``(batch, head, seq_chunks)``, sequence fastest, so the scratch is
+private per (batch, head) and reset at chunk 0 — the same schedule as
+``elevator_scan`` / ``token_shift`` (see :mod:`repro.kernels.common`).
+
+Recurrence (per head, f32 accumulation):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t · (S_{t-1} + u k_t^T v_t)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cumsum_rows, reset_carry, validate_divisible
+
+
+def wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+    *, chunk: int,
+):
+    # Boundary: chunk 0 withdraws the constant h0 instead of a token.
+    reset_carry(s_ref, h0_ref[0, 0], seq_axis=2)
+
+    r = r_ref[0, 0].astype(jnp.float32)        # (chunk, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)           # (dh,)
+
+    # Decay-ratio factorization, all in registers/VMEM (nothing staged):
+    #   cum_excl[t] = sum_{s<t} log w_s, w_total = prod over the chunk.
+    logw = jnp.log(jnp.clip(w, 1e-8, 1.0))
+    cum_incl = cumsum_rows(logw, chunk)
+    cum_excl = cum_incl - logw
+    w_total = jnp.exp(cum_incl[-1])            # (dh,)
+
+    r_dec = r * jnp.exp(cum_excl)              # r_t * D_{<t}
+    k_inv = k * jnp.exp(-cum_incl)             # k_s / D_{<=s}
+    k_rem = k * jnp.exp(cum_incl[-1:] - cum_incl)  # k_s * D_{(s..L]}
+
+    # Intra-chunk attention: A[t,s] = (r_t D_{<t}) · (k_s / D_{<=s}), s < t,
+    # plus the u-bonus on the diagonal.
+    scores = jax.lax.dot_general(
+        r_dec, k_inv, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # (chunk, chunk)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(si < ti, scores, 0.0)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (chunk, 1)
+    intra = jnp.dot(scores, v, preferred_element_type=jnp.float32) + bonus * v
+
+    # Inter-chunk read: withdraw the entering state token from VMEM.
+    S = s_ref[...]                              # (dh, dh)
+    inter = jnp.dot(r_dec, S, preferred_element_type=jnp.float32)
+    out_ref[0, 0] = (intra + inter).astype(out_ref.dtype)
+
+    # State update + token hand-off (retag TID -> TID + 1).
+    S_new = S * w_total[:, None] + jax.lax.dot_general(
+        k_rem, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s_ref[...] = S_new
+    s_out_ref[0, 0] = S_new                     # last grid step wins
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Fused WKV sweep.  r/k/v/w: (B, H, T, Dh); u: (H, Dh);
+    h0: (B, H, Dh, Dh).  Returns (out (B,H,T,Dh) r.dtype, S (B,H,Dh,Dh) f32).
+    """
+    b, h, t, dh = r.shape
+    validate_divisible("T", t, chunk)
+    if u.shape != (h, dh):
+        raise ValueError(f"u shape {u.shape} != {(h, dh)}")
+    if h0.shape != (b, h, dh, dh):
+        raise ValueError(f"h0 shape {h0.shape} != {(b, h, dh, dh)}")
+    n_chunks = t // chunk
+
+    grid = (b, h, n_chunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, dh), lambda bi, hi, si: (bi, hi, si, 0))
+    state_spec = pl.BlockSpec((1, 1, dh, dh), lambda bi, hi, si: (bi, hi, 0, 0))
+    kernel = functools.partial(wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec,  # r
+            seq_spec,  # k
+            seq_spec,  # v
+            seq_spec,  # w
+            pl.BlockSpec((1, dh), lambda bi, hi, si: (hi, 0)),  # u
+            state_spec,  # h0
+        ],
+        out_specs=(seq_spec, state_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, t, dh), r.dtype),
+            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, h0)

@@ -1,0 +1,73 @@
+"""Public op: fused WKV recurrence with automatic backend dispatch.
+
+``use_kernel=None`` auto-selects (the ``elevator_scan`` convention): the
+Pallas kernel on TPU, the jnp chunked reference elsewhere.  ``use_kernel``
+is the escape hatch — ``False`` forces the jnp path (models on CPU),
+``True`` forces the kernel (interpret mode off-TPU, for parity tests).
+
+Chunk policy: ``chunk`` is a *request*.  When it does not divide T the
+dispatch picks the largest valid divisor and warns — never the old silent
+``chunk = t`` rewrite, which could blow the decay-ratio exponent range for
+long odd sequences (``wkv_chunked_ref`` itself now raises instead).
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, largest_divisor_chunk, on_tpu
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+
+
+def resolve_chunk(t: int, chunk: int) -> int:
+    """Largest divisor of ``t`` no larger than ``chunk``; warns on adjust."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    c = largest_divisor_chunk(t, chunk)
+    if c != min(chunk, t):
+        warnings.warn(
+            f"wkv chunk={chunk} does not divide T={t}; using chunk={c}",
+            stacklevel=3,
+        )
+    return c
+
+
+# NOTE: intentionally un-jitted — called under the model's outer jit; a
+# nested jit would cache across the scan_unroll() lowering flag.
+def wkv_fused(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 64,
+    use_kernel: bool | None = None,
+):
+    """RWKV6 WKV:  S_t = diag(w_t) S_{t-1} + k_t^T v_t;
+    o_t = r_t · (S_{t-1} + u k_t^T v_t).
+
+    r/k/v/w: (B, H, T, Dh); u: (H, Dh); h0: (B, H, Dh, Dh) or None (zeros).
+    Returns ``(out, S_out)`` with ``out`` (B,H,T,Dh) in ``r.dtype`` and
+    ``S_out`` (B,H,Dh,Dh) in float32.
+    """
+    b, h, t, dh = r.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+
+    kernel = on_tpu() if use_kernel is None else use_kernel
+    c = resolve_chunk(t, chunk)
+    if kernel:
+        return wkv_pallas(
+            r, k, v, w, u, h0, chunk=c, interpret=interpret_default()
+        )
+    if t == 1:
+        out, S = wkv_sequential_ref(r, k, v, w, u, h0)
+    else:
+        out, S = wkv_chunked_ref(r, k, v, w, u, h0, chunk=c)
+    return out.astype(r.dtype), S

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the fused WKV kernel.
+
+The RWKV6 (Finch) WKV recurrence, per head with ``Dh``-dim keys/values:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S is Dh x Dh)
+    o_t = r_t · (S_{t-1} + u k_t^T v_t)
+
+* :func:`wkv_sequential_ref` — O(T) sequential scan, the ground-truth
+  oracle for tests.
+* :func:`wkv_chunked_ref` — the decay-ratio chunked form (two einsums per
+  chunk + a ``lax.scan`` carry over chunk space).  Mathematically the
+  schedule the Pallas kernel fuses, but staged through HBM: the six
+  per-chunk decay tensors (logw, cum_incl, cum_excl, r_dec, k_inv, k_rem),
+  the masked score matrix and the scan carry all materialize — the paper's
+  Fig. 1b scratchpad pattern.  Kept as the
+  dispatch fallback for non-TPU backends and as a second oracle.
+
+Unlike the pre-kernel ``_wkv_chunked`` this raises on ``t % chunk != 0``
+instead of silently rewriting ``chunk = t``; the dispatch layer
+(:mod:`repro.kernels.wkv.ops`) picks the largest valid divisor explicitly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowering import scan_unroll
+from repro.kernels.common import validate_divisible
+
+
+def wkv_sequential_ref(r, k, v, w, u, h0):
+    """O(T) sequential oracle.  All of r/k/v/w: (B, H, T, Dh); u: (H, Dh);
+    h0: (B, H, Dh, Dh).  Returns (out (B,H,T,Dh) f32, S_out (B,H,Dh,Dh) f32).
+    """
+    b, h, t, dh = r.shape
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u.reshape(1, h, dh, 1) * kv)
+        S = S * wt[..., None] + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0) for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 2), S
+
+
+def wkv_chunked_ref(r, k, v, w, u, h0, chunk: int, stage=None):
+    """Chunked WKV (decay-ratio trick).  Same signature/returns as
+    :func:`wkv_sequential_ref` plus the static ``chunk``; ``chunk`` must
+    divide T exactly (no silent fallback — see module docstring).
+
+    ``stage`` is an identity hook applied to every per-chunk intermediate
+    (default: no-op).  Benchmarks pass
+    :func:`repro.core.scratchpad.stage_through_memory` to materialize the
+    Fig. 1b scratchpad staging this math implies, keeping the staged
+    baseline and the oracle one implementation.
+    """
+    if stage is None:
+        stage = lambda x: x  # noqa: E731
+    b, h, t, dh = r.shape
+    validate_divisible("T", t, chunk)
+    n = t // chunk
+    rc = r.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    kc = k.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    vc = v.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+    wc = w.reshape(b, h, n, chunk, dh).astype(jnp.float32)
+
+    logw = stage(jnp.log(jnp.clip(wc, 1e-8, 1.0)))
+    # cum_excl[t] = sum_{s<t} log w_s  (decay applied to the entering state).
+    cum_incl = stage(jnp.cumsum(logw, axis=3))
+    cum_excl = stage(cum_incl - logw)
+    # w_total = prod over the chunk.
+    w_total = jnp.exp(cum_incl[:, :, :, -1])                  # (B,H,N,Dh)
+
+    r_dec = stage(rc * jnp.exp(cum_excl))                     # r_t * D_{<t}
+    k_inv = stage(kc * jnp.exp(-cum_incl))                    # k_s / D_{<=s}
+    k_rem = stage(kc * jnp.exp(cum_incl[:, :, :, -1:] - cum_incl))  # k_s * D_{(s..L]}
+
+    # Intra-chunk pair scores: A[t,s] = (r_t D_{<t}) · (k_s / D_{<=s}), s < t.
+    scores = jnp.einsum("bhntd,bhnsd->bhnts", r_dec, k_inv)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = stage(jnp.where(mask, scores, 0.0))
+    u_b = u.reshape(1, h, 1, 1, dh)
+    bonus = jnp.einsum("bhntd,bhntd->bhnt", rc * u_b, kc)     # u-weighted diag
+    intra = jnp.einsum("bhnts,bhnsd->bhntd", scores, vc)
+    intra = stage(intra + bonus[..., None] * vc)
+
+    def chunk_step(S, inputs):
+        r_d, k_r, v_, wt = inputs                             # (B,H,chunk,Dh)...
+        inter = jnp.einsum("bhtd,bhde->bhte", r_d, S)
+        S_new = stage(S * wt[..., None] + jnp.einsum("bhtd,bhte->bhde", k_r, v_))
+        return S_new, inter
+
+    per_chunk = (
+        jnp.moveaxis(r_dec, 2, 0),
+        jnp.moveaxis(k_rem, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+        jnp.moveaxis(w_total, 2, 0),
+    )
+    S_out, inter = jax.lax.scan(
+        chunk_step, h0.astype(jnp.float32), per_chunk, unroll=scan_unroll()
+    )
+    inter = jnp.moveaxis(inter, 0, 2)                         # (B,H,N,chunk,Dh)
+
+    out = (intra + inter).reshape(b, h, t, dh)
+    return out, S_out

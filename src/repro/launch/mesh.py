@@ -20,17 +20,22 @@ ICI_BW_PER_LINK = 50e9          # B/s per link (~45-50 GB/s on v5e)
 ICI_LINKS = 4                   # 2D torus: 4 links per chip
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: 0.4.x has no axis_types kwarg (auto
+    mode is the only behavior there, which is what we ask for anyway)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (requires >= data*model host devices)."""
-    from jax.sharding import AxisType
-
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

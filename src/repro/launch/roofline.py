@@ -40,6 +40,15 @@ _OP_RE = re.compile(
 )
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: 0.4.x
+    returns a one-dict-per-program list, newer jax a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     if dims:

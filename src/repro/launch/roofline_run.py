@@ -25,7 +25,7 @@ import dataclasses
 from repro.configs.base import SHAPES
 from repro.configs.registry import get_config
 from repro.launch import roofline as R
-from repro.model.lowering import unrolled_cost_mode
+from repro.core.lowering import unrolled_cost_mode
 from repro.model.transformer import plan_groups
 
 
@@ -38,7 +38,7 @@ def _measure(arch, shape_name, cfg, *, multi_pod=False):
             arch, shape_name, multi_pod=multi_pod, cfg_override=cfg
         )
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = R.cost_analysis_dict(compiled)
     coll = R.parse_collective_bytes(compiled.as_text())
     out = {
         "flops": float(ca.get("flops", 0.0)),

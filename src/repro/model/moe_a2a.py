@@ -30,7 +30,7 @@ def apply_moe_a2a(
 ):
     """Inside shard_map: x (b_loc, t, d) local tokens; experts sharded on
     ``axis_name``.  Router/expert weights arrive as their local shards."""
-    tp = jax.lax.axis_size(axis_name)
+    tp = jax.lax.psum(1, axis_name)
     b, t, d = x.shape
     e = cfg.num_experts
     k = cfg.num_experts_per_tok
@@ -105,7 +105,7 @@ def apply_moe_sharded(params, x: jax.Array, cfg):
     no mesh/model axis is active (CPU tests) or batch doesn't divide."""
     from functools import partial
 
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.model import moe as moe_mod
@@ -135,11 +135,20 @@ def apply_moe_sharded(params, x: jax.Array, cfg):
         "w_up": P("model", None, None),
         "w_down": P("model", None, None),
     }
+    import inspect
+
+    # check_vma (new jax) was called check_rep on 0.4.x; either way we opt
+    # out of replication checking (the a2a writes are deliberately uneven).
+    check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(shard_map).parameters
+        else "check_rep"
+    )
     f = shard_map(
         partial(apply_moe_a2a, cfg=cfg, axis_name="model"),
         mesh=mesh,
         in_specs=(param_specs, x_spec),
         out_specs=x_spec,
-        check_vma=False,
+        **{check_kw: False},
     )
     return f(params, x)

@@ -5,7 +5,8 @@ hand-off h[t-1] -> h[t] is literally ``fromThreadOrConst<h, Δ=1, C=h0>``
 (the paper's prefix-sum dataflow, Fig. 6), and the token-shift mixing of
 RWKV is ``fromThreadOrConst<x, Δ=1, C=0>``.  Sequence-chunked execution
 keeps the carries in VMEM (elevator token buffers) via the
-``elevator_scan`` / ``token_shift`` Pallas kernels.
+``elevator_scan`` / ``token_shift`` / ``wkv`` Pallas kernels — the last
+carrying the matrix-valued WKV state (Dh × Dh per head) across chunks.
 
 Decode is O(1) per token: the recurrent state *is* the entire context —
 which is why these archs run the long_500k shape.
@@ -17,10 +18,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from repro.model.lowering import scan_unroll
 
 from repro.kernels.elevator_scan.ops import elevator_scan
 from repro.kernels.token_shift.ops import token_shift
+from repro.kernels.wkv.ops import wkv_fused
+from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
 from repro.model.layers import init_rmsnorm, rms_norm
 from repro.model.sharding import constrain, gather_for_use
 
@@ -130,80 +132,13 @@ def _rwkv_mix(x, x_prev, mu_row):
     return x + (shifted - x) * mu_row
 
 
-def _wkv_chunked(r, k, v, w, u, h0, chunk: int):
-    """Chunked WKV: S_t = diag(w_t) S_{t-1} + k_t^T v_t;  o_t = r_t·(S + u k_t^T v_t).
-
-    All inputs (B, H, T, Dh); returns (out (B,H,T,Dh), S_out (B,H,Dh,Dh)).
-    Chunk carries S through a lax.scan — the elevator chain over chunk space.
-    Within a chunk, decay ratios turn the recurrence into two einsums
-    (intra-chunk "attention" + inter-chunk state read).
-    """
-    b, h, t, dh = r.shape
-    if t % chunk:
-        chunk = t  # fall back to a single chunk for odd lengths
-    n = t // chunk
-    rc = r.reshape(b, h, n, chunk, dh).astype(jnp.float32)
-    kc = k.reshape(b, h, n, chunk, dh).astype(jnp.float32)
-    vc = v.reshape(b, h, n, chunk, dh).astype(jnp.float32)
-    wc = w.reshape(b, h, n, chunk, dh).astype(jnp.float32)
-
-    logw = jnp.log(jnp.clip(wc, 1e-8, 1.0))
-    # cum_excl[t] = sum_{s<t} log w_s  (decay applied to the entering state).
-    cum_incl = jnp.cumsum(logw, axis=3)
-    cum_excl = cum_incl - logw
-    # w_total = prod over the chunk.
-    w_total = jnp.exp(cum_incl[:, :, :, -1])                  # (B,H,N,Dh)
-
-    r_dec = rc * jnp.exp(cum_excl)                            # r_t * D_{<t}
-    k_inv = kc * jnp.exp(-cum_incl)                           # k_s / D_{<=s}
-    k_rem = kc * jnp.exp(cum_incl[:, :, :, -1:] - cum_incl)   # k_s * D_{(s..L]}
-
-    # Intra-chunk pair scores: A[t,s] = (r_t D_{<t}) · (k_s / D_{<=s}), s < t.
-    scores = jnp.einsum("bhntd,bhnsd->bhnts", r_dec, k_inv)
-    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
-    scores = jnp.where(mask, scores, 0.0)
-    u_b = u.reshape(1, h, 1, 1, dh)
-    bonus = jnp.einsum("bhntd,bhntd->bhnt", rc * u_b, kc)     # u-weighted diag
-    intra = jnp.einsum("bhnts,bhnsd->bhntd", scores, vc)
-    intra = intra + bonus[..., None] * vc
-
-    def chunk_step(S, inputs):
-        r_d, k_r, v_, wt = inputs                             # (B,H,chunk,Dh)...
-        inter = jnp.einsum("bhtd,bhde->bhte", r_d, S)
-        S_new = S * wt[..., None] + jnp.einsum("bhtd,bhte->bhde", k_r, v_)
-        return S_new, inter
-
-    per_chunk = (
-        jnp.moveaxis(r_dec, 2, 0),
-        jnp.moveaxis(k_rem, 2, 0),
-        jnp.moveaxis(vc, 2, 0),
-        jnp.moveaxis(w_total, 2, 0),
-    )
-    S_out, inter = jax.lax.scan(
-        chunk_step, h0.astype(jnp.float32), per_chunk, unroll=scan_unroll()
-    )
-    inter = jnp.moveaxis(inter, 0, 2)                         # (B,H,N,chunk,Dh)
-
-    out = (intra + inter).reshape(b, h, t, dh)
-    return out, S_out
-
-
-def wkv_sequential_ref(r, k, v, w, u, h0):
-    """O(T) sequential oracle for the WKV recurrence (tests)."""
-    b, h, t, dh = r.shape
-    def step(S, inputs):
-        rt, kt, vt, wt = inputs
-        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
-        out = jnp.einsum("bhd,bhde->bhe", rt, S + u.reshape(1, h, dh, 1) * kv)
-        S = S * wt[..., None] + kv
-        return S, out
-    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0) for a in (r, k, v, w))
-    S, outs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
-    return jnp.moveaxis(outs, 0, 2), S
+# Back-compat aliases: the WKV math now lives with its Pallas kernel in
+# repro.kernels.wkv.ref (wkv_sequential_ref is re-exported above).
+_wkv_chunked = wkv_chunked_ref
 
 
 def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None,
-                     chunk: int = 16):
+                     chunk: int = 16, use_kernel: bool | None = None):
     """x: (B, T, D) -> ((B, T, D), new_state_or_None)."""
     b, t, d = x.shape
     h = d // RWKV_HEAD_DIM
@@ -227,7 +162,7 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
     v = xv @ gather_for_use(params["w_v"], ("embed", "heads_out"), gg)
     g = jax.nn.silu(xg @ gather_for_use(params["w_g"], ("embed", "heads_out"), gg))
     # Data-dependent decay in (0, 1): exp(-exp(...)) (Finch).  The logit is
-    # clamped so |log w| <= 4: the chunked ratio trick in _wkv_chunked holds
+    # clamped so |log w| <= 4: the decay-ratio trick (kernels/wkv) holds
     # per-chunk decay products in fp32, which stays finite iff
     # chunk * |log w| < ~80 (chunk=16 below -> max exponent 64).
     decay_logit = params["w_decay_base"] + (
@@ -247,13 +182,17 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
         if state is not None
         else jnp.zeros((b, h, dh, dh), jnp.float32)
     )
-    if t == 1:
-        out, S = wkv_sequential_ref(r_, k_, v_, w_, u, h0)
-    else:
-        out, S = _wkv_chunked(
-            r_.astype(jnp.float32), k_.astype(jnp.float32),
-            v_.astype(jnp.float32), w_.astype(jnp.float32), u, h0, chunk
-        )
+    # Fused WKV elevator kernel: the (Dh, Dh) state rides a VMEM carry.
+    # Default is the jnp chunked path even on TPU — the kernel is
+    # forward-only (no custom VJP yet; ROADMAP) and this function must stay
+    # differentiable for training.  Inference callers opt in with
+    # use_kernel=True; decode t=1 always takes the sequential oracle.
+    out, S = wkv_fused(
+        r_.astype(jnp.float32), k_.astype(jnp.float32),
+        v_.astype(jnp.float32), w_.astype(jnp.float32), u, h0,
+        chunk=chunk,
+        use_kernel=False if (t == 1 or use_kernel is None) else use_kernel,
+    )
 
     out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)
     out = rms_norm(params["out_norm"], out, cfg.norm_eps) * g

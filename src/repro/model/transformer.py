@@ -15,7 +15,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from repro.model.lowering import scan_unroll
+from repro.core.lowering import scan_unroll
 
 from repro.model import attention as attn_mod
 from repro.model import moe as moe_mod

@@ -24,7 +24,7 @@ def make_prefill_step(cfg):
     processed sequentially (a ``lax.scan``), bounding live activation /
     MoE-dispatch memory — sequences are independent, so this is exact.
     """
-    from repro.model.lowering import scan_unroll
+    from repro.core.lowering import scan_unroll
 
     def prefill_step(params, tokens, **kw):
         from repro.model.sharding import _CTX

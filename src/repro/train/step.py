@@ -14,7 +14,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from repro.model.lowering import scan_unroll
+from repro.core.lowering import scan_unroll
 
 from repro.model import model as M
 from repro.model.sharding import constrain

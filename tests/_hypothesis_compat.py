@@ -1,0 +1,57 @@
+"""Optional-hypothesis guard for the property-based tests.
+
+The container does not ship ``hypothesis``.  A module-level hard import
+would make pytest fail *collection* for the whole file, taking every
+plain unit test in it down too.  This shim degrades gracefully: when
+hypothesis is available the real ``given``/``settings``/``st`` are
+re-exported; when it is missing, ``@given`` turns the property test into
+an individually-reported skip and the rest of the module keeps running.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        exists and returns an inert placeholder (never drawn from)."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            _strategy.__name__ = name
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # (*args, **kwargs) keeps pytest from treating the hypothesis
+            # parameters as fixture requests.
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax import shard_map
+from _hypothesis_compat import given, settings, st
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import (
@@ -65,6 +65,20 @@ class TestLinearScan:
         b = jnp.ones((4,))
         h = chunked_linear_scan(a, b, chunk=2, h0=8.0)
         np.testing.assert_allclose(np.asarray(h), ref_linear_scan(np.asarray(a), np.asarray(b), 8.0), rtol=1e-6)
+
+    def test_h0_fold_with_numpy_inputs(self):
+        # Regression: the old ``hasattr(b, "at")`` guard silently dropped h0
+        # when a/b arrived as numpy arrays.
+        rng = np.random.default_rng(3)
+        a = rng.uniform(0.5, 1.0, (6, 2)).astype(np.float32)
+        b = rng.standard_normal((6, 2)).astype(np.float32)
+        h = linear_scan(a, b, h0=2.5)
+        np.testing.assert_allclose(
+            np.asarray(h), ref_linear_scan(a, b, 2.5), rtol=2e-5, atol=2e-5
+        )
+        # And identically for jax inputs (both paths share the fold now).
+        h_jax = linear_scan(jnp.asarray(a), jnp.asarray(b), h0=2.5)
+        np.testing.assert_allclose(np.asarray(h_jax), np.asarray(h), rtol=1e-6)
 
 
 def _mesh1d(n, name="x"):

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.local_attention.kernel import flash_attention_pallas
+from repro.launch.roofline import cost_analysis_dict
 from repro.kernels.local_attention.ref import attention_ref
 
 jax.config.update("jax_platform_name", "cpu")
@@ -136,7 +137,7 @@ class TestBlockwise:
         # unrolled-cost mode (rolled scans hide trip counts from
         # cost_analysis) with fresh closures (jit caches by fn identity).
         from repro.kernels.local_attention.ref import attention_blockwise
-        from repro.model.lowering import unrolled_cost_mode
+        from repro.core.lowering import unrolled_cost_mode
         import jax
 
         def make(t, window):
@@ -148,7 +149,8 @@ class TestBlockwise:
                 )
 
             with unrolled_cost_mode():
-                return jax.jit(f).lower(q, k, v).compile().cost_analysis()["flops"]
+                compiled = jax.jit(f).lower(q, k, v).compile()
+                return cost_analysis_dict(compiled)["flops"]
 
         f_small = make(4096, 256)
         f_big = make(4096, 2048)

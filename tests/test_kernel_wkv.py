@@ -1,0 +1,173 @@
+"""Fused WKV Pallas kernel vs sequential/chunked oracles + shared carry helpers."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import (
+    cumsum_rows,
+    halving_chunk,
+    largest_divisor_chunk,
+    pick_d_block,
+    shift_rows,
+    validate_divisible,
+)
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ops import resolve_chunk, wkv_fused
+from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _wkv_inputs(b, h, t, dh, seed=0, zero_h0=False):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    # Decay in the Finch regime (|log w| small enough for the ratio trick).
+    w = jnp.asarray(rng.uniform(0.85, 0.999, (b, h, t, dh)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((h, dh)).astype(np.float32))
+    h0 = (
+        jnp.zeros((b, h, dh, dh), jnp.float32)
+        if zero_h0
+        else jnp.asarray(rng.standard_normal((b, h, dh, dh)).astype(np.float32))
+    )
+    return r, k, v, w, u, h0
+
+
+def _assert_wkv_close(got, want, tol=1e-4):
+    out_g, s_g = got
+    out_w, s_w = want
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_w),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s_g), np.asarray(s_w),
+                               rtol=tol, atol=tol)
+
+
+class TestWKVKernel:
+    def test_acceptance_shape_nonzero_h0(self):
+        # The acceptance-criteria shape: (B=2, H=4, T=256, Dh=64), h0 != 0.
+        args = _wkv_inputs(2, 4, 256, 64)
+        got = wkv_pallas(*args, chunk=32, interpret=True)
+        _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_decode_t1(self):
+        args = _wkv_inputs(2, 2, 1, 64, seed=1)
+        got = wkv_pallas(*args, chunk=1, interpret=True)
+        _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_multi_head_small(self):
+        args = _wkv_inputs(1, 8, 64, 16, seed=2)
+        got = wkv_pallas(*args, chunk=16, interpret=True)
+        _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_chunk_invariance(self):
+        # The VMEM state carry must make chunking invisible.
+        args = _wkv_inputs(1, 2, 128, 32, seed=3)
+        outs = [wkv_pallas(*args, chunk=c, interpret=True) for c in (8, 32, 128)]
+        for got in outs[1:]:
+            _assert_wkv_close(got, outs[0], tol=5e-5)
+
+    def test_kernel_matches_chunked_ref(self):
+        args = _wkv_inputs(2, 2, 128, 32, seed=4)
+        got = wkv_pallas(*args, chunk=32, interpret=True)
+        _assert_wkv_close(got, wkv_chunked_ref(*args, chunk=32))
+
+    def test_rejects_bad_chunk(self):
+        args = _wkv_inputs(1, 1, 96, 16, seed=5)
+        with pytest.raises(ValueError):
+            wkv_pallas(*args, chunk=64, interpret=True)
+
+
+class TestWKVDispatch:
+    def test_paths_agree(self):
+        args = _wkv_inputs(2, 2, 128, 32, seed=6)
+        jnp_path = wkv_fused(*args, chunk=32, use_kernel=False)
+        kernel_path = wkv_fused(*args, chunk=32, use_kernel=True)
+        ref = wkv_sequential_ref(*args)
+        _assert_wkv_close(jnp_path, ref)
+        _assert_wkv_close(kernel_path, ref)
+
+    def test_odd_length_sequence(self):
+        # T=17 (prime): dispatch must still be exact — the old code silently
+        # rewrote chunk = t; now the largest valid divisor is picked.
+        args = _wkv_inputs(1, 2, 17, 16, seed=7)
+        for use_kernel in (False, True):
+            got = wkv_fused(*args, chunk=64, use_kernel=use_kernel)
+            _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_chunk_adjust_warns(self):
+        # chunk=16 does not divide T=20 -> largest divisor (10) + warning.
+        with pytest.warns(UserWarning, match="does not divide"):
+            assert resolve_chunk(20, 16) == 10
+        args = _wkv_inputs(1, 1, 20, 16, seed=8)
+        with pytest.warns(UserWarning, match="does not divide"):
+            got = wkv_fused(*args, chunk=16, use_kernel=False)
+        _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_exact_chunk_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert resolve_chunk(256, 64) == 64
+            assert resolve_chunk(17, 64) == 17  # t < chunk: single chunk
+
+    def test_nonpositive_chunk_raises(self):
+        args = _wkv_inputs(1, 1, 8, 8, seed=11)
+        for bad in (0, -4):
+            with pytest.raises(ValueError, match="chunk must be >= 1"):
+                wkv_fused(*args, chunk=bad)
+
+    def test_ref_raises_on_indivisible(self):
+        args = _wkv_inputs(1, 1, 20, 16, seed=9)
+        with pytest.raises(ValueError):
+            wkv_chunked_ref(*args, chunk=16)
+
+    def test_decode_h0_defaults_to_zeros(self):
+        r, k, v, w, u, h0 = _wkv_inputs(1, 2, 1, 32, seed=10, zero_h0=True)
+        got = wkv_fused(r, k, v, w, u, None)
+        _assert_wkv_close(got, wkv_sequential_ref(r, k, v, w, u, h0))
+
+
+class TestSharedCarryHelpers:
+    def test_largest_divisor_chunk(self):
+        assert largest_divisor_chunk(256, 64) == 64
+        assert largest_divisor_chunk(20, 16) == 10
+        assert largest_divisor_chunk(17, 16) == 1
+        assert largest_divisor_chunk(17, 64) == 17
+
+    def test_halving_chunk(self):
+        assert halving_chunk(2048, 256) == 256
+        assert halving_chunk(96, 64) == 32
+        assert halving_chunk(8, 256) == 8
+
+    def test_validate_divisible(self):
+        validate_divisible("T", 128, 32)
+        with pytest.raises(ValueError):
+            validate_divisible("T", 128, 48)
+        with pytest.raises(ValueError):
+            validate_divisible("T", 128, 0)
+
+    def test_pick_d_block(self):
+        assert pick_d_block(256) == 256
+        assert pick_d_block(1024) == 512
+        with pytest.raises(ValueError):
+            pick_d_block(768)
+
+    def test_cumsum_rows_matches_cumsum(self):
+        rng = np.random.default_rng(0)
+        for rows in (1, 7, 8, 33):
+            x = jnp.asarray(rng.standard_normal((rows, 16)).astype(np.float32))
+            np.testing.assert_allclose(
+                np.asarray(cumsum_rows(x, rows)),
+                np.cumsum(np.asarray(x), axis=0),
+                rtol=1e-5, atol=1e-5,
+            )
+
+    def test_shift_rows(self):
+        x = jnp.arange(12.0).reshape(4, 3)
+        out = np.asarray(shift_rows(x, 2, -1.0))
+        np.testing.assert_array_equal(out[:2], -1.0)
+        np.testing.assert_array_equal(out[2:], np.asarray(x)[:2])

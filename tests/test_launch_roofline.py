@@ -9,7 +9,7 @@ from repro.configs.base import SHAPES
 from repro.configs.registry import get_config
 from repro.launch import roofline as R
 from repro.launch.inputs import batch_specs, cell_is_applicable, decode_specs
-from repro.model.lowering import scan_unroll, unrolled_cost_mode
+from repro.core.lowering import scan_unroll, unrolled_cost_mode
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -153,7 +153,7 @@ class TestUnrollFlag:
             return f
 
         x = jnp.eye(64)
-        rolled = jax.jit(make()).lower(x).compile().cost_analysis()["flops"]
+        rolled = R.cost_analysis_dict(jax.jit(make()).lower(x).compile())["flops"]
         with unrolled_cost_mode():
-            unrolled = jax.jit(make()).lower(x).compile().cost_analysis()["flops"]
+            unrolled = R.cost_analysis_dict(jax.jit(make()).lower(x).compile())["flops"]
         assert unrolled > 4 * rolled  # 8 bodies vs 1 visited

@@ -20,8 +20,11 @@ SCRIPT = textwrap.dedent(
     from repro.model.moe_a2a import apply_moe_sharded
     from repro.model.sharding import init_mk, make_rules, sharding_context
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:  # jax 0.4.x: auto mode is the only (and default) behavior
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = dataclasses.replace(
         get_config("dbrx-132b").reduced(),
         d_model=32, d_ff=64, num_experts=8, num_experts_per_tok=2,
@@ -66,7 +69,10 @@ def test_moe_a2a_matches_gather():
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True,
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # The script forces host-platform devices; skip TPU probing
+             # (30-retry metadata fetches) in containers with libtpu baked in.
+             "JAX_PLATFORMS": "cpu"},
         timeout=900,
     )
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-3000:]}"

@@ -19,7 +19,7 @@ SCRIPT = textwrap.dedent(
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.core import (
@@ -124,7 +124,10 @@ def test_multidevice_primitives():
         [sys.executable, "-c", SCRIPT],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
+             # The script forces host-platform devices; skip TPU probing
+             # (30-retry metadata fetches) in containers with libtpu baked in.
+             "JAX_PLATFORMS": "cpu"},
         timeout=600,
     )
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
