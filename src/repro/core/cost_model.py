@@ -199,6 +199,60 @@ def wkv_traffic(b: int, h: int, t: int, dh: int, chunk: int = 64,
     )
 
 
+def wkv_bwd_traffic(b: int, h: int, t: int, dh: int, chunk: int = 64,
+                    itemsize: int = 4):
+    """RWKV6 WKV backward pass (reverse chunk sweep), per step.
+
+    naive:  autodiff of the sequential scan — the (dh, dh) state is staged
+            per token by the forward and read back, and the adjoint state
+            round-trips per token.
+    shared: ``jax.grad`` of the chunked jnp path — the forward's residuals
+            (six decay tensors, masked scores, per-chunk scan states) are
+            staged to HBM and read back, and the backward's own
+            intermediates (decay/score adjoints, partial grads, the dS
+            scan carry) stage the same way (Fig. 1b, twice).
+    direct: the reverse Pallas kernel — decays and scores are *recomputed*
+            in-fabric from the primals; the only staged residual is the
+            per-chunk entry state ``s_hist`` (written by the training
+            forward, read by the reverse sweep), and the adjoint state dS
+            rides the VMEM carry.
+    """
+    n = max(1, t // chunk)
+    state = dh * dh
+    # Unavoidable grad I/O: primals + do + dS_out in, dr/dk/dv/dw/du/dh0 out.
+    io = b * h * (9 * t * dh + dh + 2 * state) * itemsize
+    naive = Traffic(dram_bytes=io + b * h * t * 4 * state * itemsize)
+    resid = b * h * (
+        6 * t * dh            # logw, cum_incl, cum_excl, r_dec, k_inv, k_rem
+        + n * chunk * chunk   # masked scores
+        + n * state           # per-chunk scan states (saved by lax.scan)
+    ) * itemsize
+    bwd_stage = b * h * (
+        6 * t * dh            # dscores operands + decay adjoints (dcum_*)
+        + n * chunk * chunk   # dscores
+        + 2 * t * dh          # intra/inter partial grads
+        + 2 * n * state       # dS carry: written + read per chunk
+    ) * itemsize
+    shared = Traffic(dram_bytes=io, scratchpad_bytes=2 * (resid + bwd_stage))
+    # s_hist is direct's one staged intermediate (written fwd, read bwd) —
+    # same tier as shared's residuals; everything else is recomputed
+    # in-fabric.
+    s_hist = b * h * 2 * n * state * itemsize
+    direct = Traffic(dram_bytes=io, scratchpad_bytes=s_hist,
+                     fabric_bytes=resid + bwd_stage)
+    # Recomputed scores/decays + 5 chunk-local (L,L) matmuls + 5 (dh, dh)
+    # state-sized matmuls per token block — ~2.5x the forward's MXU work.
+    flops = b * h * (
+        2 * 5 * n * chunk * chunk * dh
+        + 2 * 5 * t * dh * dh
+    )
+    return (
+        KernelCost("wkv_bwd", "naive", naive, flops),
+        KernelCost("wkv_bwd", "shared", shared, flops),
+        KernelCost("wkv_bwd", "direct", direct, flops),
+    )
+
+
 def reduce_traffic(n: int, itemsize: int = 4):
     """Tree reduction: shared version stages each level through scratchpad;
     direct uses windowed elevator edges per level."""

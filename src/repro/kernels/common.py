@@ -12,6 +12,14 @@ elevator-node chain (§4.1/§4.3):
 * at the end of each grid step the carry is retagged TID → TID+1 by
   overwriting the scratch with this chunk's exit state.
 
+Backward passes run the *reverse* sweep: the same grid, but the block
+index maps walk the sequence axis back-to-front (:func:`reversed_chunk`),
+so grid step 0 processes the **last** chunk and :func:`reset_carry` seeds
+the adjoint carry there (the reverse-boundary constant, e.g. ``dS_out``).
+The carry then rides the scratch toward chunk 0 — a Δ=-1 elevator edge.
+:func:`rev_cumsum_rows` is the suffix-sum twin of :func:`cumsum_rows` for
+the in-kernel adjoint of cumulative decays.
+
 The helpers here centralize that contract plus the chunk/d_block validation
 and interpret-mode plumbing the per-kernel ``ops.py`` wrappers share.
 """
@@ -26,8 +34,10 @@ __all__ = [
     "on_tpu",
     "interpret_default",
     "reset_carry",
+    "reversed_chunk",
     "shift_rows",
     "cumsum_rows",
+    "rev_cumsum_rows",
     "validate_divisible",
     "pick_d_block",
     "largest_divisor_chunk",
@@ -55,12 +65,17 @@ def interpret_default() -> bool:
 # --------------------------------------------------------------------------
 
 def reset_carry(carry_ref, value=None, *, seq_axis: int = 2) -> None:
-    """Reset the VMEM carry scratch at chunk 0 (the elevator boundary).
+    """Reset the VMEM carry scratch at grid step 0 (the elevator boundary).
 
     ``value`` is the boundary constant ``C`` (e.g. ``h0``); ``None`` means
     zeros.  ``seq_axis`` names the grid axis that walks the sequence chunks
     — it must be the fastest-iterating axis so the scratch never leaks
     across (batch, head/d_block) tiles.
+
+    For forward sweeps grid step 0 is chunk 0.  For reverse sweeps (block
+    index maps built with :func:`reversed_chunk`) grid step 0 is the *last*
+    chunk, so the same call seeds the adjoint carry at the reverse
+    boundary — pass the incoming output-cotangent block as ``value``.
     """
     s = pl.program_id(seq_axis)
 
@@ -72,15 +87,34 @@ def reset_carry(carry_ref, value=None, *, seq_axis: int = 2) -> None:
             carry_ref[...] = value.astype(carry_ref.dtype)
 
 
+def reversed_chunk(n_chunks: int):
+    """Block-index component for a back-to-front sweep over the seq axis.
+
+    ``reversed_chunk(n)(s) == n - 1 - s``: grid step ``s`` processes chunk
+    ``n-1-s``, so the grid still iterates ascending (Pallas requirement)
+    while the *blocks* walk last-to-first.  Combined with
+    :func:`reset_carry` this puts the carry reset at the last chunk —
+    the reverse elevator boundary.
+    """
+    return lambda s: n_chunks - 1 - s
+
+
 def shift_rows(v: jax.Array, delta: int, fill: float) -> jax.Array:
-    """Shift rows toward higher indices by ``delta``, filling with ``fill``.
+    """Shift rows by ``delta`` (toward higher indices when positive, lower
+    when negative), filling vacated rows with ``fill``.
 
     The in-VMEM rendering of an elevator shift: rows are sublanes, so this
     lowers to sublane rotates plus a select against the boundary constant.
+    Negative ``delta`` is the reverse-sweep direction (adjoint flows).
     """
+    rows = v.shape[0]
     rolled = jnp.roll(v, delta, axis=0)
     idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
-    return jnp.where(idx >= delta, rolled, jnp.asarray(fill, v.dtype))
+    if delta >= 0:
+        keep = idx >= delta
+    else:
+        keep = idx < rows + delta
+    return jnp.where(keep, rolled, jnp.asarray(fill, v.dtype))
 
 
 def cumsum_rows(v: jax.Array, rows: int) -> jax.Array:
@@ -95,6 +129,23 @@ def cumsum_rows(v: jax.Array, rows: int) -> jax.Array:
     shift = 1
     while shift < rows:
         acc = acc + shift_rows(acc, shift, 0.0)
+        shift *= 2
+    return acc
+
+
+def rev_cumsum_rows(v: jax.Array, rows: int) -> jax.Array:
+    """Inclusive *suffix* sum along axis 0: out[s] = sum_{t >= s} v[t].
+
+    The reverse-sweep twin of :func:`cumsum_rows` — the same Hillis–Steele
+    doubling with negative shifts.  This is the in-kernel adjoint of a
+    cumulative sum: if ``y = cumsum(x)`` then ``dx = rev_cumsum(dy)``,
+    which is exactly what the backward kernels need for the cumulative
+    log-decay chains.
+    """
+    acc = v
+    shift = 1
+    while shift < rows:
+        acc = acc + shift_rows(acc, -shift, 0.0)
         shift *= 2
     return acc
 

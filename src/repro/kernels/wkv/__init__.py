@@ -12,11 +12,30 @@ jnp fallback (``ref.wkv_chunked_ref``) computes identical math but stages
 every per-chunk intermediate and the scan carry through HBM — the
 Fig. 1b scratchpad pattern the kernel eliminates.
 
-Ships as kernel.py (pallas_call), ops.py (dispatch + chunk policy) and
-ref.py (sequential + chunked oracles), like the other kernel packages.
+Training closes the same loop in reverse: the backward pass's
+loop-carried value is the adjoint state ``dS`` (same (Dh × Dh) shape),
+and ``bwd.py`` carries it in a VMEM scratch over a back-to-front chunk
+sweep — reset at the *last* chunk to the incoming state cotangent,
+per-chunk decays recomputed in-fabric instead of staged through HBM.
+``vjp.py`` ties the two sweeps into a ``jax.custom_vjp`` so ``wkv_fused``
+is differentiable end-to-end on both the kernel and jnp paths.
+
+Ships as kernel.py (forward pallas_call, plus the training variant that
+records chunk-entry states), bwd.py (reverse sweep), vjp.py (custom_vjp
+assembly), ops.py (dispatch + chunk policy) and ref.py (sequential +
+chunked oracles, forward and backward).
 """
 
 from repro.kernels.wkv.ops import wkv_fused
-from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+from repro.kernels.wkv.ref import (
+    wkv_chunked_bwd_ref,
+    wkv_chunked_ref,
+    wkv_sequential_ref,
+)
 
-__all__ = ["wkv_fused", "wkv_chunked_ref", "wkv_sequential_ref"]
+__all__ = [
+    "wkv_fused",
+    "wkv_chunked_ref",
+    "wkv_chunked_bwd_ref",
+    "wkv_sequential_ref",
+]

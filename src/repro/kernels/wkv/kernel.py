@@ -23,6 +23,11 @@ Recurrence (per head, f32 accumulation):
 
     S_t = diag(w_t) S_{t-1} + k_t^T v_t
     o_t = r_t · (S_{t-1} + u k_t^T v_t)
+
+Two entry points: :func:`wkv_pallas` (inference forward) and
+:func:`wkv_pallas_train` (training forward: also emits ``s_hist``, the
+state entering each chunk — the one residual the reverse sweep in
+:mod:`repro.kernels.wkv.bwd` cannot recompute in its own direction).
 """
 
 from __future__ import annotations
@@ -37,12 +42,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import cumsum_rows, reset_carry, validate_divisible
 
 
-def wkv_kernel(
+def _wkv_fwd_body(
     r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
-    *, chunk: int,
+    *, chunk: int, s_hist_ref=None,
 ):
     # Boundary: chunk 0 withdraws the constant h0 instead of a token.
     reset_carry(s_ref, h0_ref[0, 0], seq_axis=2)
+
+    if s_hist_ref is not None:
+        # Training: record the state *entering* this chunk — the only
+        # staged value the reverse sweep (bwd.py) cannot recompute in its
+        # own direction (it is a forward-flowing quantity).
+        s_hist_ref[0, 0, 0] = s_ref[...]
 
     r = r_ref[0, 0].astype(jnp.float32)        # (chunk, dh)
     k = k_ref[0, 0].astype(jnp.float32)
@@ -87,6 +98,71 @@ def wkv_kernel(
     s_out_ref[0, 0] = S_new                     # last grid step wins
 
 
+def wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+    *, chunk: int,
+):
+    _wkv_fwd_body(
+        r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+        chunk=chunk,
+    )
+
+
+def wkv_train_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref,
+    out_ref, s_out_ref, s_hist_ref, s_ref, *, chunk: int,
+):
+    _wkv_fwd_body(
+        r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+        chunk=chunk, s_hist_ref=s_hist_ref,
+    )
+
+
+def _wkv_pallas_call(r, k, v, w, u, h0, *, chunk, interpret, with_hist):
+    b, h, t, dh = r.shape
+    validate_divisible("T", t, chunk)
+    if u.shape != (h, dh):
+        raise ValueError(f"u shape {u.shape} != {(h, dh)}")
+    if h0.shape != (b, h, dh, dh):
+        raise ValueError(f"h0 shape {h0.shape} != {(b, h, dh, dh)}")
+    n_chunks = t // chunk
+
+    grid = (b, h, n_chunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, dh), lambda bi, hi, si: (bi, hi, si, 0))
+    state_spec = pl.BlockSpec((1, 1, dh, dh), lambda bi, hi, si: (bi, hi, 0, 0))
+    out_specs = (seq_spec, state_spec)
+    out_shape = (
+        jax.ShapeDtypeStruct((b, h, t, dh), r.dtype),
+        jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+    )
+    if with_hist:
+        out_specs += (pl.BlockSpec(
+            (1, 1, 1, dh, dh), lambda bi, hi, si: (bi, hi, si, 0, 0)
+        ),)
+        out_shape += (
+            jax.ShapeDtypeStruct((b, h, n_chunks, dh, dh), jnp.float32),
+        )
+    kernel = functools.partial(
+        wkv_train_kernel if with_hist else wkv_kernel, chunk=chunk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec,  # r
+            seq_spec,  # k
+            seq_spec,  # v
+            seq_spec,  # w
+            pl.BlockSpec((1, dh), lambda bi, hi, si: (hi, 0)),  # u
+            state_spec,  # h0
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, h0)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv_pallas(
     r: jax.Array,
@@ -102,34 +178,31 @@ def wkv_pallas(
     """Fused WKV sweep.  r/k/v/w: (B, H, T, Dh); u: (H, Dh);
     h0: (B, H, Dh, Dh).  Returns (out (B,H,T,Dh) r.dtype, S (B,H,Dh,Dh) f32).
     """
-    b, h, t, dh = r.shape
-    validate_divisible("T", t, chunk)
-    if u.shape != (h, dh):
-        raise ValueError(f"u shape {u.shape} != {(h, dh)}")
-    if h0.shape != (b, h, dh, dh):
-        raise ValueError(f"h0 shape {h0.shape} != {(b, h, dh, dh)}")
-    n_chunks = t // chunk
+    return _wkv_pallas_call(
+        r, k, v, w, u, h0, chunk=chunk, interpret=interpret, with_hist=False
+    )
 
-    grid = (b, h, n_chunks)
-    seq_spec = pl.BlockSpec((1, 1, chunk, dh), lambda bi, hi, si: (bi, hi, si, 0))
-    state_spec = pl.BlockSpec((1, 1, dh, dh), lambda bi, hi, si: (bi, hi, 0, 0))
-    kernel = functools.partial(wkv_kernel, chunk=chunk)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            seq_spec,  # r
-            seq_spec,  # k
-            seq_spec,  # v
-            seq_spec,  # w
-            pl.BlockSpec((1, dh), lambda bi, hi, si: (hi, 0)),  # u
-            state_spec,  # h0
-        ],
-        out_specs=(seq_spec, state_spec),
-        out_shape=(
-            jax.ShapeDtypeStruct((b, h, t, dh), r.dtype),
-            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
-        ),
-        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        interpret=interpret,
-    )(r, k, v, w, u, h0)
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas_train(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Forward sweep for training: like :func:`wkv_pallas` but additionally
+    emits ``s_hist`` (B, H, N, Dh, Dh) — the state entering each chunk.
+
+    ``s_hist`` is the one residual the reverse elevator sweep stages
+    through HBM: N small (Dh × Dh) tokens per (batch, head), versus the
+    ~6 T·Dh decay tensors + (T/chunk)·chunk² score matrices the autodiff
+    path saves.  Everything else is recomputed inside the backward kernel.
+    """
+    return _wkv_pallas_call(
+        r, k, v, w, u, h0, chunk=chunk, interpret=interpret, with_hist=True
+    )

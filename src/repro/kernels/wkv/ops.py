@@ -4,11 +4,19 @@
 Pallas kernel on TPU, the jnp chunked reference elsewhere.  ``use_kernel``
 is the escape hatch — ``False`` forces the jnp path (models on CPU),
 ``True`` forces the kernel (interpret mode off-TPU, for parity tests).
+Both paths are differentiable through the same ``custom_vjp``
+(:mod:`repro.kernels.wkv.vjp`): the kernel path pairs the forward elevator
+sweep with the reverse VMEM-adjoint sweep (``bwd.py``), so auto mode is
+safe under ``jax.grad`` — the kernel is the TPU default for training too,
+not just inference.
 
 Chunk policy: ``chunk`` is a *request*.  When it does not divide T the
 dispatch picks the largest valid divisor and warns — never the old silent
 ``chunk = t`` rewrite, which could blow the decay-ratio exponent range for
-long odd sequences (``wkv_chunked_ref`` itself now raises instead).
+long odd sequences (``wkv_chunked_ref`` itself now raises instead).  The
+warning fires once per distinct ``(T, chunk)`` pair: dispatch runs at
+trace time under the model's outer jit, and a per-retrace warning is pure
+log spam.
 """
 
 from __future__ import annotations
@@ -19,16 +27,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, largest_divisor_chunk, on_tpu
-from repro.kernels.wkv.kernel import wkv_pallas
-from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+from repro.kernels.wkv.ref import wkv_sequential_ref
+from repro.kernels.wkv.vjp import wkv_diff
+
+# (T, chunk) pairs already warned about — dedupes across retraces/calls.
+_CHUNK_WARNED: set[tuple[int, int]] = set()
 
 
 def resolve_chunk(t: int, chunk: int) -> int:
-    """Largest divisor of ``t`` no larger than ``chunk``; warns on adjust."""
+    """Largest divisor of ``t`` no larger than ``chunk``; warns on adjust
+    (once per distinct ``(t, chunk)``)."""
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     c = largest_divisor_chunk(t, chunk)
-    if c != min(chunk, t):
+    if c != min(chunk, t) and (t, chunk) not in _CHUNK_WARNED:
+        _CHUNK_WARNED.add((t, chunk))
         warnings.warn(
             f"wkv chunk={chunk} does not divide T={t}; using chunk={c}",
             stacklevel=3,
@@ -54,7 +67,7 @@ def wkv_fused(
 
     r/k/v/w: (B, H, T, Dh); u: (H, Dh); h0: (B, H, Dh, Dh) or None (zeros).
     Returns ``(out, S_out)`` with ``out`` (B,H,T,Dh) in ``r.dtype`` and
-    ``S_out`` (B,H,Dh,Dh) in float32.
+    ``S_out`` (B,H,Dh,Dh) in float32.  Differentiable on every path.
     """
     b, h, t, dh = r.shape
     if h0 is None:
@@ -62,12 +75,9 @@ def wkv_fused(
 
     kernel = on_tpu() if use_kernel is None else use_kernel
     c = resolve_chunk(t, chunk)
-    if kernel:
-        return wkv_pallas(
-            r, k, v, w, u, h0, chunk=c, interpret=interpret_default()
-        )
-    if t == 1:
-        out, S = wkv_sequential_ref(r, k, v, w, u, h0)
-    else:
-        out, S = wkv_chunked_ref(r, k, v, w, u, h0, chunk=c)
-    return out.astype(r.dtype), S
+    if not kernel and t == 1:
+        # Decode: one token, no chunk structure — the sequential oracle is
+        # the cheapest jnp form (and autodiff through one step is trivial).
+        out, s_out = wkv_sequential_ref(r, k, v, w, u, h0)
+        return out.astype(r.dtype), s_out
+    return wkv_diff(c, interpret_default(), bool(kernel), r, k, v, w, u, h0)

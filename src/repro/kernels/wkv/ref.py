@@ -14,6 +14,13 @@ The RWKV6 (Finch) WKV recurrence, per head with ``Dh``-dim keys/values:
   the masked score matrix and the scan carry all materialize — the paper's
   Fig. 1b scratchpad pattern.  Kept as the
   dispatch fallback for non-TPU backends and as a second oracle.
+* :func:`wkv_chunked_bwd_ref` — the hand-derived chunked *backward* sweep:
+  the math the reverse Pallas kernel (``bwd.py``) fuses, in plain jnp.
+  Recomputes the per-chunk decays and entry states from the primals
+  (recompute-over-stage: the only saved values are the inputs), then walks
+  chunks back-to-front carrying the (Dh × Dh) adjoint state ``dS``.
+  Oracle for the kernel VJP and the manual backward of the jnp dispatch
+  path — validated against ``jax.grad`` of :func:`wkv_sequential_ref`.
 
 Unlike the pre-kernel ``_wkv_chunked`` this raises on ``t % chunk != 0``
 instead of silently rewriting ``chunk = t``; the dispatch layer
@@ -107,3 +114,111 @@ def wkv_chunked_ref(r, k, v, w, u, h0, chunk: int, stage=None):
 
     out = (intra + inter).reshape(b, h, t, dh)
     return out, S_out
+
+
+def wkv_chunked_bwd_ref(r, k, v, w, u, h0, d_out, d_s_out, chunk: int):
+    """Chunked WKV backward: cotangents for (r, k, v, w, u, h0).
+
+    Inputs are the forward primals plus the output cotangents ``d_out``
+    (B,H,T,Dh) and ``d_s_out`` (B,H,Dh,Dh).  Returns
+    ``(dr, dk, dv, dw, du, dh0)`` in float32 with primal shapes.
+
+    Derivation (per chunk of length L, local time t, entering state S):
+
+        o_t    = (r_t D_{<t}) · S  +  Σ_{s<t} A[t,s] v_s  +  (r_t·u k_t) v_t
+        S_exit = diag(W) S + k_rem^T V,   W = D_{<=L-1}
+
+    so with ``G`` the adjoint of this chunk's exit state, the adjoint of
+    the *entering* state is ``diag(W) G + r_dec^T do`` — the reverse
+    recurrence the back-to-front sweep carries.  All decay tensors are
+    recomputed from the primals; the entry states come from a cheap
+    forward pre-pass over chunk summaries (one rank-L update per chunk).
+    The ``w`` gradient flows through the cumulative log-decays: adjoints
+    of ``cumsum`` chains are *suffix* sums (``rev_cumsum``), the reverse
+    twin of the forward's prefix sums.
+    """
+    b, h, t, dh = r.shape
+    validate_divisible("T", t, chunk)
+    n = t // chunk
+    f32 = jnp.float32
+    rc = r.reshape(b, h, n, chunk, dh).astype(f32)
+    kc = k.reshape(b, h, n, chunk, dh).astype(f32)
+    vc = v.reshape(b, h, n, chunk, dh).astype(f32)
+    wc = w.reshape(b, h, n, chunk, dh).astype(f32)
+    do = d_out.reshape(b, h, n, chunk, dh).astype(f32)
+    dS_out = d_s_out.astype(f32)
+
+    logw = jnp.log(jnp.clip(wc, 1e-8, 1.0))
+    cum_incl = jnp.cumsum(logw, axis=3)
+    cum_excl = cum_incl - logw
+    w_total = jnp.exp(cum_incl[:, :, :, -1])                  # (B,H,N,Dh)
+    r_dec = rc * jnp.exp(cum_excl)
+    k_inv = kc * jnp.exp(-cum_incl)
+    k_rem = kc * jnp.exp(cum_incl[:, :, :, -1:] - cum_incl)
+
+    # Forward pre-pass: recompute the state *entering* each chunk.
+    def fstep(S, inp):
+        k_r, v_, wt = inp
+        S_new = S * wt[..., None] + jnp.einsum("bhtd,bhte->bhde", k_r, v_)
+        return S_new, S
+
+    _, S_e = jax.lax.scan(
+        fstep, h0.astype(f32),
+        (jnp.moveaxis(k_rem, 2, 0), jnp.moveaxis(vc, 2, 0),
+         jnp.moveaxis(w_total, 2, 0)),
+        unroll=scan_unroll(),
+    )
+    S_e = jnp.moveaxis(S_e, 0, 2)                              # (B,H,N,Dh,Dh)
+
+    # Reverse sweep: G[c] = adjoint of chunk c's exit state.
+    def bstep(dS, inp):
+        wt, r_d, do_ = inp
+        dS_prev = dS * wt[..., None] + jnp.einsum("bhtd,bhte->bhde", r_d, do_)
+        return dS_prev, dS
+
+    rev = lambda a: jnp.flip(jnp.moveaxis(a, 2, 0), 0)  # noqa: E731
+    dh0, G_rev = jax.lax.scan(
+        bstep, dS_out, (rev(w_total), rev(r_dec), rev(do)),
+        unroll=scan_unroll(),
+    )
+    G = jnp.moveaxis(jnp.flip(G_rev, 0), 0, 2)                 # (B,H,N,Dh,Dh)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask, jnp.einsum("bhntd,bhnsd->bhnts", r_dec, k_inv), 0.0)
+    dscores = jnp.where(mask, jnp.einsum("bhnte,bhnse->bhnts", do, vc), 0.0)
+
+    u_b = u.reshape(1, h, 1, 1, dh).astype(f32)
+    dov = jnp.sum(do * vc, axis=-1, keepdims=True)             # (B,H,N,L,1)
+
+    d_rdec = (jnp.einsum("bhnts,bhnsd->bhntd", dscores, k_inv)
+              + jnp.einsum("bhnte,bhnde->bhntd", do, S_e))
+    d_kinv = jnp.einsum("bhnts,bhntd->bhnsd", dscores, r_dec)
+    d_krem = jnp.einsum("bhnse,bhnde->bhnsd", vc, G)
+
+    dr = d_rdec * jnp.exp(cum_excl) + u_b * kc * dov
+    dk = (d_kinv * jnp.exp(-cum_incl)
+          + d_krem * jnp.exp(cum_incl[:, :, :, -1:] - cum_incl)
+          + rc * u_b * dov)
+    dv = (jnp.einsum("bhnts,bhnte->bhnse", scores, do)
+          + jnp.einsum("bhnsd,bhnde->bhnse", k_rem, G)
+          + jnp.sum(rc * u_b * kc, axis=-1, keepdims=True) * do)
+
+    # logw adjoint: every use of cum_incl/cum_excl folds back through
+    # suffix sums (the adjoint of cumsum).  The cum_incl[-1] terms (k_rem's
+    # numerator and w_total's use in the exit-state decay) land on the last
+    # row before the suffix sum distributes them to every earlier step.
+    dcum_excl = d_rdec * r_dec
+    dcum_incl = -d_kinv * k_inv - d_krem * k_rem
+    last = (jnp.sum(d_krem * k_rem, axis=3)
+            + w_total * jnp.einsum("bhnde,bhnde->bhnd", S_e, G))
+    dcum_incl = dcum_incl.at[:, :, :, -1].add(last)
+    rev_incl = jnp.flip(jnp.cumsum(jnp.flip(dcum_incl, 3), axis=3), 3)
+    rev_excl = jnp.flip(jnp.cumsum(jnp.flip(dcum_excl, 3), axis=3), 3) - dcum_excl
+    dlogw = rev_incl + rev_excl
+    in_range = (wc >= 1e-8) & (wc <= 1.0)
+    dw = jnp.where(in_range, dlogw / jnp.clip(wc, 1e-8, 1.0), 0.0)
+
+    du = jnp.einsum("bhntd,bhntd,bhnt->hd", rc, kc, dov[..., 0])
+
+    rs = lambda a: a.reshape(b, h, t, dh)  # noqa: E731
+    return rs(dr), rs(dk), rs(dv), rs(dw), du, dh0

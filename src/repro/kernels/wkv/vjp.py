@@ -1,0 +1,82 @@
+"""custom_vjp assembly: differentiable WKV through either backend.
+
+``wkv_diff(chunk, interpret, use_pallas)(r, k, v, w, u, h0)`` is the
+differentiable core behind :func:`repro.kernels.wkv.ops.wkv_fused`:
+
+* **forward** — the Pallas elevator kernel (``use_pallas=True``) or the
+  jnp chunked reference.  Under ``jax.grad`` the Pallas path runs the
+  training variant (:func:`~repro.kernels.wkv.kernel.wkv_pallas_train`),
+  whose only extra output is ``s_hist``, the chunk-entry states;
+* **backward** — the reverse elevator sweep
+  (:func:`~repro.kernels.wkv.bwd.wkv_pallas_bwd`) carrying the (Dh × Dh)
+  adjoint state in VMEM, or its jnp oracle
+  (:func:`~repro.kernels.wkv.ref.wkv_chunked_bwd_ref`).
+
+Both backward paths follow recompute-over-stage: residuals are the primal
+inputs (plus ``s_hist`` on the kernel path); the decay tensors and score
+matrices that ``jax.grad`` of the chunked reference would save and
+round-trip through HBM are recomputed at use.  This is what lets
+``apply_rwkv_block`` keep the kernel as the TPU default during training
+instead of falling back to the staged autodiff path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.wkv.bwd import wkv_pallas_bwd
+from repro.kernels.wkv.kernel import wkv_pallas, wkv_pallas_train
+from repro.kernels.wkv.ref import wkv_chunked_bwd_ref, wkv_chunked_ref
+
+__all__ = ["wkv_diff"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def wkv_diff(chunk, interpret, use_pallas, r, k, v, w, u, h0):
+    """Differentiable fused WKV.  Returns ``(out, S_out)`` like
+    :func:`~repro.kernels.wkv.kernel.wkv_pallas` (out in ``r.dtype``,
+    ``S_out`` float32)."""
+    if use_pallas:
+        return wkv_pallas(r, k, v, w, u, h0, chunk=chunk, interpret=interpret)
+    out, s_out = wkv_chunked_ref(r, k, v, w, u, h0, chunk=chunk)
+    return out.astype(r.dtype), s_out
+
+
+def _wkv_diff_fwd(chunk, interpret, use_pallas, r, k, v, w, u, h0):
+    if use_pallas:
+        out, s_out, s_hist = wkv_pallas_train(
+            r, k, v, w, u, h0, chunk=chunk, interpret=interpret
+        )
+    else:
+        out, s_out = wkv_chunked_ref(r, k, v, w, u, h0, chunk=chunk)
+        out = out.astype(r.dtype)
+        s_hist = None  # jnp backward recomputes entry states from h0
+    return (out, s_out), (r, k, v, w, u, h0, s_hist)
+
+
+def _wkv_diff_bwd(chunk, interpret, use_pallas, res, cts):
+    r, k, v, w, u, h0, s_hist = res
+    d_out, d_s_out = cts
+    if use_pallas:
+        dr, dk, dv, dw, du_part, dh0 = wkv_pallas_bwd(
+            r, k, v, w, u, s_hist, d_out, d_s_out,
+            chunk=chunk, interpret=interpret,
+        )
+        du = du_part.sum(axis=0)
+    else:
+        dr, dk, dv, dw, du, dh0 = wkv_chunked_bwd_ref(
+            r, k, v, w, u, h0, d_out, d_s_out, chunk=chunk
+        )
+    return (
+        dr.astype(r.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        dw.astype(w.dtype),
+        du.astype(u.dtype),
+        dh0.astype(h0.dtype),
+    )
+
+
+wkv_diff.defvjp(_wkv_diff_fwd, _wkv_diff_bwd)

@@ -183,15 +183,16 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
         else jnp.zeros((b, h, dh, dh), jnp.float32)
     )
     # Fused WKV elevator kernel: the (Dh, Dh) state rides a VMEM carry.
-    # Default is the jnp chunked path even on TPU — the kernel is
-    # forward-only (no custom VJP yet; ROADMAP) and this function must stay
-    # differentiable for training.  Inference callers opt in with
-    # use_kernel=True; decode t=1 always takes the sequential oracle.
+    # use_kernel=None is auto mode (the elevator_scan convention): the
+    # kernel on TPU — for training too, since the custom VJP pairs it with
+    # the reverse VMEM-adjoint sweep (kernels/wkv/bwd.py) — and the jnp
+    # chunked path elsewhere.  Decode t=1 always takes the sequential
+    # oracle (one token has no chunk structure to fuse).
     out, S = wkv_fused(
         r_.astype(jnp.float32), k_.astype(jnp.float32),
         v_.astype(jnp.float32), w_.astype(jnp.float32), u, h0,
         chunk=chunk,
-        use_kernel=False if (t == 1 or use_kernel is None) else use_kernel,
+        use_kernel=False if t == 1 else use_kernel,
     )
 
     out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)

@@ -93,6 +93,45 @@ def test_ops_dispatch_matches():
     np.testing.assert_allclose(np.asarray(kernel_path), np.asarray(ref), rtol=3e-5, atol=3e-5)
 
 
+def test_jnp_forms_agree():
+    # The per-backend jnp forms (linear scan on CPU, log-depth associative
+    # scan elsewhere) are the same math; h0 handling must match too.
+    from repro.kernels.elevator_scan.ops import (
+        elevator_scan_linear,
+        elevator_scan_logdepth,
+    )
+
+    b, t, d = 2, 160, 96  # non-power-of-two T: no chunk structure assumed
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    for h0 in (None, jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))):
+        lin = elevator_scan_linear(a, x, h0)
+        log = elevator_scan_logdepth(a, x, h0)
+        ref = elevator_scan_ref(a, x, h0)
+        np.testing.assert_allclose(np.asarray(lin), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(log), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_jnp_dispatch_differentiable():
+    # The CPU linear path must stay differentiable (RG-LRU trains on it).
+    b, t, d = 1, 64, 32
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+
+    def loss(fn):
+        return lambda a_, x_: (fn(a_, x_) ** 2).sum()
+
+    ga, gx = jax.grad(loss(lambda a_, x_: elevator_scan(a_, x_, use_kernel=False)),
+                      argnums=(0, 1))(a, x)
+    ra, rx = jax.grad(loss(elevator_scan_ref), argnums=(0, 1))(a, x)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-4, atol=1e-4)
+
+
 def test_rejects_bad_chunk():
     a = jnp.ones((1, 96, 128))
     with pytest.raises(ValueError):
