@@ -18,7 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import from_thread_or_const
-from repro.core.cost_model import wkv_bwd_traffic, wkv_traffic
+from repro.core.cost_model import (
+    wkv_bwd_traffic,
+    wkv_seqshard_traffic,
+    wkv_traffic,
+)
 from repro.core.scratchpad import stage_through_memory
 from repro.kernels.elevator_scan.ops import elevator_scan, elevator_scan_logdepth
 from repro.kernels.elevator_scan.ref import elevator_scan_ref
@@ -157,6 +161,39 @@ def main() -> list[dict]:
         "(recompute-over-stage: CPU wall-clock pays the recompute since"
         " staging is cheap there; the modeled win is staged bytes, see"
         " cost_model.wkv_bwd_traffic)",
+    ))
+
+    # wkv_seqshard: the sequence-parallel dispatch (segment-summary carry
+    # across a mesh axis) vs the single-device fused path, same shapes.
+    # On a 1-device container the seq axis is size 1 — the row then
+    # measures pure protocol overhead; the multi-device CI lane
+    # (scripts/tier1.sh) and TPU meshes exercise n > 1.  The modeled
+    # column is the point of the protocol either way: bytes crossing the
+    # seq axis at n=8, O(T·D) token re-gather vs O(Dh²) summary hops.
+    from repro.kernels.wkv.seqpar import wkv_seqshard
+    from repro.launch.mesh import make_seq_mesh
+
+    n_dev = min(len(jax.devices()), 8)
+    mesh = make_seq_mesh(n_dev)
+    t_seqshard, t_single = _time_interleaved(
+        [
+            lambda *args: wkv_seqshard(
+                *args, mesh=mesh, seq_axis="seq", chunk=chunk,
+                use_kernel=False)[0],
+            lambda *args: wkv_fused(*args, chunk=chunk, use_kernel=False)[0],
+        ],
+        rw, kw, vw, ww, uw, h0w,
+    )
+    n_model = 8
+    gather_cost, _, summary_cost = wkv_seqshard_traffic(bh, hh, tw, dh, n_model)
+    crossed_ratio = gather_cost.traffic.dram_bytes / max(
+        summary_cost.traffic.fabric_bytes, 1)
+    rows.append((
+        "wkv_seqshard", t_seqshard,
+        f"single_dev_us={t_single:.0f} n_dev={n_dev} "
+        f"modeled_bytes_crossed_ratio_n{n_model}={crossed_ratio:.0f}x "
+        "(O(T*D) token re-gather vs O(Dh^2) summary hops, "
+        "cost_model.wkv_seqshard_traffic)",
     ))
 
     # blockwise attention vs full-matrix reference (memory win).

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 verify, two lanes.
+#
+# Lane 1 is the canonical single-device suite (ROADMAP "Tier-1 verify").
+# Lane 2 re-runs the device-gated test files with 8 fake CPU devices
+# (XLA_FLAGS=--xla_force_host_platform_device_count=8), so the in-process
+# multi-device tests — the ones that `pytest.skip("needs N devices")` on a
+# 1-device host — actually execute instead of silently skipping.  The
+# subprocess-based tests in tests/test_multidevice.py force their own
+# device count; lane 2 additionally covers the shard_map tests that run in
+# the pytest process itself (e.g. tests/test_core_scan_comm.py's
+# multi-device classes).
+#
+# JAX_PLATFORMS=cpu everywhere: containers with libtpu baked in otherwise
+# burn minutes probing TPU metadata (see repo memory / PR 1).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
+
+echo "== tier-1 lane 1: full suite (single device) =="
+python -m pytest -x -q "$@"
+
+echo "== tier-1 lane 2: multi-device (8 fake CPU host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+    python -m pytest -x -q tests/test_core_scan_comm.py tests/test_multidevice.py

@@ -4,6 +4,7 @@ Public API:
   from_thread_or_const / from_thread_or_const_nd / tag_value  (elevator node)
   from_thread_or_mem                                          (eLDST)
   plan_cascade / CascadePlan                                  (§4.3 cascades)
+  SegmentMonoid / ELEMENTWISE / DIAG_STATE                    (composition law)
   linear_scan / chunked_linear_scan / device_linear_scan_carry
   device_shift / halo_exchange / ring_pass / seq_carry_scan   (ICI elevators)
   pipeline_apply                                              (PP forwarding)
@@ -21,6 +22,9 @@ from repro.core.elevator import (
 )
 from repro.core.eldst import ForwardStats, forward_stats, from_thread_or_mem
 from repro.core.chunk_scan import (
+    DIAG_STATE,
+    ELEMENTWISE,
+    SegmentMonoid,
     chunked_linear_scan,
     device_linear_scan_carry,
     linear_scan,
@@ -46,6 +50,9 @@ __all__ = [
     "ForwardStats",
     "forward_stats",
     "from_thread_or_mem",
+    "DIAG_STATE",
+    "ELEMENTWISE",
+    "SegmentMonoid",
     "chunked_linear_scan",
     "device_linear_scan_carry",
     "linear_scan",

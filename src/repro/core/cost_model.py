@@ -253,6 +253,48 @@ def wkv_bwd_traffic(b: int, h: int, t: int, dh: int, chunk: int = 64,
     )
 
 
+def wkv_seqshard_traffic(b: int, h: int, t: int, dh: int, n_dev: int,
+                         itemsize: int = 4):
+    """Sequence-parallel WKV: bytes crossing the ``seq`` mesh axis per
+    layer step (totals over all devices).
+
+    naive:  re-gather the token activations — every device receives the
+            other shards' r/k/v/w and runs the full sequence itself; the
+            O(T·D) pattern sequence sharding is supposed to remove.
+    shared: all-gather the per-shard exit states behind a barrier (every
+            device receives all n (Dh × Dh) states, then composes
+            locally) — the GPGPU shared-buffer pattern at ICI granularity.
+    direct: the segment-summary protocol (kernels/wkv/seqpar):
+            ceil(log2 n) + 1 point-to-point ppermute hops, each moving the
+            (decay, state) summary — dh + dh² per (batch, head) — plus
+            one masked psum of the final state.  O(Dh²), independent
+            of T.
+    """
+    import math
+
+    state = dh * dh
+    summary = state + dh
+    hops = max(1, int(math.ceil(math.log2(max(n_dev, 2))))) + 1
+    tokens = 4 * t * dh                               # r, k, v, w
+    naive = Traffic(
+        dram_bytes=b * h * (n_dev - 1) * tokens * itemsize
+    )
+    shared = Traffic(
+        scratchpad_bytes=b * h * n_dev * (n_dev - 1) * state * itemsize
+    )
+    direct = Traffic(
+        fabric_bytes=b * h * n_dev * (hops * summary + state) * itemsize
+    )
+    # Same math work on every variant: the local fused sweep dominates;
+    # carry composition adds n·hops (Dh²) multiply-adds.
+    flops = b * h * (2 * 2 * t * dh * dh + 2 * n_dev * hops * state)
+    return (
+        KernelCost("wkv_seqshard", "naive", naive, flops),
+        KernelCost("wkv_seqshard", "shared", shared, flops),
+        KernelCost("wkv_seqshard", "direct", direct, flops),
+    )
+
+
 def reduce_traffic(n: int, itemsize: int = 4):
     """Tree reduction: shared version stages each level through scratchpad;
     direct uses windowed elevator edges per level."""

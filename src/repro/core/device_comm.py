@@ -97,6 +97,8 @@ def seq_carry_scan(
     carry_init: Any,
     x: jax.Array,
     axis_name: str,
+    *,
+    reverse: bool = False,
 ):
     """Sequential carry chain across sequence shards (elevator Δ=1 chain).
 
@@ -107,27 +109,37 @@ def seq_carry_scan(
     the paper's prefix-sum example (Fig. 6) at ICI granularity.  Use
     :mod:`repro.core.chunk_scan` for the log-depth alternative when the
     recurrence is associative.
+
+    ``reverse=True`` runs the chain from the *last* shard toward shard 0
+    (a Δ=-1 edge): shard ``n-1`` uses ``carry_init`` and each carry is
+    forwarded to shard ``i-1``.  This is the device-space reverse elevator
+    — the sweep direction of adjoint carries (e.g. the WKV ``dS``) during
+    sequence-sharded training.
     """
     n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
+    # Position along the sweep: hop k activates the k-th shard in sweep
+    # order (ascending indices forward, descending in reverse).
+    pos = (n - 1 - idx) if reverse else idx
+    delta = -1 if reverse else 1
 
     init = jax.tree.map(jnp.asarray, carry_init)
     # Each shard must observe the carries of all predecessors.  We unroll the
     # shard chain: at hop k every shard runs its chunk against the carry it
-    # currently holds, but only the shard whose turn it is (idx == k) keeps
+    # currently holds, but only the shard whose turn it is (pos == k) keeps
     # its freshly produced output; carries propagate one hop per iteration.
     # Cost: n hops (pipeline-friendly; XLA overlaps the permutes).
     carry_out, y = chunk_fn(init, x)
     for k in range(1, n):
         shifted = jax.tree.map(
-            lambda t: device_shift(t, axis_name, delta=1, fill=0.0), carry_out
+            lambda t: device_shift(t, axis_name, delta=delta, fill=0.0), carry_out
         )
         carry_in = jax.tree.map(
-            lambda new, ini: jnp.where(idx >= k, new, ini.astype(new.dtype)),
+            lambda new, ini: jnp.where(pos >= k, new, ini.astype(new.dtype)),
             shifted, init,
         )
         carry_new, y_new = chunk_fn(carry_in, x)
-        keep = idx == k
+        keep = pos == k
         y = jax.tree.map(lambda a, b: jnp.where(keep, b, a), y, y_new)
-        carry_out = jax.tree.map(lambda a, b: jnp.where(idx >= k, b, a), carry_out, carry_new)
+        carry_out = jax.tree.map(lambda a, b: jnp.where(pos >= k, b, a), carry_out, carry_new)
     return carry_out, y

@@ -33,6 +33,7 @@ from jax.experimental import pallas as pl
 __all__ = [
     "on_tpu",
     "interpret_default",
+    "shard_map_norep",
     "reset_carry",
     "reversed_chunk",
     "shift_rows",
@@ -58,6 +59,30 @@ def interpret_default() -> bool:
     """Interpret-mode default: real lowering on TPU, interpreter elsewhere
     (this container) so the kernels stay testable everywhere."""
     return not on_tpu()
+
+
+def shard_map_norep(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions.
+
+    jax 0.4.x spells the flag ``check_rep``; newer jax renamed it
+    ``check_vma`` (and moved shard_map out of experimental — the
+    experimental import path still works on both).  Used by the
+    sequence-parallel kernel wrappers, whose replicated outputs come from
+    masked psums the checker cannot always see through.
+    """
+    import inspect
+
+    from jax.experimental.shard_map import shard_map
+
+    check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(shard_map).parameters
+        else "check_rep"
+    )
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{check_kw: False},
+    )
 
 
 # --------------------------------------------------------------------------

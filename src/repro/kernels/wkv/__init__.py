@@ -20,21 +20,34 @@ per-chunk decays recomputed in-fabric instead of staged through HBM.
 ``vjp.py`` ties the two sweeps into a ``jax.custom_vjp`` so ``wkv_fused``
 is differentiable end-to-end on both the kernel and jnp paths.
 
+The same edge exists between chips: ``seqpar.py`` composes per-device
+``(decay-product, exit-state)`` segment summaries across a ``seq`` mesh
+axis (the ``DIAG_STATE`` monoid of :mod:`repro.core.chunk_scan`), so a
+sequence-sharded model forwards O(Dh²) summaries point-to-point instead
+of all-gathering tokens or states — device-space elevator edges, forward
+and (by ppermute transposition) reverse for training.
+
 Ships as kernel.py (forward pallas_call, plus the training variant that
-records chunk-entry states), bwd.py (reverse sweep), vjp.py (custom_vjp
-assembly), ops.py (dispatch + chunk policy) and ref.py (sequential +
-chunked oracles, forward and backward).
+records chunk-entry states and the summary variants that emit the segment
+decay product), bwd.py (reverse sweep), vjp.py (custom_vjp assembly),
+ops.py (dispatch + chunk policy), seqpar.py (sequence-parallel protocol)
+and ref.py (sequential + chunked oracles, forward and backward, plus the
+jnp segment-summary helpers).
 """
 
-from repro.kernels.wkv.ops import wkv_fused
+from repro.kernels.wkv.ops import wkv_fused, wkv_fused_summary
 from repro.kernels.wkv.ref import (
     wkv_chunked_bwd_ref,
     wkv_chunked_ref,
     wkv_sequential_ref,
 )
+from repro.kernels.wkv.seqpar import wkv_seq_local, wkv_seqshard
 
 __all__ = [
     "wkv_fused",
+    "wkv_fused_summary",
+    "wkv_seq_local",
+    "wkv_seqshard",
     "wkv_chunked_ref",
     "wkv_chunked_bwd_ref",
     "wkv_sequential_ref",

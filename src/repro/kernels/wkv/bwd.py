@@ -34,6 +34,12 @@ Per chunk (length L, entering state S, exit-state adjoint G = scratch):
 
 ``du`` accumulates per (batch, head) tile in a VMEM scratch and is summed
 over batch outside; ``dh0`` is the carry after chunk 0 (last grid step).
+
+The same reversal exists one level up: under sequence sharding
+(``seqpar.py``) the ``dS`` emitted here as ``dh0`` becomes a shard's
+exit-state adjoint, and the device-space carry composition transposes
+into reverse-direction ppermute hops — this kernel is the in-chip leg of
+that sweep, the ICI hops are its between-chip continuation.
 """
 
 from __future__ import annotations

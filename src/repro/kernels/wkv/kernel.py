@@ -24,10 +24,14 @@ Recurrence (per head, f32 accumulation):
     S_t = diag(w_t) S_{t-1} + k_t^T v_t
     o_t = r_t · (S_{t-1} + u k_t^T v_t)
 
-Two entry points: :func:`wkv_pallas` (inference forward) and
+Entry points: :func:`wkv_pallas` (inference forward),
 :func:`wkv_pallas_train` (training forward: also emits ``s_hist``, the
 state entering each chunk — the one residual the reverse sweep in
-:mod:`repro.kernels.wkv.bwd` cannot recompute in its own direction).
+:mod:`repro.kernels.wkv.bwd` cannot recompute in its own direction), and
+the ``*_summary`` variants which additionally emit the segment decay
+product ``a_seg`` — the diag-decay half of the (A, S) segment summary the
+sequence-parallel protocol (:mod:`repro.kernels.wkv.seqpar`) forwards
+across the mesh instead of gathering tokens.
 """
 
 from __future__ import annotations
@@ -44,10 +48,15 @@ from repro.kernels.common import cumsum_rows, reset_carry, validate_divisible
 
 def _wkv_fwd_body(
     r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
-    *, chunk: int, s_hist_ref=None,
+    *, chunk: int, s_hist_ref=None, a_out_ref=None, a_acc_ref=None,
 ):
     # Boundary: chunk 0 withdraws the constant h0 instead of a token.
     reset_carry(s_ref, h0_ref[0, 0], seq_axis=2)
+    if a_acc_ref is not None:
+        # Segment-summary mode: the decay product accumulates multiplicatively,
+        # so its boundary constant is the monoid identity 1 (not 0).
+        reset_carry(a_acc_ref, jnp.ones(a_acc_ref.shape, a_acc_ref.dtype),
+                    seq_axis=2)
 
     if s_hist_ref is not None:
         # Training: record the state *entering* this chunk — the only
@@ -67,6 +76,14 @@ def _wkv_fwd_body(
     cum_incl = cumsum_rows(logw, chunk)
     cum_excl = cum_incl - logw
     w_total = jnp.exp(cum_incl[-1])            # (dh,)
+
+    if a_acc_ref is not None:
+        # Per-segment summary: A_seg = prod over every chunk's w_total — the
+        # diag-decay half of the (A, S) pair that crosses the mesh axis in
+        # the sequence-parallel protocol (seqpar.py).  Rides its own tiny
+        # VMEM carry exactly like S.
+        a_acc_ref[...] = a_acc_ref[...] * w_total[None, :]
+        a_out_ref[0, 0] = a_acc_ref[0]         # last grid step wins
 
     r_dec = r * jnp.exp(cum_excl)              # r_t * D_{<t}
     k_inv = k * jnp.exp(-cum_incl)             # k_s / D_{<=s}
@@ -118,7 +135,30 @@ def wkv_train_kernel(
     )
 
 
-def _wkv_pallas_call(r, k, v, w, u, h0, *, chunk, interpret, with_hist):
+def wkv_summary_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref,
+    out_ref, s_out_ref, a_out_ref, s_ref, a_acc_ref, *, chunk: int,
+):
+    _wkv_fwd_body(
+        r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+        chunk=chunk, a_out_ref=a_out_ref, a_acc_ref=a_acc_ref,
+    )
+
+
+def wkv_train_summary_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref,
+    out_ref, s_out_ref, s_hist_ref, a_out_ref, s_ref, a_acc_ref,
+    *, chunk: int,
+):
+    _wkv_fwd_body(
+        r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref, out_ref, s_out_ref, s_ref,
+        chunk=chunk, s_hist_ref=s_hist_ref, a_out_ref=a_out_ref,
+        a_acc_ref=a_acc_ref,
+    )
+
+
+def _wkv_pallas_call(r, k, v, w, u, h0, *, chunk, interpret, with_hist,
+                     with_summary=False):
     b, h, t, dh = r.shape
     validate_divisible("T", t, chunk)
     if u.shape != (h, dh):
@@ -142,9 +182,19 @@ def _wkv_pallas_call(r, k, v, w, u, h0, *, chunk, interpret, with_hist):
         out_shape += (
             jax.ShapeDtypeStruct((b, h, n_chunks, dh, dh), jnp.float32),
         )
-    kernel = functools.partial(
-        wkv_train_kernel if with_hist else wkv_kernel, chunk=chunk
-    )
+    if with_summary:
+        out_specs += (pl.BlockSpec((1, 1, dh), lambda bi, hi, si: (bi, hi, 0)),)
+        out_shape += (jax.ShapeDtypeStruct((b, h, dh), jnp.float32),)
+    kernels = {
+        (False, False): wkv_kernel,
+        (True, False): wkv_train_kernel,
+        (False, True): wkv_summary_kernel,
+        (True, True): wkv_train_summary_kernel,
+    }
+    kernel = functools.partial(kernels[(with_hist, with_summary)], chunk=chunk)
+    scratch_shapes = [pltpu.VMEM((dh, dh), jnp.float32)]
+    if with_summary:
+        scratch_shapes.append(pltpu.VMEM((1, dh), jnp.float32))  # A_seg carry
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -158,7 +208,7 @@ def _wkv_pallas_call(r, k, v, w, u, h0, *, chunk, interpret, with_hist):
         ],
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(r, k, v, w, u, h0)
 
@@ -205,4 +255,53 @@ def wkv_pallas_train(
     """
     return _wkv_pallas_call(
         r, k, v, w, u, h0, chunk=chunk, interpret=interpret, with_hist=True
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas_summary(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Forward sweep emitting the per-segment summary: like
+    :func:`wkv_pallas` but additionally returns ``a_seg`` (B, H, Dh), the
+    product of every decay in the segment.
+
+    ``(a_seg, S_out)`` is the segment summary of the sequence-parallel
+    protocol (:mod:`repro.kernels.wkv.seqpar`): composing it across a mesh
+    axis (``core.chunk_scan.DIAG_STATE`` monoid) reconstructs every shard's
+    entering state from O(Dh²) bytes per hop — no token re-gather.
+    """
+    return _wkv_pallas_call(
+        r, k, v, w, u, h0, chunk=chunk, interpret=interpret,
+        with_hist=False, with_summary=True,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas_train_summary(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Training forward with the segment summary: returns
+    ``(out, S_out, s_hist, a_seg)`` — the union of
+    :func:`wkv_pallas_train` and :func:`wkv_pallas_summary` outputs in one
+    sweep (one HBM read of the inputs)."""
+    return _wkv_pallas_call(
+        r, k, v, w, u, h0, chunk=chunk, interpret=interpret,
+        with_hist=True, with_summary=True,
     )

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, largest_divisor_chunk, on_tpu
 from repro.kernels.wkv.ref import wkv_sequential_ref
-from repro.kernels.wkv.vjp import wkv_diff
+from repro.kernels.wkv.vjp import wkv_diff, wkv_diff_summary
 
 # (T, chunk) pairs already warned about — dedupes across retraces/calls.
 _CHUNK_WARNED: set[tuple[int, int]] = set()
@@ -68,6 +68,12 @@ def wkv_fused(
     r/k/v/w: (B, H, T, Dh); u: (H, Dh); h0: (B, H, Dh, Dh) or None (zeros).
     Returns ``(out, S_out)`` with ``out`` (B,H,T,Dh) in ``r.dtype`` and
     ``S_out`` (B,H,Dh,Dh) in float32.  Differentiable on every path.
+
+    bf16 I/O: r/k/v/w may arrive in bf16 (or any float dtype) — no
+    caller-side upcast needed.  Every backend accumulates in float32
+    internally and ``out`` comes back in the input dtype, so feeding bf16
+    halves the unavoidable HBM traffic without touching the recurrence
+    math (see ``cost_model.wkv_traffic``'s ``io`` term).
     """
     b, h, t, dh = r.shape
     if h0 is None:
@@ -81,3 +87,35 @@ def wkv_fused(
         out, s_out = wkv_sequential_ref(r, k, v, w, u, h0)
         return out.astype(r.dtype), s_out
     return wkv_diff(c, interpret_default(), bool(kernel), r, k, v, w, u, h0)
+
+
+def wkv_fused_summary(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 64,
+    use_kernel: bool | None = None,
+):
+    """Like :func:`wkv_fused` but additionally returns ``a_seg`` (B, H, Dh)
+    float32 — the segment decay product, i.e. the diag half of the
+    ``(A, S)`` segment summary.
+
+    This is the local building block of the sequence-parallel protocol
+    (:mod:`repro.kernels.wkv.seqpar`): each device calls it on its shard
+    with a zero entering state, then only ``(a_seg, S_out)`` — O(Dh²) per
+    (batch, head) — crosses the mesh axis.  Dispatch/chunk policy and
+    differentiability match :func:`wkv_fused` (the ``a_seg`` cotangent
+    folds into ``dw`` in closed form, see ``vjp.wkv_diff_summary``).
+    """
+    b, h, t, dh = r.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    kernel = on_tpu() if use_kernel is None else use_kernel
+    c = resolve_chunk(t, chunk)
+    return wkv_diff_summary(
+        c, interpret_default(), bool(kernel), r, k, v, w, u, h0
+    )

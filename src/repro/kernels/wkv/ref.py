@@ -14,6 +14,11 @@ The RWKV6 (Finch) WKV recurrence, per head with ``Dh``-dim keys/values:
   the masked score matrix and the scan carry all materialize — the paper's
   Fig. 1b scratchpad pattern.  Kept as the
   dispatch fallback for non-TPU backends and as a second oracle.
+* :func:`wkv_segment_decay` / :func:`wkv_entry_correction` — the jnp side
+  of the per-segment summary protocol: the decay product ``A_seg`` and the
+  linear contribution of an entering state to a segment's outputs.  Used
+  by the sequence-parallel path (``seqpar.py``) on the jnp backend (the
+  Pallas path emits ``A_seg`` from the kernel itself).
 * :func:`wkv_chunked_bwd_ref` — the hand-derived chunked *backward* sweep:
   the math the reverse Pallas kernel (``bwd.py``) fuses, in plain jnp.
   Recomputes the per-chunk decays and entry states from the primals
@@ -114,6 +119,37 @@ def wkv_chunked_ref(r, k, v, w, u, h0, chunk: int, stage=None):
 
     out = (intra + inter).reshape(b, h, t, dh)
     return out, S_out
+
+
+def wkv_segment_decay(w):
+    """Segment decay product ``A_seg`` (B, H, Dh): the diag-decay half of
+    the (A, S) segment summary.
+
+    ``S_exit = A_seg[..., None] * S_enter + S_exit_from_zero`` — the
+    DIAG_STATE monoid action (:mod:`repro.core.chunk_scan`).  Uses the same
+    decay clip as the kernels so summaries composed across devices match
+    the fused sweep exactly.
+    """
+    logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-8, 1.0))
+    return jnp.exp(jnp.sum(logw, axis=2))
+
+
+def wkv_entry_correction(r, w, s_in):
+    """Contribution of a segment's *entering* state to every output token.
+
+    ``o_t`` depends linearly on the entering state: ``o_t += (r_t ⊙ D_{<t})
+    @ S_in`` with ``D_{<t}`` the decay product over the segment's earlier
+    tokens.  The sequence-parallel path runs the fused kernel with a zero
+    entry, composes the (A, S) summaries across the mesh to obtain
+    ``s_in`` (B, H, Dh, Dh), and adds this term — only the O(Dh²) summary
+    ever crossed the axis.  Exponents here are ≤ 0 (pure decays), so long
+    segments underflow toward 0 instead of overflowing.
+    """
+    f32 = jnp.float32
+    logw = jnp.log(jnp.clip(w.astype(f32), 1e-8, 1.0))
+    cum_excl = jnp.cumsum(logw, axis=2) - logw
+    r_dec = r.astype(f32) * jnp.exp(cum_excl)
+    return jnp.einsum("bhtd,bhde->bhte", r_dec, s_in.astype(f32))
 
 
 def wkv_chunked_bwd_ref(r, k, v, w, u, h0, d_out, d_s_out, chunk: int):

@@ -12,6 +12,15 @@ differentiable core behind :func:`repro.kernels.wkv.ops.wkv_fused`:
   adjoint state in VMEM, or its jnp oracle
   (:func:`~repro.kernels.wkv.ref.wkv_chunked_bwd_ref`).
 
+``wkv_diff_summary`` is the segment-summary twin used by the
+sequence-parallel protocol (:mod:`repro.kernels.wkv.seqpar`): its forward
+additionally returns the segment decay product ``a_seg`` (B, H, Dh), and
+its backward folds the ``a_seg`` cotangent into ``dw`` in closed form —
+``a_seg = exp(Σ_t log w_t)`` means ``∂a/∂w_t = a_seg / w_t`` for every in-
+range ``t``, one elementwise term on top of the shared reverse sweep.  The
+``d_a`` cotangent is exactly what flows back through the device-space
+carry composition (ppermute transposes) during sequence-sharded training.
+
 Both backward paths follow recompute-over-stage: residuals are the primal
 inputs (plus ``s_hist`` on the kernel path); the decay tensors and score
 matrices that ``jax.grad`` of the chunked reference would save and
@@ -25,12 +34,22 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.wkv.bwd import wkv_pallas_bwd
-from repro.kernels.wkv.kernel import wkv_pallas, wkv_pallas_train
-from repro.kernels.wkv.ref import wkv_chunked_bwd_ref, wkv_chunked_ref
+from repro.kernels.wkv.kernel import (
+    wkv_pallas,
+    wkv_pallas_summary,
+    wkv_pallas_train,
+    wkv_pallas_train_summary,
+)
+from repro.kernels.wkv.ref import (
+    wkv_chunked_bwd_ref,
+    wkv_chunked_ref,
+    wkv_segment_decay,
+)
 
-__all__ = ["wkv_diff"]
+__all__ = ["wkv_diff", "wkv_diff_summary"]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
@@ -56,9 +75,9 @@ def _wkv_diff_fwd(chunk, interpret, use_pallas, r, k, v, w, u, h0):
     return (out, s_out), (r, k, v, w, u, h0, s_hist)
 
 
-def _wkv_diff_bwd(chunk, interpret, use_pallas, res, cts):
+def _base_bwd(chunk, interpret, use_pallas, res, d_out, d_s_out):
+    """Shared reverse sweep for both custom_vjps; float32 cotangents."""
     r, k, v, w, u, h0, s_hist = res
-    d_out, d_s_out = cts
     if use_pallas:
         dr, dk, dv, dw, du_part, dh0 = wkv_pallas_bwd(
             r, k, v, w, u, s_hist, d_out, d_s_out,
@@ -69,6 +88,12 @@ def _wkv_diff_bwd(chunk, interpret, use_pallas, res, cts):
         dr, dk, dv, dw, du, dh0 = wkv_chunked_bwd_ref(
             r, k, v, w, u, h0, d_out, d_s_out, chunk=chunk
         )
+    return dr, dk, dv, dw, du, dh0
+
+
+def _cast_grads(res, grads):
+    r, k, v, w, u, h0 = res[:6]
+    dr, dk, dv, dw, du, dh0 = grads
     return (
         dr.astype(r.dtype),
         dk.astype(k.dtype),
@@ -79,4 +104,58 @@ def _wkv_diff_bwd(chunk, interpret, use_pallas, res, cts):
     )
 
 
+def _wkv_diff_bwd(chunk, interpret, use_pallas, res, cts):
+    d_out, d_s_out = cts
+    grads = _base_bwd(chunk, interpret, use_pallas, res, d_out, d_s_out)
+    return _cast_grads(res, grads)
+
+
 wkv_diff.defvjp(_wkv_diff_fwd, _wkv_diff_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def wkv_diff_summary(chunk, interpret, use_pallas, r, k, v, w, u, h0):
+    """Differentiable fused WKV with the segment summary: returns
+    ``(out, S_out, a_seg)`` — ``a_seg`` (B, H, Dh) f32 is the segment
+    decay product (see :func:`~repro.kernels.wkv.ref.wkv_segment_decay`).
+    ``(a_seg, S_out)`` is the (decay, state) pair the sequence-parallel
+    carry composes across the mesh axis."""
+    if use_pallas:
+        return wkv_pallas_summary(
+            r, k, v, w, u, h0, chunk=chunk, interpret=interpret
+        )
+    out, s_out = wkv_chunked_ref(r, k, v, w, u, h0, chunk=chunk)
+    return out.astype(r.dtype), s_out, wkv_segment_decay(w)
+
+
+def _wkv_diff_summary_fwd(chunk, interpret, use_pallas, r, k, v, w, u, h0):
+    if use_pallas:
+        out, s_out, s_hist, a_seg = wkv_pallas_train_summary(
+            r, k, v, w, u, h0, chunk=chunk, interpret=interpret
+        )
+    else:
+        out, s_out = wkv_chunked_ref(r, k, v, w, u, h0, chunk=chunk)
+        out = out.astype(r.dtype)
+        s_hist = None
+        a_seg = wkv_segment_decay(w)
+    return (out, s_out, a_seg), (r, k, v, w, u, h0, s_hist)
+
+
+def _wkv_diff_summary_bwd(chunk, interpret, use_pallas, res, cts):
+    d_out, d_s_out, d_a = cts
+    dr, dk, dv, dw, du, dh0 = _base_bwd(
+        chunk, interpret, use_pallas, res, d_out, d_s_out
+    )
+    # a_seg cotangent: a_seg = exp(Σ_t logw_t) ⇒ dlogw_t += d_a ⊙ a_seg for
+    # every t, and dw_t += dlogw_t / w_t on the in-range (unclipped) steps.
+    # Recomputed from the primal w — no extra residual.
+    w32 = res[3].astype(jnp.float32)
+    a_seg = wkv_segment_decay(res[3])
+    in_range = (w32 >= 1e-8) & (w32 <= 1.0)
+    dw = dw + jnp.where(
+        in_range, (d_a * a_seg)[:, :, None, :] / jnp.clip(w32, 1e-8, 1.0), 0.0
+    )
+    return _cast_grads(res, (dr, dk, dv, dw, du, dh0))
+
+
+wkv_diff_summary.defvjp(_wkv_diff_summary_fwd, _wkv_diff_summary_bwd)

@@ -39,3 +39,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (requires >= data*model host devices)."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_seq_mesh(n: int | None = None, axis: str = "seq"):
+    """1-D mesh over host devices for sequence-parallel runs (benches and
+    the multi-device CI lane; production meshes reuse the model axis via
+    the ``prefill_seq`` rules instead)."""
+    if n is None:
+        n = len(jax.devices())
+    return _make_mesh((n,), (axis,))

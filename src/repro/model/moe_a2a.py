@@ -105,7 +105,6 @@ def apply_moe_sharded(params, x: jax.Array, cfg):
     no mesh/model axis is active (CPU tests) or batch doesn't divide."""
     from functools import partial
 
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.model import moe as moe_mod
@@ -135,20 +134,14 @@ def apply_moe_sharded(params, x: jax.Array, cfg):
         "w_up": P("model", None, None),
         "w_down": P("model", None, None),
     }
-    import inspect
+    # Replication checking off (the a2a writes are deliberately uneven);
+    # shard_map_norep owns the check_rep/check_vma jax-version spelling.
+    from repro.kernels.common import shard_map_norep
 
-    # check_vma (new jax) was called check_rep on 0.4.x; either way we opt
-    # out of replication checking (the a2a writes are deliberately uneven).
-    check_kw = (
-        "check_vma"
-        if "check_vma" in inspect.signature(shard_map).parameters
-        else "check_rep"
-    )
-    f = shard_map(
+    f = shard_map_norep(
         partial(apply_moe_a2a, cfg=cfg, axis_name="model"),
         mesh=mesh,
         in_specs=(param_specs, x_spec),
         out_specs=x_spec,
-        **{check_kw: False},
     )
     return f(params, x)

@@ -23,8 +23,14 @@ from repro.kernels.elevator_scan.ops import elevator_scan
 from repro.kernels.token_shift.ops import token_shift
 from repro.kernels.wkv.ops import wkv_fused
 from repro.kernels.wkv.ref import wkv_chunked_ref, wkv_sequential_ref
+from repro.kernels.wkv.seqpar import wkv_seqshard
 from repro.model.layers import init_rmsnorm, rms_norm
-from repro.model.sharding import constrain, gather_for_use
+from repro.model.sharding import (
+    axes_size,
+    constrain,
+    gather_for_use,
+    seq_shard_info,
+)
 
 _RGLRU_C = 8.0  # Griffin's fixed recurrence-sharpness constant
 
@@ -187,13 +193,39 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
     # kernel on TPU — for training too, since the custom VJP pairs it with
     # the reverse VMEM-adjoint sweep (kernels/wkv/bwd.py) — and the jnp
     # chunked path elsewhere.  Decode t=1 always takes the sequential
-    # oracle (one token has no chunk structure to fuse).
-    out, S = wkv_fused(
-        r_.astype(jnp.float32), k_.astype(jnp.float32),
-        v_.astype(jnp.float32), w_.astype(jnp.float32), u, h0,
-        chunk=chunk,
-        use_kernel=False if t == 1 else use_kernel,
-    )
+    # oracle (one token has no chunk structure to fuse).  r/k/v/w go in
+    # the model dtype (bf16 allowed): every backend accumulates in f32
+    # internally and returns out in the input dtype, so there is no
+    # caller-side upcast doubling the kernel's HBM I/O.
+    #
+    # Under sequence-parallel rules (seq mapped to a mesh axis, e.g. the
+    # prefill_seq mode) the WKV dispatches through the shard_map-ed
+    # segment-summary path: each device runs the fused kernel on its
+    # sequence shard and only the O(Dh²) (decay, state) summary crosses
+    # the seq axis — device-space elevator edges instead of a state
+    # all-gather (kernels/wkv/seqpar).
+    seq_info = seq_shard_info()
+    seq_plan = None
+    if seq_info is not None and t > 1:
+        mesh, seq_ax, batch_ax = seq_info
+        n_seq = axes_size(mesh, seq_ax)
+        n_b = axes_size(mesh, batch_ax)
+        if (isinstance(seq_ax, str) and n_seq > 1 and t % n_seq == 0
+                and b % n_b == 0):
+            seq_plan = (mesh, seq_ax, batch_ax)
+    if seq_plan is not None:
+        mesh, seq_ax, batch_ax = seq_plan
+        out, S = wkv_seqshard(
+            r_, k_, v_, w_, u, h0,
+            mesh=mesh, seq_axis=seq_ax, batch_axis=batch_ax,
+            chunk=chunk, use_kernel=use_kernel,
+        )
+    else:
+        out, S = wkv_fused(
+            r_, k_, v_, w_, u, h0,
+            chunk=chunk,
+            use_kernel=False if t == 1 else use_kernel,
+        )
 
     out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)
     out = rms_norm(params["out_norm"], out, cfg.norm_eps) * g

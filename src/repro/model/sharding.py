@@ -70,6 +70,19 @@ def make_rules(mesh: Mesh, mode: str) -> dict:
         rules["seq"] = None
     elif mode == "prefill":
         rules["seq"] = None
+    elif mode == "prefill_seq":
+        # Long-context prefill: the *sequence* goes over the model axis.
+        # Recurrent blocks detect this rule (see seq_shard_info) and take
+        # the sequence-parallel WKV path — only the O(Dh²) (decay, state)
+        # segment summary crosses the seq axis (kernels/wkv/seqpar), never
+        # the token activations the default GSPMD lowering would gather.
+        # With the model axis spent on the sequence, the per-token feature
+        # activations lose their model mapping (one spec cannot map an
+        # axis twice); parameters keep theirs and GSPMD re-gathers them at
+        # use — at long-context prompt lengths the activations dominate.
+        rules["seq"] = model
+        rules["act_ff"] = None
+        rules["act_heads"] = None
     return rules
 
 
@@ -95,10 +108,48 @@ def sharding_context(mesh: Mesh, rules: dict):
         _CTX.mesh, _CTX.rules = prev
 
 
+def axes_size(mesh: Mesh, axes) -> int:
+    """Total mesh extent of a rules entry (axis name, tuple of names, or
+    None/empty → 1)."""
+    if not axes:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def seq_shard_info():
+    """(mesh, seq_axes, batch_axes) when the active rules map ``seq`` to a
+    mesh axis (sequence-parallel mode, e.g. ``prefill_seq``); None
+    otherwise.  Recurrent blocks consult this to dispatch the
+    segment-summary sequence-parallel path."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return None
+    seq = _CTX.rules.get("seq")
+    if not seq:
+        return None
+    return _CTX.mesh, seq, _CTX.rules.get("batch")
+
+
 def to_pspec(axes: tuple, rules: dict) -> P:
     parts = []
+    used: set = set()
     for ax in axes:
         r = rules.get(ax) if ax is not None else None
+        # A spec may map each mesh axis to at most one dimension.  When a
+        # rules mode aliases two logical axes onto the same mesh axis
+        # (e.g. prefill_seq maps ``seq`` to the model axis, which ``vocab``
+        # also names), the earlier dimension keeps the mapping and later
+        # ones replicate — for activation specs the sequence/batch dims
+        # come first, which is exactly the priority sequence-parallel
+        # modes want.
+        vals = r if isinstance(r, tuple) else (r,)
+        if any(v in used for v in vals if v is not None):
+            r = None
+        else:
+            used.update(v for v in vals if v is not None)
         parts.append(r)
     # Trim trailing Nones for tidiness.
     while parts and parts[-1] is None:

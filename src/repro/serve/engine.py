@@ -76,6 +76,39 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
+# Prompts at/above this length route through the sequence-parallel rules
+# by default; below it, sequence sharding costs more in summary hops than
+# it saves in per-device work.
+SEQ_PREFILL_MIN_T = 1024
+
+
+def make_seq_prefill_step(cfg, mesh, *, min_len: int = SEQ_PREFILL_MIN_T):
+    """Long-context prefill: run the base prefill under ``prefill_seq``
+    sharding rules.
+
+    With the sequence mapped to the model axis, recurrent blocks dispatch
+    the sequence-parallel WKV path (:mod:`repro.kernels.wkv.seqpar`): each
+    device sweeps its own sequence shard with the fused kernel and only
+    the O(Dh²) (decay, state) segment summary crosses the ``seq`` axis —
+    the prompt tokens are never re-gathered.  Prompts shorter than
+    ``min_len`` fall back to the plain prefill rules, where sequence
+    sharding would cost more in carry hops than it saves in per-device
+    work.
+    """
+    from repro.model.sharding import make_rules, sharding_context
+
+    base = make_prefill_step(cfg)
+    seq_rules = make_rules(mesh, "prefill_seq")
+    plain_rules = make_rules(mesh, "prefill")
+
+    def prefill_step(params, tokens, **kw):
+        rules = seq_rules if tokens.shape[1] >= min_len else plain_rules
+        with mesh, sharding_context(mesh, rules):
+            return base(params, tokens, **kw)
+
+    return prefill_step
+
+
 def make_decode_step(cfg):
     """(params, state, tokens (B,1), length ()) -> (logits, new_state)."""
 

@@ -2,10 +2,13 @@
 
 The container does not ship ``hypothesis``.  A module-level hard import
 would make pytest fail *collection* for the whole file, taking every
-plain unit test in it down too.  This shim degrades gracefully: when
-hypothesis is available the real ``given``/``settings``/``st`` are
-re-exported; when it is missing, ``@given`` turns the property test into
-an individually-reported skip and the rest of the module keeps running.
+plain unit test in it down too.  When hypothesis is available the real
+``given``/``settings``/``st`` are re-exported.  When it is missing, a
+tiny deterministic fallback sampler stands in: ``@given`` draws a reduced
+number of examples (:data:`FALLBACK_MAX_EXAMPLES`) from minimal strategy
+implementations, seeded per-test, so the property tests still *execute*
+everywhere instead of skipping.  No shrinking, no database, no coverage
+guidance — just deterministic sampling of the declared space.
 
 Usage (replaces ``from hypothesis import given, settings, strategies as st``)::
 
@@ -20,38 +23,155 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
+    import random
+
     import pytest
 
     HAVE_HYPOTHESIS = False
 
-    class _AnyStrategy:
-        """Stand-in for ``hypothesis.strategies``: every strategy factory
-        exists and returns an inert placeholder (never drawn from)."""
+    # Example budget per property test.  Deliberately small: these run in
+    # the tier-1 lane on every PR; real hypothesis (when installed) keeps
+    # the test's own max_examples.
+    FALLBACK_MAX_EXAMPLES = 6
+
+    class _Strategy:
+        """Minimal strategy: a deterministic ``example(rng)`` draw."""
+
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def example(self, rng):
+            return rng.randint(self.min_value, self.max_value)
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def example(self, rng):
+            return rng.uniform(self.min_value, self.max_value)
+
+        # NB: no NaN/inf/subnormal corners — this is a sampler, not a
+        # property-based fuzzer.
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return self.elements[rng.randrange(len(self.elements))]
+
+    class _OneOf(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return self.options[rng.randrange(len(self.options))].example(rng)
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def example(self, rng):
+            return self.value
+
+    class _Unsupported(_Strategy):
+        def __init__(self, name):
+            self.name = name
+
+    class _FallbackStrategies:
+        """Stand-in for ``hypothesis.strategies`` covering the factories
+        this repo's tests use; anything else yields an ``_Unsupported``
+        marker and the test skips with a pointer here."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def one_of(*options):
+            return _OneOf(options)
+
+        @staticmethod
+        def just(value):
+            return _Just(value)
+
+        @staticmethod
+        def none():
+            return _Just(None)
+
+        @staticmethod
+        def booleans():
+            return _SampledFrom([False, True])
 
         def __getattr__(self, name):
             def _strategy(*args, **kwargs):
-                return None
+                return _Unsupported(name)
 
             _strategy.__name__ = name
             return _strategy
 
-    st = _AnyStrategy()
+    st = _FallbackStrategies()
 
-    def given(*_args, **_kwargs):
+    def given(*gargs, **gkwargs):
         def deco(fn):
-            # (*args, **kwargs) keeps pytest from treating the hypothesis
-            # parameters as fixture requests.
-            def skipper(*args, **kwargs):
-                pytest.skip("hypothesis not installed")
+            cap = min(
+                getattr(fn, "_fallback_max_examples", FALLBACK_MAX_EXAMPLES),
+                FALLBACK_MAX_EXAMPLES,
+            )
 
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            return skipper
+            # (*args, **kwargs) keeps pytest from treating the hypothesis
+            # parameters as fixture requests (do NOT functools.wraps: the
+            # copied signature would reintroduce them).
+            def runner(*args, **kwargs):
+                if gargs:
+                    pytest.skip(
+                        "positional @given not supported by the "
+                        "hypothesis-less fallback sampler"
+                    )
+                unsupported = [
+                    s.name for s in gkwargs.values()
+                    if isinstance(s, _Unsupported)
+                ]
+                if unsupported:
+                    pytest.skip(
+                        "strategies not implemented by the fallback "
+                        f"sampler: {unsupported} (see _hypothesis_compat)"
+                    )
+                # Seeded by the test's identity: deterministic across runs
+                # and processes (random.seed of a str hashes via sha512,
+                # independent of PYTHONHASHSEED).
+                rng = random.Random(f"{fn.__module__}::{fn.__qualname__}")
+                for _ in range(cap):
+                    drawn = {
+                        name: strat.example(rng)
+                        for name, strat in sorted(gkwargs.items())
+                    }
+                    fn(*args, **drawn, **kwargs)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
 
         return deco
 
-    def settings(*_args, **_kwargs):
+    def settings(max_examples=None, **_kwargs):
         def deco(fn):
+            if max_examples is not None:
+                fn._fallback_max_examples = max_examples
             return fn
 
         return deco

@@ -12,6 +12,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import (
+    DIAG_STATE,
+    ELEMENTWISE,
     SharedBuffer,
     barrier,
     chunked_linear_scan,
@@ -81,6 +83,65 @@ class TestLinearScan:
         np.testing.assert_allclose(np.asarray(h_jax), np.asarray(h), rtol=1e-6)
 
 
+class TestSegmentMonoid:
+    """The shared (decay, state) composition law behind chunked_linear_scan,
+    device_linear_scan_carry and the WKV segment summaries."""
+
+    def test_elementwise_compose_is_fold(self):
+        rng = np.random.default_rng(7)
+        segs = [(jnp.asarray(rng.uniform(0.5, 1.0, 3).astype(np.float32)),
+                 jnp.asarray(rng.standard_normal(3).astype(np.float32)))
+                for _ in range(4)]
+        h0 = jnp.asarray(rng.standard_normal(3).astype(np.float32))
+        composed = segs[0]
+        for s in segs[1:]:
+            composed = ELEMENTWISE.compose(composed, s)
+        h = h0
+        for s in segs:
+            h = ELEMENTWISE.apply(s, h)
+        np.testing.assert_allclose(
+            np.asarray(ELEMENTWISE.apply(composed, h0)), np.asarray(h),
+            rtol=1e-6)
+
+    def test_diag_state_compose_is_fold(self):
+        # The WKV case: (..., Dh) decay acting on the rows of a (Dh, Dh)
+        # matrix state.
+        rng = np.random.default_rng(8)
+        dh = 4
+        segs = [(jnp.asarray(rng.uniform(0.5, 1.0, dh).astype(np.float32)),
+                 jnp.asarray(rng.standard_normal((dh, dh)).astype(np.float32)))
+                for _ in range(3)]
+        h0 = jnp.asarray(rng.standard_normal((dh, dh)).astype(np.float32))
+        composed = segs[0]
+        for s in segs[1:]:
+            composed = DIAG_STATE.compose(composed, s)
+        h = np.asarray(h0)
+        for a, b_ in segs:
+            h = np.asarray(a)[:, None] * h + np.asarray(b_)
+        np.testing.assert_allclose(
+            np.asarray(DIAG_STATE.apply(composed, h0)), h, rtol=1e-5,
+            atol=1e-5)
+
+    def test_chunked_linear_scan_diag_state(self):
+        # chunked_linear_scan runs the matrix-state recurrence under the
+        # same monoid: h_t = a_t[:, None] * h_{t-1} + b_t.
+        rng = np.random.default_rng(9)
+        t, dh = 8, 4
+        a = rng.uniform(0.5, 1.0, (t, dh)).astype(np.float32)
+        b = rng.standard_normal((t, dh, dh)).astype(np.float32)
+        h0 = rng.standard_normal((dh, dh)).astype(np.float32)
+        got = chunked_linear_scan(
+            jnp.asarray(a), jnp.asarray(b), chunk=4, h0=h0,
+            monoid=DIAG_STATE)
+        ref = np.zeros((t, dh, dh), np.float32)
+        prev = h0.copy()
+        for i in range(t):
+            prev = a[i][:, None] * prev + b[i]
+            ref[i] = prev
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-5,
+                                   atol=2e-5)
+
+
 def _mesh1d(n, name="x"):
     devs = jax.devices()
     if len(devs) < n:
@@ -120,6 +181,119 @@ class TestDeviceComm:
         )
         x = jnp.arange(8.0)
         np.testing.assert_array_equal(f(x), x)
+
+
+class TestDeviceCarryEdges:
+    """Edge cases of the device-space carry sweeps.
+
+    The single-device-axis cases run everywhere; the n=8 cases need the
+    multi-device lane (scripts/tier1.sh lane 2, or any host with >= 8
+    devices) — tests/test_multidevice.py covers them via subprocess too.
+    """
+
+    def test_single_device_axis_is_identity(self):
+        # n=1: no predecessors — the entering carry is the monoid identity
+        # (1, 0), forward and reverse.
+        mesh = _mesh1d(1)
+        for reverse in (False, True):
+            f = shard_map(
+                lambda a, b: device_linear_scan_carry(
+                    a, b, "x", reverse=reverse),
+                mesh=mesh, in_specs=(P("x"), P("x")), out_specs=(P("x"), P("x")),
+            )
+            ca, cb = f(jnp.full((1, 3), 0.5), jnp.ones((1, 3)))
+            np.testing.assert_array_equal(np.asarray(ca), np.ones((1, 3)))
+            np.testing.assert_array_equal(np.asarray(cb), np.zeros((1, 3)))
+
+    def test_seq_carry_scan_single_device(self):
+        # n=1: the chain degenerates to one chunk_fn call from carry_init,
+        # in either direction.
+        mesh = _mesh1d(1)
+        x = jnp.arange(4.0)
+
+        def chunk_fn(carry, v):
+            return carry + v.sum(), v + carry
+
+        for reverse in (False, True):
+            def run(v, reverse=reverse):
+                c, y = seq_carry_scan(
+                    chunk_fn, jnp.asarray(10.0), v, "x", reverse=reverse)
+                return c.reshape(1), y
+
+            f = shard_map(run, mesh=mesh, in_specs=P("x"),
+                          out_specs=(P("x"), P("x")))
+            carry, y = f(x)
+            np.testing.assert_allclose(np.asarray(carry), [16.0])
+            np.testing.assert_allclose(np.asarray(y), np.arange(4.0) + 10.0)
+
+    def test_carry_nonzero_h0_multidevice(self):
+        # Nonzero h0 enters shard 0 as the boundary constant: the full
+        # sharded scan with entering state ca*h0+cb matches the reference.
+        mesh = _mesh1d(8)
+        T, D = 32, 3
+        rng = np.random.default_rng(11)
+        a = rng.uniform(0.6, 1.0, (T, D)).astype(np.float32)
+        b = rng.standard_normal((T, D)).astype(np.float32)
+        h0 = rng.standard_normal(D).astype(np.float32)
+
+        def sharded(a_loc, b_loc):
+            h_loc = linear_scan(a_loc, b_loc)
+            ca, cb = device_linear_scan_carry(
+                jnp.prod(a_loc, axis=0), h_loc[-1], "x")
+            enter = ca * h0 + cb
+            return h_loc + jnp.cumprod(a_loc, axis=0) * enter[None]
+
+        out = shard_map(sharded, mesh=mesh, in_specs=(P("x"), P("x")),
+                        out_specs=P("x"))(jnp.asarray(a), jnp.asarray(b))
+        ref = ref_linear_scan(a, b, h0)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-4,
+                                   atol=3e-4)
+
+    def test_carry_reverse_multidevice(self):
+        # reverse=True composes successor segments: the entering carry at
+        # shard i equals the fold of shards n-1..i+1.
+        mesh = _mesh1d(8)
+        n, dh = 8, 3
+        rng = np.random.default_rng(12)
+        A = rng.uniform(0.5, 1.0, (n, dh)).astype(np.float32)
+        B = rng.standard_normal((n, dh)).astype(np.float32)
+
+        def rev(a, b):
+            ca, cb = device_linear_scan_carry(a[0], b[0], "x", reverse=True)
+            return ca[None], cb[None]
+
+        ca, cb = shard_map(
+            rev, mesh=mesh, in_specs=(P("x", None), P("x", None)),
+            out_specs=(P("x", None), P("x", None)),
+        )(jnp.asarray(A), jnp.asarray(B))
+        prev_a = np.ones(dh, np.float32)
+        prev_b = np.zeros(dh, np.float32)
+        for i in range(n - 1, -1, -1):
+            np.testing.assert_allclose(np.asarray(ca[i]), prev_a, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(cb[i]), prev_b, rtol=1e-5,
+                                       atol=1e-5)
+            prev_a = A[i] * prev_a
+            prev_b = A[i] * prev_b + B[i]
+        # (update order: segment i applied after its successors)
+
+    def test_seq_carry_scan_reverse_multidevice(self):
+        mesh = _mesh1d(8)
+        vals = jnp.arange(1.0, 9.0)
+
+        def chunk_fn(carry, v):
+            s = carry + v.sum()
+            return s, jnp.zeros_like(v) + s
+
+        def run(v):
+            c, y = seq_carry_scan(
+                chunk_fn, jnp.asarray(0.0), v, "x", reverse=True)
+            return c.reshape(1), y
+
+        carry, ys = shard_map(
+            run, mesh=mesh, in_specs=P("x"), out_specs=(P("x"), P("x")))(vals)
+        want = np.cumsum(np.arange(1.0, 9.0)[::-1])[::-1]
+        np.testing.assert_allclose(np.asarray(ys), want, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(carry)[0], 36.0, rtol=1e-6)
 
 
 class TestScratchpad:

@@ -3,6 +3,15 @@
 The main pytest process must see exactly 1 CPU device (the dry-run alone may
 spawn 512), so these tests re-invoke python in a subprocess with
 ``--xla_force_host_platform_device_count=8`` and assert inside it.
+(The tier-1 lane 2 in scripts/tier1.sh additionally runs the in-process
+device-gated tests with 8 fake devices.)
+
+Two scripts: SCRIPT exercises the core primitives; SCRIPT_WKV is the
+sequence-parallel WKV acceptance suite — forward and gradient parity of
+``wkv_seqshard`` against the single-device fused path on 8 devices, a
+jaxpr audit proving only O(Dh²) segment summaries (never token
+activations) cross the ``seq`` axis, the model-level ``prefill_seq``
+dispatch and the serve-engine long-context prefill step.
 """
 
 import subprocess
@@ -23,7 +32,7 @@ SCRIPT = textwrap.dedent(
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.core import (
-        device_shift, halo_exchange, ring_pass, seq_carry_scan,
+        DIAG_STATE, device_shift, halo_exchange, ring_pass, seq_carry_scan,
         device_linear_scan_carry, linear_scan, pipeline_apply,
     )
 
@@ -81,6 +90,68 @@ SCRIPT = textwrap.dedent(
         ref[t] = prev
     np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-4, atol=3e-4)
 
+    # --- nonzero h0 entering shard 0 (the elevator boundary constant) --------
+    h0 = rng.standard_normal(D).astype(np.float32)
+
+    def chunk_scan_h0(a_loc, b_loc):
+        h_loc = linear_scan(a_loc, b_loc)
+        ca, cb = device_linear_scan_carry(
+            jnp.prod(a_loc, axis=0), h_loc[-1], "x")
+        enter = ca * h0 + cb
+        return h_loc + jnp.cumprod(a_loc, axis=0) * enter[None]
+
+    out = shard_map(chunk_scan_h0, mesh=mesh,
+                    in_specs=(P("x"), P("x")), out_specs=P("x"))(
+        jnp.asarray(a), jnp.asarray(b))
+    ref = np.zeros_like(b)
+    prev = h0.copy()
+    for t in range(T):
+        prev = a[t] * prev + b[t]
+        ref[t] = prev
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-4, atol=3e-4)
+
+    # --- reverse sweeps: the device-space reverse elevator -------------------
+    A = rng.uniform(0.5, 1.0, (8, D)).astype(np.float32)
+    B = rng.standard_normal((8, D)).astype(np.float32)
+
+    def rev_carry(a_, b_):
+        ca, cb = device_linear_scan_carry(a_[0], b_[0], "x", reverse=True)
+        return ca[None], cb[None]
+
+    ca, cb = shard_map(rev_carry, mesh=mesh,
+                       in_specs=(P("x", None), P("x", None)),
+                       out_specs=(P("x", None), P("x", None)))(
+        jnp.asarray(A), jnp.asarray(B))
+    prev_a = np.ones(D, np.float32)
+    prev_b = np.zeros(D, np.float32)
+    for i in range(7, -1, -1):
+        np.testing.assert_allclose(np.asarray(ca[i]), prev_a, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(cb[i]), prev_b, rtol=1e-5,
+                                   atol=1e-5)
+        prev_a = A[i] * prev_a
+        prev_b = A[i] * prev_b + B[i]
+
+    # --- DIAG_STATE monoid across devices: matrix state, diag decay ----------
+    dh = 3
+    Am = rng.uniform(0.5, 1.0, (8, dh)).astype(np.float32)
+    Bm = rng.standard_normal((8, dh, dh)).astype(np.float32)
+    h0m = rng.standard_normal((dh, dh)).astype(np.float32)
+
+    def mat_carry(a_, b_):
+        ca, cb = device_linear_scan_carry(a_[0], b_[0], "x",
+                                          monoid=DIAG_STATE)
+        return ca[None], cb[None]
+
+    ca, cb = shard_map(mat_carry, mesh=mesh,
+                       in_specs=(P("x", None), P("x", None, None)),
+                       out_specs=(P("x", None), P("x", None, None)))(
+        jnp.asarray(Am), jnp.asarray(Bm))
+    prev = h0m.copy()
+    for i in range(8):
+        enter = np.asarray(ca[i])[:, None] * h0m + np.asarray(cb[i])
+        np.testing.assert_allclose(enter, prev, rtol=1e-4, atol=1e-4)
+        prev = Am[i][:, None] * prev + Bm[i]
+
     # --- seq_carry_scan: sequential chain across shards ----------------------
     vals = jnp.arange(1.0, 9.0)  # one per shard
     def chunk_fn(carry, v):
@@ -93,6 +164,17 @@ SCRIPT = textwrap.dedent(
         run_seq, mesh=mesh, in_specs=P("x"), out_specs=(P("x"), P("x")))(vals)
     np.testing.assert_allclose(np.asarray(ys), np.cumsum(np.arange(1.0, 9.0)), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(carry)[-1], 36.0, rtol=1e-6)
+
+    # --- seq_carry_scan reverse: the chain runs last-shard -> first ----------
+    def run_seq_rev(v):
+        c, y = seq_carry_scan(chunk_fn, jnp.asarray(0.0), v, "x",
+                              reverse=True)
+        return c.reshape(1), y
+    carry, ys = shard_map(
+        run_seq_rev, mesh=mesh, in_specs=P("x"), out_specs=(P("x"), P("x")))(vals)
+    want = np.cumsum(np.arange(1.0, 9.0)[::-1])[::-1]
+    np.testing.assert_allclose(np.asarray(ys), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(carry)[0], 36.0, rtol=1e-6)
 
     # --- pipeline_apply: 8-stage pipeline == composed function ---------------
     n_micro, mb, d = 5, 2, 4
@@ -119,9 +201,191 @@ SCRIPT = textwrap.dedent(
 )
 
 
-def test_multidevice_primitives():
-    res = subprocess.run(
-        [sys.executable, "-c", SCRIPT],
+SCRIPT_WKV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import types
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.kernels.wkv.ops import wkv_fused
+    from repro.kernels.wkv.seqpar import wkv_seqshard
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = Mesh(np.array(jax.devices()), ("seq",))
+
+    b, h, t, dh = 2, 2, 128, 8
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.85, 0.999, (b, h, t, dh)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((h, dh)).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((b, h, dh, dh)).astype(np.float32))
+
+    def shard(*args):
+        return wkv_seqshard(*args, mesh=mesh, seq_axis="seq", chunk=8,
+                            use_kernel=False)
+    def single(*args):
+        return wkv_fused(*args, chunk=8, use_kernel=False)
+
+    # --- forward parity on 8 devices, nonzero h0 -----------------------------
+    out1, s1 = single(r, k, v, w, u, h0)
+    out2, s2 = shard(r, k, v, w, u, h0)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out1),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1),
+                               rtol=3e-4, atol=3e-4)
+
+    # --- gradient parity: the custom VJP composes with the device sweep ------
+    co = jnp.asarray(rng.standard_normal((b, h, t, dh)).astype(np.float32))
+    cs = jnp.asarray(rng.standard_normal((b, h, dh, dh)).astype(np.float32))
+
+    def loss(fn):
+        def f(*args):
+            o, s = fn(*args)
+            return (o * co).sum() + (s * cs).sum()
+        return f
+
+    g1 = jax.grad(loss(single), argnums=tuple(range(6)))(r, k, v, w, u, h0)
+    g2 = jax.grad(loss(shard), argnums=tuple(range(6)))(r, k, v, w, u, h0)
+    for name, a_, b_ in zip("r k v w u h0".split(), g1, g2):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   rtol=3e-3, atol=3e-3, err_msg=name)
+
+    # --- jaxpr audit: only segment summaries cross the seq axis --------------
+    # Every collective over the mesh (ppermute hops of the carry, the final
+    # masked psum) must move O(Dh^2) summaries; a token-sized operand
+    # (B, H, T/n, Dh) would mean the protocol regressed to a gather.
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            yield eqn
+            for val in eqn.params.values():
+                vals = val if isinstance(val, (list, tuple)) else [val]
+                for item in vals:
+                    sub = getattr(item, "jaxpr", item)
+                    if hasattr(sub, "eqns"):
+                        yield from walk(sub)
+
+    summary_size = b * h * dh * dh          # the (Dh, Dh) state summary
+    token_size = b * h * (t // 8) * dh      # a per-shard activation block
+
+    def seq_axes(eqn):
+        ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+        return "seq" in (ax if isinstance(ax, tuple) else (ax,))
+
+    def audit(closed, what):
+        comms = []
+        for eqn in walk(closed.jaxpr):
+            name = eqn.primitive.name
+            if name in ("all_gather", "all_to_all", "all_gather_invariant"):
+                if seq_axes(eqn):
+                    raise AssertionError(f"{what}: gather collective {name}")
+            if name in ("ppermute", "psum", "psum_invariant") and seq_axes(eqn):
+                sizes = [int(np.prod(v.aval.shape)) for v in eqn.invars
+                         if hasattr(v, "aval") and v.aval.shape]
+                comms.append((name, max(sizes, default=0)))
+        assert comms, f"{what}: no collectives found over the seq axis"
+        biggest = max(s for _, s in comms)
+        assert biggest <= summary_size, (
+            f"{what}: a collective moved {biggest} elements "
+            f"(> summary {summary_size}; token block = {token_size}) "
+            f"-- token activations crossed the seq axis: {comms}")
+        return comms
+
+    fwd_jaxpr = jax.make_jaxpr(shard)(r, k, v, w, u, h0)
+    audit(fwd_jaxpr, "forward")
+    bwd_jaxpr = jax.make_jaxpr(
+        jax.grad(loss(shard), argnums=tuple(range(6))))(r, k, v, w, u, h0)
+    audit(bwd_jaxpr, "backward")
+    # The transposed carry is the device-space *reverse* elevator: the
+    # backward must contain ppermute hops running high->low shard index.
+    rev_hops = [
+        eqn for eqn in walk(bwd_jaxpr.jaxpr)
+        if eqn.primitive.name == "ppermute" and seq_axes(eqn)
+        and any(src > dst for src, dst in eqn.params["perm"])
+    ]
+    assert rev_hops, "backward jaxpr has no reverse-direction ppermute hops"
+
+    # --- model level: apply_rwkv_block under prefill_seq rules ---------------
+    from repro.model import recurrent as rec
+    from repro.model.sharding import make_rules, sharding_context
+
+    mesh2 = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    rules = make_rules(mesh2, "prefill_seq")
+    assert rules["seq"] == "model", rules
+
+    d = 128
+    mk = lambda shape, scale=0.1: jnp.asarray(
+        rng.standard_normal(shape).astype(np.float32) * scale)
+    params = {
+        "mu": mk((5, d)),
+        "w_r": mk((d, d)), "w_k": mk((d, d)),
+        "w_v": mk((d, d)), "w_g": mk((d, d)),
+        "w_decay_base": mk((d,)),
+        "w_decay_lora_a": mk((d, 64)),
+        "w_decay_lora_b": mk((64, d)),
+        "u_bonus": mk((d,)),
+        "w_o": mk((d, d)),
+        "out_norm": {"scale": jnp.ones((d,), jnp.float32)},
+    }
+    cfg = types.SimpleNamespace(fsdp_gather_weights=False, norm_eps=1e-6)
+    x = mk((2, 64, d), scale=1.0)
+
+    out_plain, _ = rec.apply_rwkv_block(params, x, cfg, chunk=16)
+    with mesh2, sharding_context(mesh2, rules):
+        out_seq, _ = rec.apply_rwkv_block(params, x, cfg, chunk=16)
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(out_plain),
+                               rtol=3e-4, atol=3e-4)
+
+    def block_loss(p, x_, seq):
+        if seq:
+            with mesh2, sharding_context(mesh2, rules):
+                out, _ = rec.apply_rwkv_block(p, x_, cfg, chunk=16)
+        else:
+            out, _ = rec.apply_rwkv_block(p, x_, cfg, chunk=16)
+        return (out * out).sum()
+
+    gp = jax.grad(block_loss)(params, x, False)
+    gs = jax.grad(block_loss)(params, x, True)
+    err = jax.tree.map(
+        lambda a_, b_: float(np.max(np.abs(np.asarray(a_) - np.asarray(b_)))),
+        gp, gs)
+    worst = max(jax.tree.leaves(err))
+    assert worst < 5e-3, err
+
+    # --- serve engine: long-context prefill takes the seq-parallel rules -----
+    from repro.configs.registry import get_config
+    from repro.model import model as M
+    from repro.serve.engine import make_prefill_step, make_seq_prefill_step
+
+    cfg_m = get_config("rwkv6-1.6b").reduced()
+    params_m = M.init_params(cfg_m, jax.random.key(0))
+    tokens = jnp.asarray(
+        rng.integers(0, cfg_m.vocab_size, (2, 64)), jnp.int32)
+    plain = make_prefill_step(cfg_m)(params_m, tokens)
+    seqp = make_seq_prefill_step(cfg_m, mesh2, min_len=32)(params_m, tokens)
+    np.testing.assert_allclose(np.asarray(seqp), np.asarray(plain),
+                               rtol=2e-3, atol=2e-3)
+    # Short prompts stay on the plain rules (no seq sharding below min_len).
+    short = jnp.asarray(rng.integers(0, cfg_m.vocab_size, (2, 16)), jnp.int32)
+    seqp_short = make_seq_prefill_step(cfg_m, mesh2, min_len=32)(
+        params_m, short)
+    plain_short = make_prefill_step(cfg_m)(params_m, short)
+    np.testing.assert_allclose(np.asarray(seqp_short),
+                               np.asarray(plain_short), rtol=2e-3, atol=2e-3)
+
+    print("MULTIDEVICE_WKV_OK")
+    """
+)
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-c", script],
         capture_output=True,
         text=True,
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
@@ -130,5 +394,15 @@ def test_multidevice_primitives():
              "JAX_PLATFORMS": "cpu"},
         timeout=600,
     )
+
+
+def test_multidevice_primitives():
+    res = _run(SCRIPT)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "MULTIDEVICE_OK" in res.stdout
+
+
+def test_multidevice_wkv_seqshard():
+    res = _run(SCRIPT_WKV)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "MULTIDEVICE_WKV_OK" in res.stdout
