@@ -20,6 +20,8 @@ import numpy as np
 from repro.core import from_thread_or_const
 from repro.core.cost_model import (
     wkv_bwd_traffic,
+    wkv_decode_token_io,
+    wkv_decode_traffic,
     wkv_seqshard_traffic,
     wkv_traffic,
 )
@@ -32,10 +34,10 @@ from repro.kernels.wkv.ops import wkv_fused
 from repro.kernels.wkv.ref import wkv_chunked_ref
 
 
-def _time(fn, *args, reps=10):
+def _time(fn, *args, reps=10, jit=True):
     # Best-of-reps: the minimum is the noise-robust estimator on a shared
     # container (mean-of-reps flips close comparisons under load).
-    f = jax.jit(fn)
+    f = jax.jit(fn) if jit else fn
     jax.block_until_ready(f(*args))
     best = float("inf")
     for _ in range(reps):
@@ -70,13 +72,18 @@ def wkv_unfused(r, k, v, w, u, h0, chunk: int = 64):
     return wkv_chunked_ref(r, k, v, w, u, h0, chunk, stage=stage_through_memory)
 
 
-def main() -> list[dict]:
+def main(smoke: bool = False) -> list[dict]:
+    """Returns the bench rows.  ``smoke=True`` (benchmarks/run.py --smoke)
+    shrinks every shape and drops to one rep: a code-path regression check
+    (imports, dispatch wiring, schema), not a measurement."""
     rng = np.random.default_rng(0)
     rows = []
+    r_t = 1 if smoke else 10       # _time reps
+    r_i = 1 if smoke else 8        # _time_interleaved reps
 
     # elevator_scan jnp dispatch (linear scan on CPU) vs the log-depth
     # associative scan vs the sequential reference.
-    b, t, d = 4, 2048, 256
+    b, t, d = (2, 128, 64) if smoke else (4, 2048, 256)
     a = jnp.asarray(rng.uniform(0.8, 1.0, (b, t, d)).astype(np.float32))
     x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
     t_disp, t_log, t_seq = _time_interleaved(
@@ -85,7 +92,7 @@ def main() -> list[dict]:
             elevator_scan_logdepth,
             elevator_scan_ref,
         ],
-        a, x,
+        a, x, reps=r_i,
     )
     rows.append((
         "elevator_scan_jnp", t_disp,
@@ -95,7 +102,8 @@ def main() -> list[dict]:
 
     # token_shift vs unfused shifts.
     w = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
-    t_fused = _time(lambda x_, w_: token_shift(x_, w_, use_kernel=False), x, w)
+    t_fused = _time(lambda x_, w_: token_shift(x_, w_, use_kernel=False),
+                    x, w, reps=r_t)
 
     def unfused(x_, w_):
         out = jnp.zeros_like(x_)
@@ -103,12 +111,12 @@ def main() -> list[dict]:
             out = out + w_[k] * jnp.pad(x_, ((0, 0), (k, 0), (0, 0)))[:, :t]
         return out
 
-    t_unf = _time(unfused, x, w)
+    t_unf = _time(unfused, x, w, reps=r_t)
     rows.append(("token_shift", t_fused, f"unfused_us={t_unf:.0f}"))
 
     # wkv: fused dispatch vs the Fig. 1b staged path, (B=4, T=2048, D=256).
-    bh, hh, tw, dh = 4, 4, 2048, 64            # D = hh * dh = 256
-    chunk = 64
+    bh, hh, tw, dh = (2, 2, 128, 16) if smoke else (4, 4, 2048, 64)
+    chunk = 16 if smoke else 64
     rw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
     kw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
     vw = jnp.asarray(rng.standard_normal((bh, hh, tw, dh)).astype(np.float32))
@@ -121,7 +129,7 @@ def main() -> list[dict]:
             lambda *args: wkv_chunked_ref(*args, chunk=chunk)[0],
             lambda *args: wkv_unfused(*args, chunk=chunk)[0],
         ],
-        rw, kw, vw, ww, uw, h0w,
+        rw, kw, vw, ww, uw, h0w, reps=r_i,
     )
     _, shared_cost, direct_cost = wkv_traffic(bh, hh, tw, dh, chunk)
     energy_red = shared_cost.energy_pj / max(direct_cost.energy_pj, 1e-9)
@@ -150,7 +158,7 @@ def main() -> list[dict]:
             jax.grad(_wkv_loss_vjp, argnums=grad_args),
             jax.grad(_wkv_loss_autodiff, argnums=grad_args),
         ],
-        rw, kw, vw, ww, uw, h0w,
+        rw, kw, vw, ww, uw, h0w, reps=r_i,
     )
     _, bwd_shared, bwd_direct = wkv_bwd_traffic(bh, hh, tw, dh, chunk)
     bwd_energy_red = bwd_shared.energy_pj / max(bwd_direct.energy_pj, 1e-9)
@@ -182,31 +190,85 @@ def main() -> list[dict]:
                 use_kernel=False)[0],
             lambda *args: wkv_fused(*args, chunk=chunk, use_kernel=False)[0],
         ],
-        rw, kw, vw, ww, uw, h0w,
+        rw, kw, vw, ww, uw, h0w, reps=r_i,
     )
     n_model = 8
     gather_cost, _, summary_cost = wkv_seqshard_traffic(bh, hh, tw, dh, n_model)
     crossed_ratio = gather_cost.traffic.dram_bytes / max(
         summary_cost.traffic.fabric_bytes, 1)
+    # On a 1-device host the wall-clock column exercises no cross-device
+    # protocol at all — say so outright rather than letting the row read
+    # as a seq-parallel "speedup" (the multi-device lanes in
+    # scripts/tier1.sh and TPU meshes measure n > 1).
+    dev_note = (
+        "n_dev=1 (layout overhead only, no cross-device hops) "
+        if n_dev == 1
+        else f"n_dev={n_dev} "
+    )
     rows.append((
         "wkv_seqshard", t_seqshard,
-        f"single_dev_us={t_single:.0f} n_dev={n_dev} "
+        f"single_dev_us={t_single:.0f} {dev_note}"
         f"modeled_bytes_crossed_ratio_n{n_model}={crossed_ratio:.0f}x "
         "(O(T*D) token re-gather vs O(Dh^2) summary hops, "
         "cost_model.wkv_seqshard_traffic)",
     ))
 
+    # wkv decode: persistent-state serve windows — per-token dispatch
+    # (the pre-decode-kernel serve loop: one jit call per token) vs one
+    # K-token window dispatch, tokens/s at K ∈ {1, 8, 32}.  CPU wall-clock
+    # measures the jnp dispatch paths + per-dispatch overhead the window
+    # amortizes; the modeled column is the state traffic the window kernel
+    # removes on TPU (one HBM round-trip of S per window instead of per
+    # token, cost_model.wkv_decode_traffic).
+    db, dh_heads, ddh = (2, 2, 16) if smoke else (4, 4, 64)
+    h0d = jnp.asarray(
+        rng.standard_normal((db, dh_heads, ddh, ddh)).astype(np.float32))
+    ud = jnp.asarray(rng.standard_normal((dh_heads, ddh)).astype(np.float32))
+
+    def tok(k_):
+        return [jnp.asarray(
+            rng.standard_normal((db, dh_heads, k_, ddh)).astype(np.float32))
+            for _ in range(3)] + [jnp.asarray(
+                rng.uniform(0.9, 0.999, (db, dh_heads, k_, ddh))
+                .astype(np.float32))]
+
+    window_fn = jax.jit(
+        lambda *args: wkv_fused(*args, decode=True, use_kernel=False))
+    tok_s = {}
+    for k_win in (1, 8, 32):
+        rk, kk, vk, wk = tok(k_win)
+        us = _time(window_fn, rk, kk, vk, wk, ud, h0d, reps=r_t, jit=False)
+        tok_s[k_win] = k_win / us * 1e6
+    tok_io = wkv_decode_token_io(db, dh_heads, ddh, 32)
+    dec_naive, _, dec_direct = wkv_decode_traffic(db, dh_heads, ddh, 32)
+    state_red = (dec_naive.traffic.dram_bytes - tok_io) / max(
+        dec_direct.traffic.dram_bytes - tok_io, 1)
+    rows.append((
+        "wkv_decode", 1e6 / tok_s[1],
+        f"tok_s_k1={tok_s[1]:.0f} tok_s_k8={tok_s[8]:.0f} "
+        f"tok_s_k32={tok_s[32]:.0f} "
+        f"modeled_state_bytes_per_token_reduction_k32={state_red:.0f}x "
+        "(per-token S round-trip vs S-resident window, "
+        "cost_model.wkv_decode_traffic)",
+    ))
+
     # blockwise attention vs full-matrix reference (memory win).
-    q = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)).astype(np.float32))
+    q_shape = (1, 2, 256, 32) if smoke else (1, 4, 2048, 64)
+    blk = 64 if smoke else 256
+    q = jnp.asarray(rng.standard_normal(q_shape).astype(np.float32))
     t_block = _time(
-        lambda q_: attention_blockwise(q_, q_, q_, causal=True, block=256), q
+        lambda q_: attention_blockwise(q_, q_, q_, causal=True, block=blk),
+        q, reps=r_t,
     )
-    t_full = _time(lambda q_: attention_ref(q_, q_, q_, causal=True), q)
+    t_full = _time(lambda q_: attention_ref(q_, q_, q_, causal=True), q,
+                   reps=r_t)
     rows.append(("attention_blockwise", t_block, f"full_ref_us={t_full:.0f}"))
 
     # elevator shift primitive.
-    big = jnp.asarray(rng.standard_normal(1 << 20).astype(np.float32))
-    t_shift = _time(lambda v: from_thread_or_const(v, 5, 0.0, window=4096), big)
+    big = jnp.asarray(
+        rng.standard_normal(1 << (14 if smoke else 20)).astype(np.float32))
+    t_shift = _time(lambda v: from_thread_or_const(v, 5, 0.0, window=4096),
+                    big, reps=r_t)
     rows.append(("from_thread_or_const_1M", t_shift, "window=4096"))
 
     print("name,us_per_call,derived")

@@ -238,47 +238,56 @@ def modeled_time_direct(cost: "cost_model.KernelCost", critical_path: float,
 # Harness
 # --------------------------------------------------------------------------
 
-def run(reps: int = 20) -> list[dict]:
+def run(reps: int = 20, smoke: bool = False) -> list[dict]:
+    # Smoke mode (benchmarks/run.py --smoke): tiny shapes, one rep — the
+    # point is exercising every code path (imports, kernel wiring, the
+    # shared/direct parity asserts), not producing meaningful timings.
+    n = 1 << 10 if smoke else N
+    mat = 32 if smoke else MAT
+    grid_hw = (16, 32) if smoke else GRID
+    bp = (8, 64) if smoke else (64, 2048)
+
     rng = np.random.default_rng(0)
-    x1 = jnp.asarray(rng.standard_normal(N).astype(np.float32))
+    x1 = jnp.asarray(rng.standard_normal(n).astype(np.float32))
     k3 = jnp.asarray([0.25, 0.5, 0.25], jnp.float32)
-    a_m = jnp.asarray(rng.standard_normal((MAT, MAT)).astype(np.float32))
-    b_m = jnp.asarray(rng.standard_normal((MAT, MAT)).astype(np.float32))
-    grid = jnp.asarray(rng.standard_normal(GRID).astype(np.float32))
-    w_b = jnp.asarray(rng.standard_normal((64, 2048)).astype(np.float32) * 0.05)
-    x_b = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
-    pf_cost = jnp.asarray(rng.random(N).astype(np.float32))
+    a_m = jnp.asarray(rng.standard_normal((mat, mat)).astype(np.float32))
+    b_m = jnp.asarray(rng.standard_normal((mat, mat)).astype(np.float32))
+    grid = jnp.asarray(rng.standard_normal(grid_hw).astype(np.float32))
+    w_b = jnp.asarray(rng.standard_normal(bp).astype(np.float32) * 0.05)
+    x_b = jnp.asarray(rng.standard_normal(bp[1]).astype(np.float32))
+    pf_cost = jnp.asarray(rng.random(n).astype(np.float32))
 
     import math
 
-    log2n = math.log2(N)
+    log2n = math.log2(n)
     cases = [
         # name, shared_fn, direct_fn, args, costs,
         #   n_barriers, n_threads, chain_direct, width_direct
         ("scan", scan_shared, scan_direct, (x1,),
-         cost_model.scan_traffic(N), log2n, N, N, CGRA_UNITS),
+         cost_model.scan_traffic(n), log2n, n, n, CGRA_UNITS),
         ("matrixMul", matmul_shared, matmul_direct, (a_m, b_m),
-         cost_model.matmul_traffic(MAT, MAT, MAT), 2 * MAT / 16, MAT * MAT,
-         MAT, CGRA_UNITS),
+         cost_model.matmul_traffic(mat, mat, mat), 2 * mat / 16, mat * mat,
+         mat, CGRA_UNITS),
         ("convolution", conv_shared, conv_direct, (x1, k3),
-         cost_model.conv1d_traffic(N), 1, N, 2, CGRA_UNITS),
+         cost_model.conv1d_traffic(n), 1, n, 2, CGRA_UNITS),
         ("reduce", reduce_shared, reduce_direct, (x1,),
-         cost_model.reduce_traffic(N), log2n, N, log2n, CGRA_UNITS),
+         cost_model.reduce_traffic(n), log2n, n, log2n, CGRA_UNITS),
         ("lud", lud_shared, lud_direct, (a_m,),
-         cost_model.matmul_traffic(MAT - 1, 1, MAT - 1), 2, MAT * MAT, 2,
+         cost_model.matmul_traffic(mat - 1, 1, mat - 1), 2, mat * mat, 2,
          CGRA_UNITS),
         ("srad", srad_shared, srad_direct, (grid,),
-         cost_model.stencil2d_traffic(*GRID), 1, GRID[0] * GRID[1], 2,
-         CGRA_UNITS),
+         cost_model.stencil2d_traffic(*grid_hw), 1, grid_hw[0] * grid_hw[1],
+         2, CGRA_UNITS),
         ("hotspot", hotspot_shared, hotspot_direct, (grid,),
-         cost_model.stencil2d_traffic(*GRID), 1, GRID[0] * GRID[1], 2,
-         CGRA_UNITS),
+         cost_model.stencil2d_traffic(*grid_hw), 1, grid_hw[0] * grid_hw[1],
+         2, CGRA_UNITS),
         ("pathfinder", pathfinder_shared, pathfinder_direct, (pf_cost, x1),
-         cost_model.stencil2d_traffic(1, N, pts=3), 1, N, 2, CGRA_UNITS),
+         cost_model.stencil2d_traffic(1, n, pts=3), 1, n, 2, CGRA_UNITS),
         # BPNN keeps the original adjacent-thread chain (paper §5.2): only
-        # 64 chains run concurrently -> width-limited + 2048-deep chain.
+        # bp[0] chains run concurrently -> width-limited + bp[1]-deep chain.
         ("bpnn", bpnn_shared, bpnn_direct, (w_b, x_b),
-         cost_model.reduce_traffic(64 * 2048), math.log2(2048), 2048, 2048, 64),
+         cost_model.reduce_traffic(bp[0] * bp[1]), math.log2(bp[1]), bp[1],
+         bp[1], bp[0]),
     ]
 
     rows = []
@@ -311,8 +320,8 @@ def run(reps: int = 20) -> list[dict]:
     return rows
 
 
-def main():
-    rows = run()
+def main(smoke: bool = False):
+    rows = run(reps=1 if smoke else 20, smoke=smoke)
     print("name,us_shared,us_direct,wallclock_speedup,modeled_speedup,"
           "energy_reduction,traffic_reduction,critical_path_direct")
     for r in rows:

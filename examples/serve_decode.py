@@ -24,12 +24,15 @@ def main():
     for arch in ARCHS:
         cfg = get_config(arch).reduced()
         params = M.init_params(cfg, jax.random.key(0))
-        engine = ServeEngine(cfg, params, max_len=96)
+        # decode_window=8: one-jit prompt prefill, then 16 tokens in
+        # ceil(16/8)=2 decode dispatches with donated (in-place) state.
+        engine = ServeEngine(cfg, params, max_len=96, decode_window=8)
         prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 12)), jnp.int32)
         t0 = time.perf_counter()
         out = engine.generate(prompts, num_new_tokens=16)
         dt = time.perf_counter() - t0
-        print(f"{arch:22s} -> {out.shape} in {dt:.2f}s; "
+        print(f"{arch:22s} -> {out.shape} in {dt:.2f}s "
+              f"({engine.last_decode_dispatches} decode dispatches); "
               f"sample: {np.asarray(out[0, -6:]).tolist()}")
 
 

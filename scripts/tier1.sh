@@ -24,3 +24,8 @@ python -m pytest -x -q "$@"
 echo "== tier-1 lane 2: multi-device (8 fake CPU host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
     python -m pytest -x -q tests/test_core_scan_comm.py tests/test_multidevice.py
+
+echo "== tier-1 lane 3: benchmark-path smoke (tiny shapes, no timing) =="
+# Catches bench-path regressions (import errors, dispatch wiring, row
+# schema drift) at CI speed; never rewrites BENCH_kernels.json.
+python -m benchmarks.run --smoke

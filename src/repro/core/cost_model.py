@@ -253,6 +253,53 @@ def wkv_bwd_traffic(b: int, h: int, t: int, dh: int, chunk: int = 64,
     )
 
 
+def wkv_decode_token_io(b: int, h: int, dh: int, k: int = 1,
+                        itemsize: int = 4) -> int:
+    """Unavoidable decode token I/O: r/k/v/w in, o out, + u once per head.
+    Shared by every :func:`wkv_decode_traffic` variant — callers subtract
+    it to isolate the state bytes the decode window amortizes."""
+    return b * h * k * 5 * dh * itemsize + h * dh * itemsize
+
+
+def wkv_decode_traffic(b: int, h: int, dh: int, k: int = 1,
+                       itemsize: int = 4):
+    """WKV decode: K generated tokens through one (Dh × Dh)-state layer.
+
+    naive:  per-token dispatch — the state round-trips HBM every token
+            (2·Dh² bytes/token), which dominates decode traffic since the
+            token I/O is only O(Dh).  This is what the pre-decode-kernel
+            serve loop paid: ``wkv_traffic``'s "naive" row restricted to
+            one token, K times.
+    shared: the state staged through scratchpad within a window — HBM
+            sees one round-trip per window, but every intermediate state
+            still crosses a memory tier per token (the GPGPU
+            shared-memory rendering).
+    direct: the decode window kernel (kernels/wkv/decode): one HBM read
+            of S at window entry + one write at exit; the K-1
+            intermediate states ride the VMEM carry (fabric tier).
+            Per-token state bytes drop by ~K×.
+    """
+    state = dh * dh
+    tok_io = wkv_decode_token_io(b, h, dh, k, itemsize)
+    naive = Traffic(dram_bytes=tok_io + b * h * k * 2 * state * itemsize)
+    shared = Traffic(
+        dram_bytes=tok_io + b * h * 2 * state * itemsize,
+        scratchpad_bytes=b * h * 2 * k * state * itemsize,
+    )
+    direct = Traffic(
+        dram_bytes=tok_io + b * h * 2 * state * itemsize,
+        fabric_bytes=b * h * 2 * max(k - 1, 0) * state * itemsize,
+    )
+    # Per token: state matvec read (r·S) + rank-1 update (kᵀv, decay), 2
+    # flops per MAC.
+    flops = b * h * k * 2 * 2 * dh * dh
+    return (
+        KernelCost("wkv_decode", "naive", naive, flops),
+        KernelCost("wkv_decode", "shared", shared, flops),
+        KernelCost("wkv_decode", "direct", direct, flops),
+    )
+
+
 def wkv_seqshard_traffic(b: int, h: int, t: int, dh: int, n_dev: int,
                          itemsize: int = 4):
     """Sequence-parallel WKV: bytes crossing the ``seq`` mesh axis per

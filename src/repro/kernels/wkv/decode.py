@@ -1,0 +1,240 @@
+"""Pallas TPU decode micro-kernels: persistent WKV state across tokens.
+
+Decode is the repo's worst memory offender: every generated token used to
+read and write the full (B, H, Dh, Dh) WKV state through HBM, because the
+``t == 1`` dispatch punted to the jnp sequential oracle and the serve loop
+re-dispatched per token.  These kernels are the paper's loop-carried-value
+argument applied to serving:
+
+* :func:`wkv_decode_pallas` — the single-step kernel on a ``(batch, head)``
+  grid.  One token: ``o = r · (S + u kᵀv)``, ``S' = diag(w) S + kᵀv``, f32
+  accumulation, bf16 I/O like the fused path.  No chunk machinery, no
+  score matrices — two rank-1 updates and a matvec, fused in one pass so
+  the state is read from HBM exactly once and written exactly once.
+* :func:`wkv_decode_window_pallas` — the multi-token variant: a
+  ``(B, H, K, Dh)`` window of K decode steps swept in ONE kernel
+  invocation on a ``(batch, head, K)`` grid with S held in a VMEM scratch
+  — the same Δ=1 elevator carry the chunked kernel uses over chunk space,
+  now over *decode steps*.  One HBM read + one write of S per K tokens
+  instead of per token; the K-1 intermediate states ride the fabric
+  (``cost_model.wkv_decode_traffic`` counts exactly these bytes).  K is
+  arbitrary (no divisibility constraint — there is no chunk structure).
+
+Unlike the chunked kernel there is no decay-ratio factorization: the
+sequential form is exact and the per-step work is O(Dh²), so nothing is
+gained by exponent bookkeeping — and losing it removes the clip-range
+coupling between window length and decay magnitude.
+
+Both entry points are differentiable through :func:`wkv_decode_diff`
+(recompute-over-stage: the backward is the sequential manual sweep
+``wkv_chunked_bwd_ref(chunk=1)``; the only residuals are the primals).
+Dispatch (``ops.wkv_fused(decode=True)``) sends windows up to
+:data:`DECODE_WINDOW_MAX` tokens here and longer stateful sweeps (e.g.
+long-prompt prefill-into-cache) to the chunked kernel, where the MXU score
+matrices start paying for themselves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import reset_carry
+from repro.kernels.wkv.ref import wkv_chunked_bwd_ref, wkv_sequential_ref
+
+# Stateful (decode) dispatches at or below this many tokens take the
+# window kernel; above it the chunked elevator kernel wins (intra-chunk
+# score matmuls amortize on the MXU).  64 = one chunk of the fused path.
+DECODE_WINDOW_MAX = 64
+
+__all__ = [
+    "DECODE_WINDOW_MAX",
+    "wkv_decode_pallas",
+    "wkv_decode_window_pallas",
+    "wkv_decode_diff",
+]
+
+
+def _decode_token(r, k, v, w, u, S):
+    """One WKV step on (1, dh) token rows against the (dh, dh) state.
+
+    Returns ``(o, S_new)`` in f32.  ``o = r·(S + u kᵀv)`` splits into the
+    state matvec plus a u-weighted rank-1 bonus: ``o = r @ S + (r·u·k) v``.
+    """
+    kv = jax.lax.dot_general(
+        k, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                                   # kᵀv: (dh, dh)
+    inter = jnp.dot(r, S, preferred_element_type=jnp.float32)   # (1, dh)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (1, 1)
+    o = inter + bonus * v
+    S_new = S * w[0][:, None] + kv
+    return o, S_new
+
+
+def wkv_decode_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref,
+                      out_ref, s_out_ref):
+    """Single step, grid (batch, head): state read once, written once."""
+    r = r_ref[0, 0].astype(jnp.float32)                 # (1, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                    # (dh,)
+    o, S_new = _decode_token(r, k, v, w, u, h0_ref[0, 0])
+    out_ref[0, 0] = o.astype(out_ref.dtype)
+    s_out_ref[0, 0] = S_new
+
+
+def wkv_decode_window_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, h0_ref,
+                             out_ref, s_out_ref, s_ref):
+    """K-step window, grid (batch, head, K): S rides the VMEM scratch.
+
+    Grid step ``i`` withdraws the state deposited by step ``i-1`` (step 0
+    withdraws the boundary constant ``h0``) — the elevator hand-off of the
+    chunked kernel with decode steps as the chunk axis.  HBM sees one read
+    (``h0``) and one write (``s_out``, last grid step wins) per K tokens.
+    """
+    reset_carry(s_ref, h0_ref[0, 0], seq_axis=2)
+    r = r_ref[0, 0].astype(jnp.float32)                 # (1, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+    o, S_new = _decode_token(r, k, v, w, u, s_ref[...])
+    out_ref[0, 0] = o.astype(out_ref.dtype)
+    s_ref[...] = S_new                                  # hand-off: TID -> TID+1
+    s_out_ref[0, 0] = S_new                             # last grid step wins
+
+
+def _validate(r, u, h0):
+    b, h, t, dh = r.shape
+    if u.shape != (h, dh):
+        raise ValueError(f"u shape {u.shape} != {(h, dh)}")
+    if h0.shape != (b, h, dh, dh):
+        raise ValueError(f"h0 shape {h0.shape} != {(b, h, dh, dh)}")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_decode_pallas(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    interpret: bool = False,
+):
+    """Single decode step.  r/k/v/w: (B, H, 1, Dh); u: (H, Dh);
+    h0: (B, H, Dh, Dh).  Returns (out (B,H,1,Dh) r.dtype, S (B,H,Dh,Dh) f32).
+    """
+    b, h, t, dh = r.shape
+    if t != 1:
+        raise ValueError(f"wkv_decode_pallas is single-step; got T={t}")
+    _validate(r, u, h0)
+    seq_spec = pl.BlockSpec((1, 1, 1, dh), lambda bi, hi: (bi, hi, 0, 0))
+    state_spec = pl.BlockSpec((1, 1, dh, dh), lambda bi, hi: (bi, hi, 0, 0))
+    return pl.pallas_call(
+        wkv_decode_kernel,
+        grid=(b, h),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, dh), lambda bi, hi: (hi, 0)),  # u
+            state_spec,
+        ],
+        out_specs=(seq_spec, state_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, 1, dh), r.dtype),
+            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_decode_window_pallas(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    h0: jax.Array,
+    *,
+    interpret: bool = False,
+):
+    """K-token decode window.  r/k/v/w: (B, H, K, Dh), any K >= 1 (no
+    divisibility constraint); u: (H, Dh); h0: (B, H, Dh, Dh).  Returns
+    (out (B,H,K,Dh) r.dtype, S (B,H,Dh,Dh) f32) — bit-identical to K
+    single steps chained, with one HBM round-trip of S instead of K.
+    """
+    b, h, t, dh = r.shape
+    _validate(r, u, h0)
+    seq_spec = pl.BlockSpec((1, 1, 1, dh), lambda bi, hi, ti: (bi, hi, ti, 0))
+    state_spec = pl.BlockSpec((1, 1, dh, dh), lambda bi, hi, ti: (bi, hi, 0, 0))
+    return pl.pallas_call(
+        wkv_decode_window_kernel,
+        grid=(b, h, t),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, dh), lambda bi, hi, ti: (hi, 0)),  # u
+            state_spec,
+        ],
+        out_specs=(seq_spec, state_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, t, dh), r.dtype),
+            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, h0)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper (ops.wkv_fused decode dispatch)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def wkv_decode_diff(interpret, use_pallas, r, k, v, w, u, h0):
+    """Differentiable decode-window WKV.  Returns ``(out, S_out)`` with
+    ``out`` in ``r.dtype`` and ``S_out`` float32.
+
+    Forward: the single-step kernel (K == 1) or the window kernel
+    (``use_pallas=True``), else the jnp sequential oracle — for decode
+    windows the sequential form IS the cheapest jnp rendering (no chunk
+    structure to exploit).  Backward: the manual sequential sweep
+    (``wkv_chunked_bwd_ref`` at chunk 1) — recompute-over-stage, so the
+    only residuals are the primal inputs.
+    """
+    if use_pallas:
+        if r.shape[2] == 1:
+            return wkv_decode_pallas(r, k, v, w, u, h0, interpret=interpret)
+        return wkv_decode_window_pallas(r, k, v, w, u, h0, interpret=interpret)
+    out, s_out = wkv_sequential_ref(r, k, v, w, u, h0)
+    return out.astype(r.dtype), s_out
+
+
+def _wkv_decode_fwd(interpret, use_pallas, r, k, v, w, u, h0):
+    out = wkv_decode_diff(interpret, use_pallas, r, k, v, w, u, h0)
+    return out, (r, k, v, w, u, h0)
+
+
+def _wkv_decode_bwd(interpret, use_pallas, res, cts):
+    r, k, v, w, u, h0 = res
+    d_out, d_s_out = cts
+    dr, dk, dv, dw, du, dh0 = wkv_chunked_bwd_ref(
+        r, k, v, w, u, h0, d_out, d_s_out, chunk=1
+    )
+    return (
+        dr.astype(r.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        dw.astype(w.dtype),
+        du.astype(u.dtype),
+        dh0.astype(h0.dtype),
+    )
+
+
+wkv_decode_diff.defvjp(_wkv_decode_fwd, _wkv_decode_bwd)

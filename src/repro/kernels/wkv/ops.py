@@ -17,6 +17,18 @@ long odd sequences (``wkv_chunked_ref`` itself now raises instead).  The
 warning fires once per distinct ``(T, chunk)`` pair: dispatch runs at
 trace time under the model's outer jit, and a per-retrace warning is pure
 log spam.
+
+Decode dispatch: ``decode=True`` marks a *stateful serving* call (the
+model threads it from ``decode_step``).  Windows up to
+:data:`~repro.kernels.wkv.decode.DECODE_WINDOW_MAX` tokens take the
+persistent-state decode kernels (:mod:`repro.kernels.wkv.decode`): S is
+read from HBM once and written once per window, intermediate states ride
+a VMEM carry, and there is no chunk-divisibility constraint (a decode
+window has no chunk structure).  Longer stateful sweeps — e.g. filling
+the cache from a long prompt — fall through to the chunked elevator
+kernel, where the intra-chunk score matmuls amortize on the MXU.
+``decode=None`` (the default) infers ``t == 1``, so plain single-token
+calls hit the decode path with no caller change.
 """
 
 from __future__ import annotations
@@ -27,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, largest_divisor_chunk, on_tpu
+from repro.kernels.wkv.decode import DECODE_WINDOW_MAX, wkv_decode_diff
 from repro.kernels.wkv.ref import wkv_sequential_ref
 from repro.kernels.wkv.vjp import wkv_diff, wkv_diff_summary
 
@@ -61,6 +74,7 @@ def wkv_fused(
     *,
     chunk: int = 64,
     use_kernel: bool | None = None,
+    decode: bool | None = None,
 ):
     """RWKV6 WKV:  S_t = diag(w_t) S_{t-1} + k_t^T v_t;
     o_t = r_t · (S_{t-1} + u k_t^T v_t).
@@ -68,6 +82,10 @@ def wkv_fused(
     r/k/v/w: (B, H, T, Dh); u: (H, Dh); h0: (B, H, Dh, Dh) or None (zeros).
     Returns ``(out, S_out)`` with ``out`` (B,H,T,Dh) in ``r.dtype`` and
     ``S_out`` (B,H,Dh,Dh) in float32.  Differentiable on every path.
+
+    ``decode`` marks a stateful serving call (see module docstring):
+    windows of at most ``DECODE_WINDOW_MAX`` tokens take the
+    persistent-state decode kernels; ``None`` infers ``t == 1``.
 
     bf16 I/O: r/k/v/w may arrive in bf16 (or any float dtype) — no
     caller-side upcast needed.  Every backend accumulates in float32
@@ -80,12 +98,19 @@ def wkv_fused(
         h0 = jnp.zeros((b, h, dh, dh), jnp.float32)
 
     kernel = on_tpu() if use_kernel is None else use_kernel
-    c = resolve_chunk(t, chunk)
-    if not kernel and t == 1:
-        # Decode: one token, no chunk structure — the sequential oracle is
-        # the cheapest jnp form (and autodiff through one step is trivial).
+    if decode is None:
+        decode = t == 1
+    if decode and t <= DECODE_WINDOW_MAX:
+        if kernel:
+            # Persistent-state decode kernel: one HBM round-trip of S per
+            # window, VMEM carry between the window's tokens.
+            return wkv_decode_diff(interpret_default(), True, r, k, v, w, u, h0)
+        # jnp fallback: the sequential oracle is the cheapest form for a
+        # short stateful window (no chunk structure to exploit), and
+        # autodiff through a few steps is trivial.
         out, s_out = wkv_sequential_ref(r, k, v, w, u, h0)
         return out.astype(r.dtype), s_out
+    c = resolve_chunk(t, chunk)
     return wkv_diff(c, interpret_default(), bool(kernel), r, k, v, w, u, h0)
 
 

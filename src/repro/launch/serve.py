@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--decode-window", type=int, default=8,
+                    help="tokens generated per decode dispatch (K)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,7 +39,8 @@ def main():
 
     print(f"initializing {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
     params = M.init_params(cfg, jax.random.key(args.seed))
-    engine = ServeEngine(cfg, params, max_len=args.max_len)
+    engine = ServeEngine(cfg, params, max_len=args.max_len,
+                         decode_window=args.decode_window)
 
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
@@ -48,7 +51,9 @@ def main():
     dt = time.perf_counter() - t0
     total_new = args.batch * args.new_tokens
     print(f"generated {out.shape} in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s incl. prefill)")
+          f"({total_new/dt:.1f} tok/s incl. prefill; "
+          f"{engine.last_decode_dispatches} decode dispatches at "
+          f"K={args.decode_window})")
     print("first sequence:", np.asarray(out[0]).tolist())
 
 

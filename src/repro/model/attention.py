@@ -95,19 +95,16 @@ def apply_attention(
 
     if not cross:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
-        kpos = positions if kv_cache is None else positions
-        k = apply_rope(k, kpos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
 
     new_cache = None
     if kv_cache is not None and not cross:
-        # Decode: append this step's K/V and attend to the cache.  Local
-        # layers use a ring buffer of size window+1 (slot = pos mod S) — the
-        # insert-position arithmetic below is universal because for a
-        # full-length cache length < S, so length mod S == length.
-        s_cache = kv_cache.k.shape[2]
-        insert_at = kv_cache.length % s_cache
-        k_cache = _masked_insert(kv_cache.k, k, insert_at)
-        v_cache = _masked_insert(kv_cache.v, v, insert_at)
+        # Decode: append this step's K/V (a window of t >= 1 tokens) and
+        # attend to the cache.  Local layers use a ring buffer (slot =
+        # pos mod S); the mod-arithmetic in _masked_insert is universal
+        # because for a full-length cache length + t <= S.
+        k_cache = _masked_insert(kv_cache.k, k, kv_cache.length)
+        v_cache = _masked_insert(kv_cache.v, v, kv_cache.length)
         new_cache = KVCache(k_cache, v_cache, kv_cache.length + t)
         out = _decode_attention(
             q, k_cache, v_cache, kv_cache.length, cfg, window=window
@@ -129,7 +126,8 @@ def apply_attention(
 
 
 def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array):
-    """Insert `new` (B,H,t,D) at position `length` along axis 2.
+    """Insert `new` (B,H,t,D) at absolute positions length..length+t-1
+    along axis 2, ring-buffer aware (slot = pos mod S).
 
     Uses a positional where-mask instead of dynamic_update_slice so the
     cache's sequence sharding is preserved (no gather/dynamic-slice
@@ -138,28 +136,45 @@ def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array):
     """
     s = cache.shape[2]
     t = new.shape[2]
+    if t > s:
+        # A window wider than the whole ring can never be represented —
+        # static shapes, so reject at trace time.  Windows that *fit* but
+        # exceed the state's insert_window contract
+        # (model.init_decode_state) cannot be detected here: whether the
+        # ring wraps depends on the traced ``length`` and on the max_len
+        # cap the builder applied, so honoring insert_window >= K is the
+        # caller's contract (ServeEngine always satisfies it) — violating
+        # it on a local-attention layer silently truncates the context
+        # the earlier in-window queries see.
+        raise ValueError(
+            f"decode window of {t} tokens exceeds cache size {s}; build the "
+            f"state with init_decode_state(insert_window >= {t})"
+        )
     idx = jnp.arange(s, dtype=jnp.int32)
+    # The window token landing on each slot (ring: slot = pos mod S);
+    # t <= S guarantees at most one writer per slot.
+    off = jnp.mod(idx - length, s)
     if t == 1:
-        sel = (idx == length)[None, None, :, None]
+        sel = (off == 0)[None, None, :, None]
         return jnp.where(sel, new.astype(cache.dtype), cache)
-    sel = (idx >= length) & (idx < length + t)
-    # Align `new` to cache positions: roll new into place.
-    padded = jnp.zeros_like(cache[:, :, :s])
-    padded = jax.lax.dynamic_update_slice_in_dim(
-        padded, new.astype(cache.dtype), length, axis=2
-    )
-    return jnp.where(sel[None, None, :, None], padded, cache)
+    sel = off < t
+    gathered = jnp.take(new.astype(cache.dtype), jnp.clip(off, 0, t - 1),
+                        axis=2)
+    return jnp.where(sel[None, None, :, None], gathered, cache)
 
 
 def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):
-    """Single-step attention against a (possibly seq-sharded) KV cache.
+    """Windowed decode attention against a (possibly seq-sharded) KV cache.
 
-    q: (B, Hq, t, Dh) with t == new tokens (1); ``cur_pos`` is the absolute
-    position of the current token (== pre-insert cache length).  Softmax
-    over the cache axis is written max/exp/sum-explicitly; if `kv_seq` is
-    sharded, GSPMD lowers it to per-shard partials + a tiny psum
-    (flash-decoding combine).  Ring-buffer caches are handled positionally:
-    slot i holds absolute position cur_pos - ((cur_pos - i) mod S).
+    q: (B, Hq, t, Dh) with t >= 1 new tokens at absolute positions
+    cur_pos..cur_pos+t-1 (``cur_pos`` == pre-insert cache length; the
+    cache already contains the window's K/V).  Softmax over the cache axis
+    is written max/exp/sum-explicitly; if `kv_seq` is sharded, GSPMD
+    lowers it to per-shard partials + a tiny psum (flash-decoding
+    combine).  Ring-buffer caches are handled positionally: post-insert,
+    slot i holds absolute position last - ((last - i) mod S) with
+    last = cur_pos + t - 1.  Queries mask causally *within* the window:
+    query j attends only to slots whose absolute position is <= cur_pos+j.
     """
     b, hq, t, hd = q.shape
     nkv = k_cache.shape[1]
@@ -167,23 +182,26 @@ def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):
     s = k_cache.shape[2]
     scale = 1.0 / math.sqrt(hd)
 
-    qg = q.reshape(b, nkv, group * t, hd)
+    qg = q.reshape(b, nkv, group, t, hd)
     logits = jnp.einsum(
-        "bhqd,bhsd->bhqs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+        "bhgtd,bhsd->bhgts", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
     ) * scale
     logits = _softcap(logits, cfg.attn_logit_softcap)
 
     slot = jnp.arange(s, dtype=jnp.int32)
-    abs_pos = cur_pos - jnp.mod(cur_pos - slot, s)   # newest pos <= cur_pos in slot
-    valid = abs_pos[None, None, None, :] >= 0
+    last = cur_pos + t - 1
+    abs_pos = last - jnp.mod(last - slot, s)         # newest pos <= last in slot
+    qpos = cur_pos + jnp.arange(t, dtype=jnp.int32)  # (t,)
+    valid = (abs_pos[None, :] >= 0) & (abs_pos[None, :] <= qpos[:, None])
     if window is not None:
-        valid &= abs_pos[None, None, None, :] > (cur_pos - window)
+        valid &= abs_pos[None, :] > (qpos[:, None] - window)
+    valid = valid[None, None, None]                  # (1, 1, 1, t, s)
     logits = jnp.where(valid, logits, -1e30)
 
     m = jnp.max(logits, axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
     p = jnp.where(valid, p, 0.0)
     denom = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("bhqs,bhsd->bhqd", p, v_cache.astype(jnp.float32))
+    out = jnp.einsum("bhgts,bhsd->bhgtd", p, v_cache.astype(jnp.float32))
     out = out / jnp.maximum(denom, 1e-30)
     return out.reshape(b, hq, t, hd).astype(q.dtype)

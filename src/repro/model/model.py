@@ -129,12 +129,17 @@ def forward(
 # Decode state (KV caches / recurrent states), concrete + abstract
 # --------------------------------------------------------------------------
 
-def _layer_state_shape(cfg, kind: str, batch: int, max_len: int):
+def _layer_state_shape(cfg, kind: str, batch: int, max_len: int,
+                       insert_window: int = 1):
     dt = _dtype(cfg)
     if kind in tf.ATTN_KINDS:
         window = cfg.attn_window if kind == "local" else None
-        s = min(max_len, window) if window else max_len
         # Local layers only retain a window-sized cache (ring-buffer slots).
+        # Multi-token decode windows need insert_window - 1 slack slots so
+        # a window inserted at once never overwrites positions its earlier
+        # queries still attend to; capped at max_len the ring can't wrap at
+        # all, so either way windowed decode stays exact.
+        s = min(max_len, window + insert_window - 1) if window else max_len
         kv_shape = (batch, cfg.num_kv_heads, s, cfg.head_dim)
         return KVCache(
             k=jax.ShapeDtypeStruct(kv_shape, dt),
@@ -155,7 +160,8 @@ def _layer_state_shape(cfg, kind: str, batch: int, max_len: int):
     raise ValueError(kind)
 
 
-def abstract_decode_state(cfg, batch: int, max_len: int):
+def abstract_decode_state(cfg, batch: int, max_len: int,
+                          insert_window: int = 1):
     pattern, n_periods, remainder = tf.plan_groups(cfg)
 
     def stack(sds_tree):
@@ -165,28 +171,37 @@ def abstract_decode_state(cfg, batch: int, max_len: int):
         )
 
     scanned = (
-        [stack(_layer_state_shape(cfg, k, batch, max_len)) for k in pattern]
+        [stack(_layer_state_shape(cfg, k, batch, max_len, insert_window))
+         for k in pattern]
         if n_periods > 0
         else None
     )
-    rem = [_layer_state_shape(cfg, k, batch, max_len) for k in remainder]
+    rem = [_layer_state_shape(cfg, k, batch, max_len, insert_window)
+           for k in remainder]
     return {"scanned": scanned, "remainder": rem}
 
 
-def init_decode_state(cfg, batch: int, max_len: int):
+def init_decode_state(cfg, batch: int, max_len: int, insert_window: int = 1):
+    """Zeroed decode state.  ``insert_window`` is the widest token window
+    any single ``decode_step`` call will insert (1 = classic per-token
+    decode) — it sizes the local-attention ring slack; recurrent states
+    are O(1) in it.  The WKV state stays (B, H, Dh, Dh) float32 end to
+    end: serve loops carry it without per-step reshapes or casts."""
     return jax.tree.map(
-        lambda s: jnp.zeros(s.shape, s.dtype), abstract_decode_state(cfg, batch, max_len)
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        abstract_decode_state(cfg, batch, max_len, insert_window),
     )
 
 
-def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict):
+def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
+                        insert_window: int = 1):
     """PartitionSpecs for the decode state.
 
     KV caches shard (batch, ·, kv_seq, ·); recurrent states shard
     (batch, rnn-ish) — built by walking the typed abstract tree, so stacked
     (leading ``layers``) axes are detected from rank deltas.
     """
-    abstract = abstract_decode_state(cfg, batch, max_len)
+    abstract = abstract_decode_state(cfg, batch, max_len, insert_window)
 
     def node_spec(node):
         if isinstance(node, KVCache):
@@ -213,18 +228,36 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict):
 # --------------------------------------------------------------------------
 
 def decode_step(params, cfg, state, tokens: jax.Array, length: jax.Array,
-                *, enc_out: jax.Array | None = None):
-    """One serve step: tokens (B, 1) given caches filled to ``length``.
+                *, enc_out: jax.Array | None = None,
+                last_only: bool = False):
+    """One serve step over a window of tokens (B, K), K >= 1, given caches
+    filled to ``length`` — the K tokens occupy positions
+    ``length..length+K-1`` (causal within the window).  K == 1 is classic
+    per-token decode; K > 1 amortizes dispatch and, on the WKV path, the
+    state's HBM round-trip (kernels/wkv/decode).  The state must have been
+    built with ``init_decode_state(insert_window >= K)`` — this is a
+    *contract*: a narrower state still traces for K <= cache size, but
+    once a local-attention ring wraps it silently drops positions the
+    window's earlier queries attend to.
 
-    Returns (logits (B, 1, V), new_state).
+    ``last_only=True`` projects logits for the window's final position
+    only — a greedy serve loop needs just that, and skipping the other
+    K-1 (or P-1, at prefill) vocab projections keeps the logits buffer
+    (B, 1, V) instead of (B, K, V).
+
+    Returns (logits (B, K, V) — (B, 1, V) with ``last_only`` — new_state).
     """
-    b = tokens.shape[0]
-    positions = jnp.broadcast_to(length.reshape(1, 1), (b, 1)).astype(jnp.int32)
+    b, t = tokens.shape
+    positions = jnp.broadcast_to(
+        (length + jnp.arange(t, dtype=jnp.int32))[None, :], (b, t)
+    ).astype(jnp.int32)
     x = embed_tokens(params["tok"], tokens, cfg)
     x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x, new_state = tf.apply_stack(
         params["decoder"], x, cfg, positions=positions, causal=True,
         states=state, enc_out=enc_out,
     )
+    if last_only:
+        x = x[:, -1:]
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return logits_projection(params["tok"], x, cfg), new_state

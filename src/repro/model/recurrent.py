@@ -192,11 +192,14 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
     # use_kernel=None is auto mode (the elevator_scan convention): the
     # kernel on TPU — for training too, since the custom VJP pairs it with
     # the reverse VMEM-adjoint sweep (kernels/wkv/bwd.py) — and the jnp
-    # chunked path elsewhere.  Decode t=1 always takes the sequential
-    # oracle (one token has no chunk structure to fuse).  r/k/v/w go in
-    # the model dtype (bf16 allowed): every backend accumulates in f32
-    # internally and returns out in the input dtype, so there is no
-    # caller-side upcast doubling the kernel's HBM I/O.
+    # chunked path elsewhere.  Stateful (serving) calls set decode=True:
+    # windows up to DECODE_WINDOW_MAX tokens take the persistent-state
+    # decode kernels (kernels/wkv/decode — one HBM round-trip of S per
+    # window, no chunk-divisibility constraint), longer cache-fill sweeps
+    # fall through to the chunked kernel.  r/k/v/w go in the model dtype
+    # (bf16 allowed): every backend accumulates in f32 internally and
+    # returns out in the input dtype, so there is no caller-side upcast
+    # doubling the kernel's HBM I/O.
     #
     # Under sequence-parallel rules (seq mapped to a mesh axis, e.g. the
     # prefill_seq mode) the WKV dispatches through the shard_map-ed
@@ -224,7 +227,8 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
         out, S = wkv_fused(
             r_, k_, v_, w_, u, h0,
             chunk=chunk,
-            use_kernel=False if t == 1 else use_kernel,
+            use_kernel=use_kernel,
+            decode=state is not None,
         )
 
     out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)

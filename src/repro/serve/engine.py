@@ -1,8 +1,13 @@
 """Serving: prefill + decode steps and a batched greedy-decoding engine.
 
 ``make_prefill_step`` / ``make_decode_step`` are the lowering targets for
-the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells; ``ServeEngine``
-drives them for the runnable example (batched requests, greedy sampling).
+the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells;
+``make_cache_prefill_step`` fills the decode cache from a prompt in one
+jit; ``ServeEngine`` drives them for the runnable example (batched
+requests, greedy sampling) with a windowed, donated-state decode loop —
+the serving rendering of the paper's loop-carried-value argument: the
+decode state stays resident (device buffers donated in place, the WKV
+state in VMEM within a window) instead of round-tripping per token.
 """
 
 from __future__ import annotations
@@ -110,7 +115,10 @@ def make_seq_prefill_step(cfg, mesh, *, min_len: int = SEQ_PREFILL_MIN_T):
 
 
 def make_decode_step(cfg):
-    """(params, state, tokens (B,1), length ()) -> (logits, new_state)."""
+    """(params, state, tokens (B,K), length ()) -> (logits, new_state).
+
+    K >= 1: the window width rides straight through ``model.decode_step``
+    (K == 1 is classic per-token decode)."""
 
     def decode_step(params, state, tokens, length, enc_out=None):
         return M.decode_step(params, cfg, state, tokens, length, enc_out=enc_out)
@@ -118,39 +126,153 @@ def make_decode_step(cfg):
     return decode_step
 
 
+def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
+                            last_only: bool = False):
+    """One-jit prompt prefill *into the decode cache*.
+
+    ``(params, state, tokens (B, P)) -> (logits (B, P, V), new_state)`` —
+    the whole prompt goes through ``model.decode_step`` as a single window
+    starting at position 0, so the KV caches and recurrent states fill in
+    one dispatch instead of P sequential single-token calls (the WKV part
+    takes the decode-window or chunked elevator kernel, not P state
+    round-trips).  ``state`` is donated: XLA writes the caches in place.
+    ``last_only=True`` returns logits for the final prompt position only
+    ((B, 1, V)) — what a greedy serve loop consumes; the full (B, P, V)
+    projection is for scoring callers.
+
+    With ``mesh``, prompts of at least ``min_len`` tokens run under the
+    ``prefill_seq`` sharding rules — the same routing rule as
+    :func:`make_seq_prefill_step`, so long prompts compose with the
+    sequence-parallel WKV path while the cache still fills in one jit;
+    shorter prompts use the plain ``prefill`` rules.
+    """
+    from repro.model.sharding import make_rules, sharding_context
+
+    def cache_prefill(params, state, tokens):
+        return M.decode_step(params, cfg, state, tokens, jnp.int32(0),
+                             last_only=last_only)
+
+    if mesh is None:
+        return jax.jit(cache_prefill, donate_argnums=(1,))
+    # One jit wrapper per rules mode: the sharding context is read at
+    # trace time, so a shared cache entry would freeze whichever rules
+    # traced first.
+    seq_jit = jax.jit(cache_prefill, donate_argnums=(1,))
+    short_jit = jax.jit(cache_prefill, donate_argnums=(1,))
+    seq_rules = make_rules(mesh, "prefill_seq")
+    plain_rules = make_rules(mesh, "prefill")
+
+    def prefill(params, state, tokens):
+        fn, rules = (
+            (seq_jit, seq_rules) if tokens.shape[1] >= min_len
+            else (short_jit, plain_rules)
+        )
+        with mesh, sharding_context(mesh, rules):
+            return fn(params, state, tokens)
+
+    return prefill
+
+
 @dataclasses.dataclass
 class ServeEngine:
-    """Minimal batched greedy server: prefill token-by-token into the cache
-    (correct for ring-buffer local layers too), then decode new tokens."""
+    """Batched greedy server: one-jit prompt prefill into the cache, then a
+    scan-based decode loop over K-token windows with donated state.
+
+    ``decode_window`` (K) is the number of tokens generated per decode
+    dispatch: each dispatch is one jitted function whose body is a
+    ``lax.scan`` over K single-token ``model.decode_step`` calls, with the
+    decode state donated at the jit boundary — XLA aliases the KV caches
+    and the (B, H, Dh, Dh) WKV states in place instead of copying them per
+    step, and the per-dispatch Python/runtime overhead amortizes ~K×.
+    ``generate`` issues exactly ``ceil(num_new_tokens / K)`` decode
+    dispatches.
+
+    ``mesh`` routes long prompts through the sequence-parallel prefill
+    rules (see :func:`make_cache_prefill_step`).
+    """
 
     cfg: Any
     params: Any
     max_len: int = 256
+    decode_window: int = 8
+    mesh: Any = None
 
     def __post_init__(self):
         cfg = self.cfg
+        # Per-token fallback step (the decode_window=1 shape).  state is
+        # donated here too: without it every step copies the full cache
+        # pytree through HBM just to update one slot.
         self._decode = jax.jit(
-            lambda p, s, t, l: M.decode_step(p, cfg, s, t, l)
+            lambda p, s, t, l: M.decode_step(p, cfg, s, t, l),
+            donate_argnums=(1,),
         )
+        # last_only: generate() consumes only the final prompt position's
+        # logits — don't materialize the (B, P, V) tensor at prefill.
+        self._prefill = make_cache_prefill_step(cfg, self.mesh, last_only=True)
+        self._windows = {}
+        # Observability: decode dispatches issued by the last generate().
+        self.last_decode_dispatches = 0
+
+    def _window_step(self, k: int, last: bool):
+        """Jitted K-token decode window, cached per (k, last).
+
+        Emits the k tokens fed through the model and carries (state, next
+        token, position).  The final window of a generation run stops one
+        decode short — the last emitted token needs no successor — so it
+        scans k-1 steps and appends the carried token.
+        """
+        fn = self._windows.get((k, last))
+        if fn is None:
+            cfg = self.cfg
+            steps = k - 1 if last else k
+
+            def win(p, state, cur, pos):
+                def body(carry, _):
+                    st, tok, ps = carry
+                    logits, st = M.decode_step(p, cfg, st, tok, ps)
+                    nxt = jnp.argmax(logits[:, -1], axis=-1)
+                    nxt = nxt.astype(jnp.int32)[:, None]
+                    return (st, nxt, ps + 1), tok
+
+                (state, cur, pos), toks = jax.lax.scan(
+                    body, (state, cur, pos), None, length=steps
+                )
+                toks = jnp.moveaxis(toks[..., 0], 0, 1)      # (B, steps)
+                if last:
+                    toks = jnp.concatenate([toks, cur], axis=1)
+                return toks, state, cur, pos
+
+            fn = jax.jit(win, donate_argnums=(1,))
+            self._windows[(k, last)] = fn
+        return fn
 
     def generate(self, prompts: jax.Array, num_new_tokens: int) -> jax.Array:
         """prompts: (B, P) int32 -> (B, P + num_new_tokens)."""
         b, p_len = prompts.shape
-        state = M.init_decode_state(self.cfg, batch=b, max_len=self.max_len)
-
-        logits = None
-        for i in range(p_len):
-            logits, state = self._decode(
-                self.params, state, prompts[:, i : i + 1], jnp.int32(i)
-            )
+        k_w = max(1, int(self.decode_window))
+        # insert_window sizes the local-attention ring slack for the widest
+        # window any decode_step call inserts (the whole prompt at
+        # prefill).  Bucketed to a multiple of 32 so the decode-state
+        # shapes — and with them the cached window jits — don't recompile
+        # for every distinct prompt length (extra slack is harmless: the
+        # ring is capped at max_len either way).
+        state = M.init_decode_state(
+            self.cfg, batch=b, max_len=self.max_len,
+            insert_window=max(k_w, -(-p_len // 32) * 32),
+        )
+        logits, state = self._prefill(self.params, state, prompts)
+        self.last_decode_dispatches = 0
+        if num_new_tokens <= 0:
+            return prompts
         out = [prompts]
         cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        for j in range(num_new_tokens):
-            out.append(cur)
-            if j == num_new_tokens - 1:
-                break
-            logits, state = self._decode(
-                self.params, state, cur, jnp.int32(p_len + j)
-            )
-            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        pos = jnp.int32(p_len)
+        left = num_new_tokens
+        while left > 0:
+            k = min(k_w, left)
+            fn = self._window_step(k, last=(k == left))
+            toks, state, cur, pos = fn(self.params, state, cur, pos)
+            self.last_decode_dispatches += 1
+            out.append(toks)
+            left -= k
         return jnp.concatenate(out, axis=1)

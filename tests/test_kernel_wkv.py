@@ -653,3 +653,133 @@ class TestWKVSummary:
         # Summary bytes are independent of T.
         _, _, direct_long = wkv_seqshard_traffic(4, 4, 4 * 8192, 64, 8)
         assert direct_long.traffic.fabric_bytes == crossed_direct
+
+
+class TestWKVDecodeKernel:
+    """Persistent-state decode micro-kernels (kernels/wkv/decode)."""
+
+    def test_single_step_parity_nonzero_state(self):
+        from repro.kernels.wkv.decode import wkv_decode_pallas
+
+        args = _wkv_inputs(2, 3, 1, 32, seed=70)  # h0 != 0 by default
+        got = wkv_decode_pallas(*args, interpret=True)
+        _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_window_parity_odd_k(self):
+        # K not dividing anything (prime, > any chunk): the window kernel
+        # has no divisibility constraint.
+        from repro.kernels.wkv.decode import wkv_decode_window_pallas
+
+        for k_win in (1, 5, 37):
+            args = _wkv_inputs(2, 2, k_win, 16, seed=71)
+            got = wkv_decode_window_pallas(*args, interpret=True)
+            _assert_wkv_close(got, wkv_sequential_ref(*args))
+
+    def test_state_carry_across_consecutive_windows(self):
+        # Chaining windows through S_out must equal the one-shot sweep —
+        # the serve-loop contract (state carried between dispatches).
+        from repro.kernels.wkv.decode import wkv_decode_window_pallas
+
+        r, k, v, w, u, h0 = _wkv_inputs(2, 2, 37, 16, seed=72)
+        one_out, one_s = wkv_decode_window_pallas(
+            r, k, v, w, u, h0, interpret=True)
+        outs, s = [], h0
+        for lo, hi in ((0, 16), (16, 32), (32, 37)):
+            o, s = wkv_decode_window_pallas(
+                r[:, :, lo:hi], k[:, :, lo:hi], v[:, :, lo:hi],
+                w[:, :, lo:hi], u, s, interpret=True)
+            outs.append(o)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(outs, axis=2)), np.asarray(one_out),
+            rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(one_s),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_window_bf16_io(self):
+        from repro.kernels.wkv.decode import wkv_decode_window_pallas
+
+        r, k, v, w, u, h0 = _wkv_inputs(2, 2, 9, 16, seed=73)
+        bf = jnp.bfloat16
+        got_o, got_s = wkv_decode_window_pallas(
+            r.astype(bf), k.astype(bf), v.astype(bf), w.astype(bf),
+            u.astype(bf), h0, interpret=True)
+        assert got_o.dtype == bf
+        assert got_s.dtype == jnp.float32  # state stays full precision
+        want_o, want_s = wkv_sequential_ref(
+            r.astype(bf).astype(jnp.float32), k.astype(bf).astype(jnp.float32),
+            v.astype(bf).astype(jnp.float32), w.astype(bf).astype(jnp.float32),
+            u.astype(bf).astype(jnp.float32), h0)
+        np.testing.assert_allclose(
+            np.asarray(got_o, dtype=np.float32), np.asarray(want_o),
+            rtol=0.1, atol=0.1)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_decode_grads_match_sequential_autodiff(self):
+        args = _wkv_inputs(1, 2, 7, 16, seed=74)
+        want = _vjp_grads(lambda *a: wkv_sequential_ref(*a), args)
+        for use_kernel in (True, False):
+            got = _vjp_grads(
+                lambda *a: wkv_fused(*a, decode=True, use_kernel=use_kernel),
+                args)
+            _assert_grads_close(got, want)
+
+    def test_dispatch_decode_routes_to_decode_kernel(self, monkeypatch):
+        # decode=True windows <= DECODE_WINDOW_MAX take the decode kernel;
+        # longer stateful sweeps fall through to the chunked elevator path.
+        import repro.kernels.wkv.decode as wkv_decode
+
+        calls = []
+        real_win = wkv_decode.wkv_decode_window_pallas
+        real_one = wkv_decode.wkv_decode_pallas
+        monkeypatch.setattr(
+            wkv_ops, "wkv_decode_diff",
+            lambda *a, **kw: calls.append("decode")
+            or wkv_decode.wkv_decode_diff(*a, **kw))
+        monkeypatch.setattr(
+            wkv_decode, "wkv_decode_window_pallas",
+            lambda *a, **kw: calls.append("window") or real_win(*a, **kw))
+        monkeypatch.setattr(
+            wkv_decode, "wkv_decode_pallas",
+            lambda *a, **kw: calls.append("single") or real_one(*a, **kw))
+
+        args = _wkv_inputs(1, 2, 8, 16, seed=75)
+        wkv_fused(*args, decode=True, use_kernel=True)
+        assert calls == ["decode", "window"]
+
+        calls.clear()
+        args1 = _wkv_inputs(1, 2, 1, 16, seed=76)
+        wkv_fused(*args1, use_kernel=True)  # t==1 infers decode=True
+        assert calls == ["decode", "single"]
+
+        calls.clear()
+        args_long = _wkv_inputs(1, 2, 128, 16, seed=77)
+        got = wkv_fused(*args_long, chunk=16, decode=True, use_kernel=True)
+        assert calls == []  # chunked path, not the decode kernel
+        _assert_wkv_close(got, wkv_sequential_ref(*args_long))
+
+    def test_training_path_unaffected_by_decode_default(self):
+        # decode=None + t > 1 must keep the chunked (training) route.
+        args = _wkv_inputs(1, 2, 32, 16, seed=78)
+        got = wkv_fused(*args, chunk=16, use_kernel=False)
+        _assert_wkv_close(got, wkv_chunked_ref(*args, chunk=16))
+
+    def test_decode_cost_model_per_token_state_bytes(self):
+        # Acceptance: modeled per-token state bytes drop ~K× at K=32.
+        from repro.core.cost_model import (
+            wkv_decode_token_io,
+            wkv_decode_traffic,
+        )
+
+        b, h, dh, k = 4, 4, 64, 32
+        naive, shared, direct = wkv_decode_traffic(b, h, dh, k)
+        assert [c.variant for c in (naive, shared, direct)] == [
+            "naive", "shared", "direct"]
+        tok_io = wkv_decode_token_io(b, h, dh, k)
+        naive_state = naive.traffic.dram_bytes - tok_io
+        direct_state = direct.traffic.dram_bytes - tok_io
+        assert naive_state == k * direct_state
+        assert direct.energy_pj < shared.energy_pj < naive.energy_pj
+        # K=1 degenerates to the per-token pattern: no fabric traffic.
+        _, _, direct1 = wkv_decode_traffic(b, h, dh, 1)
+        assert direct1.traffic.fabric_bytes == 0

@@ -1,0 +1,219 @@
+"""Serve-side decode tests: windowed ServeEngine parity, dispatch counts,
+multi-token decode_step vs the full forward (incl. ring-buffer wrap), and
+the donated-state (no per-step cache copy) regression checks."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.model import model as M
+from repro.serve.engine import ServeEngine, make_cache_prefill_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _reference_generate(cfg, params, prompts, n_new, max_len=64):
+    """The pre-windowed engine loop: per-token prefill + per-token decode
+    (no donation, no windows) — the behavioral oracle for generate()."""
+    dec = jax.jit(lambda p, s, t, l: M.decode_step(p, cfg, s, t, l))
+    b, p_len = prompts.shape
+    state = M.init_decode_state(cfg, batch=b, max_len=max_len)
+    logits = None
+    for i in range(p_len):
+        logits, state = dec(params, state, prompts[:, i : i + 1], jnp.int32(i))
+    out = [prompts]
+    cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for j in range(n_new):
+        out.append(cur)
+        if j == n_new - 1:
+            break
+        logits, state = dec(params, state, cur, jnp.int32(p_len + j))
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)
+
+
+def _setup(arch, seed=0, batch=2, p_len=7):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, p_len)), jnp.int32)
+    return cfg, params, prompts
+
+
+class TestServeEngineWindows:
+    def test_rwkv6_parity_and_dispatch_count(self):
+        cfg, params, prompts = _setup("rwkv6-1.6b")
+        n_new = 13
+        ref = _reference_generate(cfg, params, prompts, n_new)
+        for k_win in (1, 4, 8, 32):
+            eng = ServeEngine(cfg, params, max_len=64, decode_window=k_win)
+            out = eng.generate(prompts, n_new)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+            # Acceptance: exactly ceil(num_new_tokens / K) decode dispatches.
+            assert eng.last_decode_dispatches == math.ceil(n_new / k_win)
+
+    def test_rwkv6_parity_vs_full_forward_argmax(self):
+        # Teacher-forced check against the training forward: every
+        # generated token must equal the argmax of the full forward's
+        # logits at the previous position.
+        cfg, params, prompts = _setup("rwkv6-1.6b")
+        n_new = 9
+        eng = ServeEngine(cfg, params, max_len=64, decode_window=4)
+        out = eng.generate(prompts, n_new)
+        full = M.forward(params, cfg, out[:, :-1])
+        want = jnp.argmax(full[:, prompts.shape[1] - 1 :], axis=-1)
+        np.testing.assert_array_equal(
+            np.asarray(out[:, prompts.shape[1] :]), np.asarray(want))
+
+    def test_attention_arch_parity(self):
+        # gemma3: local (ring-buffer) + global layers through the same
+        # windowed loop.
+        cfg, params, prompts = _setup("gemma3-1b")
+        n_new = 9
+        ref = _reference_generate(cfg, params, prompts, n_new)
+        eng = ServeEngine(cfg, params, max_len=64, decode_window=8)
+        out = eng.generate(prompts, n_new)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert eng.last_decode_dispatches == math.ceil(n_new / 8)
+
+    def test_generate_zero_and_one_token(self):
+        cfg, params, prompts = _setup("rwkv6-1.6b")
+        eng = ServeEngine(cfg, params, max_len=64, decode_window=8)
+        out0 = eng.generate(prompts, 0)
+        np.testing.assert_array_equal(np.asarray(out0), np.asarray(prompts))
+        out1 = eng.generate(prompts, 1)
+        ref1 = _reference_generate(cfg, params, prompts, 1)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(ref1))
+        assert eng.last_decode_dispatches == 1
+
+
+class TestWindowedDecodeStep:
+    def test_windows_match_forward_across_ring_wrap(self):
+        # 90 teacher-forced tokens through 7-token decode windows on
+        # gemma3 (attn_window 64): the local-layer ring wraps mid-stream;
+        # logits must still match the full forward everywhere.
+        cfg, params, _ = _setup("gemma3-1b")
+        rng = np.random.default_rng(3)
+        B, T, K = 2, 90, 7
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+        full = M.forward(params, cfg, tokens)
+        state = M.init_decode_state(cfg, batch=B, max_len=128, insert_window=K)
+        outs, pos = [], 0
+        while pos < T:
+            k = min(K, T - pos)
+            lg, state = M.decode_step(
+                params, cfg, state, tokens[:, pos : pos + k], jnp.int32(pos))
+            outs.append(lg)
+            pos += k
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_one_shot_prefill_matches_forward(self):
+        for arch in ("rwkv6-1.6b", "recurrentgemma-2b"):
+            cfg, params, _ = _setup(arch)
+            rng = np.random.default_rng(4)
+            tokens = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (2, 11)), jnp.int32)
+            full = M.forward(params, cfg, tokens)
+            state = M.init_decode_state(cfg, batch=2, max_len=64,
+                                        insert_window=11)
+            got, _ = M.decode_step(params, cfg, state, tokens, jnp.int32(0))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_window_wider_than_ring_fails_loudly(self):
+        # A window exceeding the ring would evict positions in-window
+        # queries still need — must raise at trace time, not corrupt
+        # logits (contract: init_decode_state(insert_window >= K)).
+        cfg, params, _ = _setup("gemma3-1b")
+        tokens = jnp.zeros((1, 70), jnp.int32)  # ring = attn_window = 64
+        state = M.init_decode_state(cfg, batch=1, max_len=256)
+        with pytest.raises(ValueError, match="exceeds cache size"):
+            M.decode_step(params, cfg, state, tokens, jnp.int32(0))
+
+    def test_insert_window_sizes_local_ring(self):
+        cfg, _, _ = _setup("gemma3-1b")  # attn_window 64 (reduced)
+        w = cfg.attn_window
+
+        def local_cache_len(state):
+            from repro.model.attention import KVCache
+
+            caches = [s for s in jax.tree.leaves(
+                state, is_leaf=lambda x: isinstance(x, KVCache))
+                if isinstance(s, KVCache)]
+            return min(c.k.shape[-2] for c in caches)
+
+        s1 = M.init_decode_state(cfg, batch=1, max_len=256)
+        assert local_cache_len(s1) == w  # insert_window=1: unchanged
+        s8 = M.init_decode_state(cfg, batch=1, max_len=256, insert_window=8)
+        assert local_cache_len(s8) == w + 7
+        s_cap = M.init_decode_state(cfg, batch=1, max_len=48, insert_window=8)
+        assert local_cache_len(s_cap) == 48  # capped at max_len
+
+
+class TestDonatedState:
+    """No per-step cache copy: XLA must alias the decode state in place."""
+
+    def _lowered_text(self, fn, *args):
+        return fn.lower(*args).compile().as_text()
+
+    def test_single_step_fallback_donates(self):
+        # Regression for the undonated jit: the per-token fallback path
+        # must alias state buffers too, or every step copies the caches.
+        cfg, params, prompts = _setup("gemma3-1b")
+        eng = ServeEngine(cfg, params, max_len=32)
+        state = M.init_decode_state(cfg, batch=2, max_len=32)
+        txt = self._lowered_text(
+            eng._decode, params, state, prompts[:, :1], jnp.int32(0))
+        assert "input_output_alias" in txt
+        # Buffer-id check: donated leaves are updated in place on CPU.
+        out_state_ptrs = None
+        in_ptrs = {l.unsafe_buffer_pointer()
+                   for l in jax.tree.leaves(state) if l.size > 1}
+        _, new_state = eng._decode(params, state, prompts[:, :1], jnp.int32(0))
+        out_state_ptrs = {l.unsafe_buffer_pointer()
+                         for l in jax.tree.leaves(new_state) if l.size > 1}
+        assert in_ptrs & out_state_ptrs, "no state buffer was reused in place"
+
+    def test_window_step_donates(self):
+        cfg, params, prompts = _setup("rwkv6-1.6b")
+        eng = ServeEngine(cfg, params, max_len=32, decode_window=4)
+        fn = eng._window_step(4, last=False)
+        state = M.init_decode_state(cfg, batch=2, max_len=32, insert_window=4)
+        cur = prompts[:, :1]
+        txt = self._lowered_text(fn, params, state, cur, jnp.int32(0))
+        assert "input_output_alias" in txt
+
+    def test_prefill_donates(self):
+        cfg, params, prompts = _setup("rwkv6-1.6b")
+        prefill = make_cache_prefill_step(cfg)
+        state = M.init_decode_state(cfg, batch=2, max_len=32,
+                                    insert_window=prompts.shape[1])
+        txt = self._lowered_text(prefill, params, state, prompts)
+        assert "input_output_alias" in txt
+
+
+class TestCachePrefillStep:
+    def test_mesh_routing_matches_plain(self):
+        # 1-device mesh: the seq/plain rule routing must not change the
+        # numbers (the multi-device lane covers n > 1).
+        from repro.launch.mesh import make_seq_mesh
+
+        cfg, params, prompts = _setup("rwkv6-1.6b", p_len=16)
+        mesh = make_seq_mesh(1)
+        state_a = M.init_decode_state(cfg, batch=2, max_len=64,
+                                      insert_window=16)
+        state_b = M.init_decode_state(cfg, batch=2, max_len=64,
+                                      insert_window=16)
+        lg_plain, _ = make_cache_prefill_step(cfg)(params, state_a, prompts)
+        # min_len=8 forces the seq-rules route for this 16-token prompt.
+        lg_seq, _ = make_cache_prefill_step(cfg, mesh, min_len=8)(
+            params, state_b, prompts)
+        np.testing.assert_allclose(np.asarray(lg_seq), np.asarray(lg_plain),
+                                   rtol=2e-4, atol=2e-4)
