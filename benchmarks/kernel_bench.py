@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import from_thread_or_const
 from repro.core.cost_model import (
+    serve_batch_steps,
     wkv_bwd_traffic,
     wkv_decode_token_io,
     wkv_decode_traffic,
@@ -250,6 +251,83 @@ def main(smoke: bool = False) -> list[dict]:
         f"modeled_state_bytes_per_token_reduction_k32={state_red:.0f}x "
         "(per-token S round-trip vs S-resident window, "
         "cost_model.wkv_decode_traffic)",
+    ))
+
+    # serve_continuous: the scheduler-level rendering of the same barrier
+    # argument — lockstep decode (every request padded to the batch max,
+    # batches in arrival order: a workgroup-global barrier) vs the
+    # continuous engine (EOS/budget detection inside the jitted window,
+    # freed slots re-prefilled from the queue: point-to-point hand-offs).
+    # Wall-clock on a ragged workload, end-to-end through ServeEngine on
+    # a reduced rwkv6; the modeled column is slot-step utilization
+    # (cost_model.serve_batch_steps), which is model-independent.
+    from repro.configs.registry import get_config
+    from repro.model import model as model_mod
+    from repro.serve.engine import Request, ServeEngine
+
+    # Decode-heavy and strongly ragged (budgets 8..60): the regime the
+    # scheduler targets — short prompts, long spreads, so lockstep's
+    # pad-to-slowest barrier dominates and continuous refill wins.
+    spec = (
+        [(4, 4), (6, 2), (3, 6)] if smoke
+        else [(5, 56), (7, 8), (4, 48), (3, 12),
+              (6, 60), (8, 10), (5, 40), (4, 16)]
+    )
+    slots, s_window = 2, (2 if smoke else 4)
+    s_cfg = get_config("rwkv6-1.6b").reduced()
+    s_params = model_mod.init_params(s_cfg, jax.random.key(0))
+    s_eng = ServeEngine(s_cfg, s_params, max_len=96, decode_window=s_window)
+    s_reqs = [
+        Request(tokens=jnp.asarray(
+            rng.integers(0, s_cfg.vocab_size, (pl,)), jnp.int32),
+            max_new_tokens=nn)
+        for pl, nn in spec
+    ]
+    useful = sum(nn for _, nn in spec)
+
+    def run_continuous():
+        outs = s_eng.serve(s_reqs, slots=slots)
+        assert sum(o.size for o in outs) == useful
+
+    def run_lockstep():
+        got = 0
+        for i in range(0, len(s_reqs), slots):
+            batch = s_reqs[i : i + slots]
+            p_max = max(r.tokens.size for r in batch)
+            prompts = np.zeros((len(batch), p_max), np.int32)
+            plens = np.zeros(len(batch), np.int32)
+            for b_i, r in enumerate(batch):
+                prompts[b_i, : r.tokens.size] = np.asarray(r.tokens)
+                plens[b_i] = r.tokens.size
+            n_max = max(r.max_new_tokens for r in batch)
+            out = s_eng.generate(jnp.asarray(prompts), n_max,
+                                 prompt_lengths=jnp.asarray(plens))
+            assert out.shape == (len(batch), p_max + n_max)
+            # Useful tokens: each request's own budget out of the padded
+            # n_max the lockstep barrier forces everyone through.
+            got += sum(r.max_new_tokens for r in batch)
+        assert got == useful
+
+    for fn in (run_continuous, run_lockstep):   # compile warm-up
+        fn()
+    best = {"continuous": float("inf"), "lockstep": float("inf")}
+    for _ in range(max(1, r_i // 2)):
+        for name, fn in (("continuous", run_continuous),
+                         ("lockstep", run_lockstep)):
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    tok_s_cont = useful / best["continuous"]
+    tok_s_lock = useful / best["lockstep"]
+    m_useful, m_lock, m_cont = serve_batch_steps(
+        [nn for _, nn in spec], slots, s_window)
+    rows.append((
+        "serve_continuous", best["continuous"] * 1e6,
+        f"tok_s_lockstep={tok_s_lock:.0f} tok_s_continuous={tok_s_cont:.0f} "
+        f"modeled_slot_step_util_lockstep={m_useful / max(m_lock, 1):.2f} "
+        f"modeled_slot_step_util_continuous={m_useful / max(m_cont, 1):.2f} "
+        "(ragged budgets, EOS-free greedy; lockstep pads each arrival "
+        "batch to its slowest member, cost_model.serve_batch_steps)",
     ))
 
     # blockwise attention vs full-matrix reference (memory win).

@@ -1,7 +1,12 @@
-"""Serving example: batched greedy decoding with KV caches / recurrent state.
+"""Serving example: batched decoding with KV caches / recurrent state.
 
 Covers three families: dense local:global (gemma3), hybrid (recurrentgemma)
-and attention-free (rwkv6) — all through the same ServeEngine.
+and attention-free (rwkv6) — all through the same ServeEngine, twice:
+
+* lockstep ``generate``: one batch, every request padded to the longest;
+* continuous ``serve``: a ragged request queue through 2 slots with
+  per-request budgets, temperature/top-k sampling inside the jitted
+  window, and EOS-freed slots recycled to the next queued request.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -14,7 +19,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.model import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import Request, ServeEngine
 
 ARCHS = ["gemma3-1b", "recurrentgemma-2b", "rwkv6-1.6b"]
 
@@ -31,9 +36,29 @@ def main():
         t0 = time.perf_counter()
         out = engine.generate(prompts, num_new_tokens=16)
         dt = time.perf_counter() - t0
-        print(f"{arch:22s} -> {out.shape} in {dt:.2f}s "
+        print(f"{arch:22s} lockstep   -> {out.shape} in {dt:.2f}s "
               f"({engine.last_decode_dispatches} decode dispatches); "
               f"sample: {np.asarray(out[0, -6:]).tolist()}")
+
+        # Continuous batching: 6 ragged requests through 2 slots.  Each
+        # request decodes at its own position and frees its slot the
+        # moment its budget (or EOS) hits — detected inside the jit.
+        reqs = [
+            Request(
+                tokens=jnp.asarray(
+                    rng.integers(0, cfg.vocab_size,
+                                 (int(rng.integers(4, 13)),)), jnp.int32),
+                max_new_tokens=int(rng.integers(3, 17)),
+            )
+            for _ in range(6)
+        ]
+        t0 = time.perf_counter()
+        outs = engine.serve(reqs, slots=2, temperature=0.7, top_k=32, seed=0)
+        dt = time.perf_counter() - t0
+        st = engine.last_serve_stats
+        print(f"{arch:22s} continuous -> {[int(o.size) for o in outs]} "
+              f"tokens in {dt:.2f}s ({st['decode_dispatches']} dispatches, "
+              f"{st['admissions']} admissions)")
 
 
 if __name__ == "__main__":

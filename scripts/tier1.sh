@@ -29,3 +29,10 @@ echo "== tier-1 lane 3: benchmark-path smoke (tiny shapes, no timing) =="
 # Catches bench-path regressions (import errors, dispatch wiring, row
 # schema drift) at CI speed; never rewrites BENCH_kernels.json.
 python -m benchmarks.run --smoke
+
+echo "== tier-1 lane 3b: continuous-serve smoke =="
+# End-to-end scheduler path: ragged queue, slot recycling, in-window
+# sampling — the launcher exits nonzero on any scheduler invariant break.
+python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
+    --requests 5 --slots 2 --prompt-len 8 --new-tokens 6 --max-len 32 \
+    --decode-window 2 --temperature 0.8 --top-k 16

@@ -342,6 +342,60 @@ def wkv_seqshard_traffic(b: int, h: int, t: int, dh: int, n_dev: int,
     )
 
 
+def serve_batch_steps(new_tokens, slots: int, window: int = 1):
+    """Slot-step accounting for a ragged decode workload: lockstep vs
+    continuous batching (the scheduler-level rendering of the paper's
+    barrier argument — model-independent, so it composes with any
+    per-step cost).
+
+    ``new_tokens``: per-request generation budgets, arrival order.
+    ``slots``: batch slots.  ``window``: tokens per decode dispatch (K).
+
+    lockstep:   requests run in arrival-order batches of ``slots``; every
+                batch is padded to its longest member — a workgroup-global
+                barrier: a finished request keeps burning a slot-step per
+                step until the slowest one ends, and the next batch waits.
+    continuous: finished slots are refilled from the queue at window
+                boundaries (each admission emits the request's first
+                token from its prefill, the engine contract) — the
+                point-to-point hand-off: a slot's next request starts the
+                moment the previous one ends.
+
+    Returns ``(useful_tokens, lockstep_steps, continuous_steps)`` where
+    the step counts are total slot-steps scanned (useful / steps is the
+    utilization; lockstep / continuous is the modeled speedup at equal
+    per-step cost).
+    """
+    new_tokens = [int(n) for n in new_tokens]
+    if not new_tokens or slots < 1 or window < 1:
+        raise ValueError("need >= 1 request, slots >= 1, window >= 1")
+    useful = sum(new_tokens)
+
+    lockstep = 0
+    for i in range(0, len(new_tokens), slots):
+        batch = new_tokens[i : i + slots]
+        # Prefill emits token 1; the remaining max-1 decode in windows of
+        # ``window`` steps, every slot of the batch marching together.
+        win_steps = -(-(max(batch) - 1) // window) * window if max(batch) > 1 else 0
+        lockstep += len(batch) * win_steps
+
+    continuous = 0
+    queue = list(new_tokens)[::-1]          # pop() = arrival order
+    remaining = [0] * slots
+    while queue or any(remaining):
+        for s in range(slots):
+            if remaining[s] == 0 and queue:
+                remaining[s] = queue.pop() - 1   # admission emits token 1
+        if not any(remaining):
+            # Every live slot finished at admission (budget-1 requests):
+            # no window to run — admit again / fall out via the loop test.
+            continue
+        continuous += slots * window             # one masked window dispatch
+        for s in range(slots):
+            remaining[s] = max(0, remaining[s] - window)
+    return useful, lockstep, continuous
+
+
 def reduce_traffic(n: int, itemsize: int = 4):
     """Tree reduction: shared version stages each level through scratchpad;
     direct uses windowed elevator edges per level."""

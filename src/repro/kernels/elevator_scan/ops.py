@@ -22,6 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import halving_chunk, interpret_default, on_tpu
+from repro.kernels.elevator_scan.decode import (
+    ELEVATOR_DECODE_WINDOW_MAX,
+    elevator_decode_diff,
+)
 from repro.kernels.elevator_scan.kernel import elevator_scan_pallas
 from repro.kernels.elevator_scan.ref import elevator_scan_ref
 
@@ -78,6 +82,7 @@ def elevator_scan(
     *,
     chunk: int = 256,
     use_kernel: bool | None = None,
+    decode: bool | None = None,
 ) -> jax.Array:
     """h[b,t,d] = a[b,t,d] * h[b,t-1,d] + x[b,t,d].
 
@@ -85,11 +90,39 @@ def elevator_scan(
     the jnp form is itself backend-dispatched (linear scan on CPU,
     log-depth associative scan otherwise; identical math, validated
     against each other in tests/test_kernel_elevator_scan.py).
+
+    ``decode=True`` marks a *stateful serving* call (threaded from
+    ``apply_rglru_block``): windows up to
+    :data:`~repro.kernels.elevator_scan.decode.ELEVATOR_DECODE_WINDOW_MAX`
+    tokens take the persistent-state decode kernel
+    (:mod:`repro.kernels.elevator_scan.decode`) — h is read from HBM once
+    and written once per window, intermediate states ride a VMEM carry —
+    fixing the old dispatch that forced the jnp path at ``t == 1`` and
+    round-tripped h through HBM every generated token.  Longer stateful
+    sweeps (cache prefill) fall through to the chunked paths.
+    ``decode=None`` infers ``t == 1``.
     """
     kernel = on_tpu() if use_kernel is None else use_kernel
+    t = x.shape[1]
+    if decode is None:
+        decode = t == 1
+    if decode and t <= ELEVATOR_DECODE_WINDOW_MAX:
+        if kernel:
+            return elevator_decode_diff(interpret_default(), True, a, x,
+                                        _h0_or_zeros(a, h0))
+        # jnp fallback: the sequential scan is the cheapest form for a
+        # short stateful window (no chunk structure to exploit).
+        return elevator_scan_linear(a, x, h0)
     if kernel:
-        c = halving_chunk(x.shape[1], chunk)
+        c = halving_chunk(t, chunk)
         return elevator_scan_pallas(a, x, h0, chunk=c, interpret=interpret_default())
     if jax.default_backend() == "cpu":
         return elevator_scan_linear(a, x, h0)
     return elevator_scan_logdepth(a, x, h0)
+
+
+def _h0_or_zeros(a: jax.Array, h0: jax.Array | None) -> jax.Array:
+    if h0 is not None:
+        return h0
+    b, _, d = a.shape
+    return jnp.zeros((b, d), jnp.float32)

@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 
 
-def elevator_scan_ref(
+def elevator_scan_ref_f32(
     a: jax.Array, x: jax.Array, h0: jax.Array | None = None
 ) -> jax.Array:
-    """O(T) sequential reference (float32 accumulation)."""
+    """O(T) sequential scan, float32 in and out — the one copy of the
+    recurrence the casting wrappers (and the decode backward's
+    recompute) all share."""
     b, t, d = x.shape
     a32 = a.astype(jnp.float32)
     x32 = x.astype(jnp.float32)
@@ -30,4 +32,11 @@ def elevator_scan_ref(
         return h, h
 
     _, hs = jax.lax.scan(step, init, (a32.swapaxes(0, 1), x32.swapaxes(0, 1)))
-    return hs.swapaxes(0, 1).astype(x.dtype)
+    return hs.swapaxes(0, 1)
+
+
+def elevator_scan_ref(
+    a: jax.Array, x: jax.Array, h0: jax.Array | None = None
+) -> jax.Array:
+    """O(T) sequential reference (float32 accumulation, input dtype out)."""
+    return elevator_scan_ref_f32(a, x, h0).astype(x.dtype)

@@ -23,7 +23,9 @@ from repro.model.sharding import constrain, gather_for_use
 class KVCache(NamedTuple):
     k: jax.Array          # (B, Hkv, S, Dh)
     v: jax.Array          # (B, Hkv, S, Dh)
-    length: jax.Array     # () int32 — tokens filled
+    length: jax.Array     # (B,) int32 — tokens filled per request (a scalar
+    #                       broadcasts: every request at the same position,
+    #                       the lockstep special case)
 
 
 def init_attention(mk, cfg, name: str, *, cross: bool = False):
@@ -81,8 +83,15 @@ def apply_attention(
     causal: bool = True,
     x_kv: jax.Array | None = None,         # cross-attention memory
     kv_cache: KVCache | None = None,       # decode
+    token_mask: jax.Array | None = None,   # (B, t) bool — decode validity
 ):
-    """Returns (out, new_kv_cache_or_None)."""
+    """Returns (out, new_kv_cache_or_None).
+
+    ``token_mask`` (decode only) marks which window tokens are real: masked
+    tokens are not inserted into the cache and do not advance the
+    per-request length, so a finished / empty slot's cache is untouched and
+    pad tokens of a ragged prompt never become attendable.
+    """
     b, t, _ = x.shape
     cross = x_kv is not None
     src = x_kv if cross else x
@@ -102,10 +111,16 @@ def apply_attention(
         # Decode: append this step's K/V (a window of t >= 1 tokens) and
         # attend to the cache.  Local layers use a ring buffer (slot =
         # pos mod S); the mod-arithmetic in _masked_insert is universal
-        # because for a full-length cache length + t <= S.
-        k_cache = _masked_insert(kv_cache.k, k, kv_cache.length)
-        v_cache = _masked_insert(kv_cache.v, v, kv_cache.length)
-        new_cache = KVCache(k_cache, v_cache, kv_cache.length + t)
+        # because for a full-length cache length + t <= S.  Lengths are
+        # per-request: each slot inserts at — and attends from — its own
+        # position.
+        k_cache = _masked_insert(kv_cache.k, k, kv_cache.length, token_mask)
+        v_cache = _masked_insert(kv_cache.v, v, kv_cache.length, token_mask)
+        advance = (
+            jnp.int32(t) if token_mask is None
+            else jnp.sum(token_mask, axis=1, dtype=jnp.int32)
+        )
+        new_cache = KVCache(k_cache, v_cache, kv_cache.length + advance)
         out = _decode_attention(
             q, k_cache, v_cache, kv_cache.length, cfg, window=window
         )
@@ -125,27 +140,34 @@ def apply_attention(
     return out @ wo, new_cache
 
 
-def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array):
+def _lengths_2d(length: jax.Array, b: int) -> jax.Array:
+    """Per-request lengths as (B, 1) int32; a scalar broadcasts (lockstep)."""
+    return jnp.broadcast_to(jnp.reshape(length, (-1, 1)), (b, 1))
+
+
+def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array,
+                   token_mask: jax.Array | None = None):
     """Insert `new` (B,H,t,D) at absolute positions length..length+t-1
-    along axis 2, ring-buffer aware (slot = pos mod S).
+    along axis 2 — per request: ``length`` is (B,) (or a scalar, which
+    broadcasts), ring-buffer aware (slot = pos mod S per request).
+
+    ``token_mask`` (B, t) drops individual window tokens from the insert:
+    a masked token writes nothing, so a finished slot's cache — or the pad
+    tail of a ragged prompt — stays bit-identical.
 
     Uses a positional where-mask instead of dynamic_update_slice so the
     cache's sequence sharding is preserved (no gather/dynamic-slice
     resharding under GSPMD) — each shard updates only the slots it owns:
     the eLDST write-once discipline.
     """
+    b = cache.shape[0]
     s = cache.shape[2]
     t = new.shape[2]
     if t > s:
         # A window wider than the whole ring can never be represented —
-        # static shapes, so reject at trace time.  Windows that *fit* but
-        # exceed the state's insert_window contract
-        # (model.init_decode_state) cannot be detected here: whether the
-        # ring wraps depends on the traced ``length`` and on the max_len
-        # cap the builder applied, so honoring insert_window >= K is the
-        # caller's contract (ServeEngine always satisfies it) — violating
-        # it on a local-attention layer silently truncates the context
-        # the earlier in-window queries see.
+        # static shapes, so reject at trace time.  (Windows that *fit* the
+        # ring but exceed the state's insert_window contract are rejected
+        # by model.decode_step, which knows the layer kinds and max_len.)
         raise ValueError(
             f"decode window of {t} tokens exceeds cache size {s}; build the "
             f"state with init_decode_state(insert_window >= {t})"
@@ -153,28 +175,38 @@ def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array):
     idx = jnp.arange(s, dtype=jnp.int32)
     # The window token landing on each slot (ring: slot = pos mod S);
     # t <= S guarantees at most one writer per slot.
-    off = jnp.mod(idx - length, s)
-    if t == 1:
-        sel = (off == 0)[None, None, :, None]
-        return jnp.where(sel, new.astype(cache.dtype), cache)
+    off = jnp.mod(idx[None, :] - _lengths_2d(length, b), s)   # (B, S)
     sel = off < t
-    gathered = jnp.take(new.astype(cache.dtype), jnp.clip(off, 0, t - 1),
-                        axis=2)
-    return jnp.where(sel[None, None, :, None], gathered, cache)
+    if token_mask is not None:
+        # Only real tokens write: look up each slot's candidate window
+        # token in the mask.
+        sel &= jnp.take_along_axis(
+            token_mask, jnp.clip(off, 0, t - 1), axis=1
+        )
+    if t == 1:
+        sel &= off == 0
+        return jnp.where(sel[:, None, :, None], new.astype(cache.dtype), cache)
+    gathered = jnp.take_along_axis(
+        new.astype(cache.dtype), jnp.clip(off, 0, t - 1)[:, None, :, None],
+        axis=2,
+    )
+    return jnp.where(sel[:, None, :, None], gathered, cache)
 
 
 def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):
     """Windowed decode attention against a (possibly seq-sharded) KV cache.
 
-    q: (B, Hq, t, Dh) with t >= 1 new tokens at absolute positions
-    cur_pos..cur_pos+t-1 (``cur_pos`` == pre-insert cache length; the
-    cache already contains the window's K/V).  Softmax over the cache axis
-    is written max/exp/sum-explicitly; if `kv_seq` is sharded, GSPMD
-    lowers it to per-shard partials + a tiny psum (flash-decoding
-    combine).  Ring-buffer caches are handled positionally: post-insert,
-    slot i holds absolute position last - ((last - i) mod S) with
-    last = cur_pos + t - 1.  Queries mask causally *within* the window:
-    query j attends only to slots whose absolute position is <= cur_pos+j.
+    q: (B, Hq, t, Dh) with t >= 1 new tokens; request b's tokens sit at
+    absolute positions cur_pos[b]..cur_pos[b]+t-1 (``cur_pos`` (B,) or
+    scalar == pre-insert cache length per request; the cache already
+    contains the window's K/V).  Softmax over the cache axis is written
+    max/exp/sum-explicitly; if `kv_seq` is sharded, GSPMD lowers it to
+    per-shard partials + a tiny psum (flash-decoding combine).
+    Ring-buffer caches are handled positionally: post-insert, slot i of
+    request b holds absolute position last_b - ((last_b - i) mod S) with
+    last_b = cur_pos[b] + t - 1.  Queries mask causally *within* the
+    window: query j attends only to slots whose absolute position is
+    <= cur_pos[b]+j.
     """
     b, hq, t, hd = q.shape
     nkv = k_cache.shape[1]
@@ -189,13 +221,14 @@ def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):
     logits = _softcap(logits, cfg.attn_logit_softcap)
 
     slot = jnp.arange(s, dtype=jnp.int32)
-    last = cur_pos + t - 1
-    abs_pos = last - jnp.mod(last - slot, s)         # newest pos <= last in slot
-    qpos = cur_pos + jnp.arange(t, dtype=jnp.int32)  # (t,)
-    valid = (abs_pos[None, :] >= 0) & (abs_pos[None, :] <= qpos[:, None])
+    cur2 = _lengths_2d(cur_pos, b)                       # (B, 1)
+    last = cur2 + t - 1                                  # (B, 1)
+    abs_pos = last - jnp.mod(last - slot[None, :], s)    # (B, S): newest pos
+    qpos = cur2 + jnp.arange(t, dtype=jnp.int32)[None]   # (B, t)
+    valid = (abs_pos[:, None, :] >= 0) & (abs_pos[:, None, :] <= qpos[:, :, None])
     if window is not None:
-        valid &= abs_pos[None, :] > (qpos[:, None] - window)
-    valid = valid[None, None, None]                  # (1, 1, 1, t, s)
+        valid &= abs_pos[:, None, :] > (qpos[:, :, None] - window)
+    valid = valid[:, None, None]                         # (B, 1, 1, t, s)
     logits = jnp.where(valid, logits, -1e30)
 
     m = jnp.max(logits, axis=-1, keepdims=True)

@@ -144,7 +144,9 @@ def _layer_state_shape(cfg, kind: str, batch: int, max_len: int,
         return KVCache(
             k=jax.ShapeDtypeStruct(kv_shape, dt),
             v=jax.ShapeDtypeStruct(kv_shape, dt),
-            length=jax.ShapeDtypeStruct((), jnp.int32),
+            # Per-request fill counts: continuous batching advances each
+            # slot at its own pace (lockstep is the all-equal special case).
+            length=jax.ShapeDtypeStruct((batch,), jnp.int32),
         )
     if kind == "rec":
         return RecState(
@@ -208,7 +210,7 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
             extra = len(node.k.shape) - 4  # 0 = unstacked, 1 = (L, B, H, S, D)
             prefix = ("layers",) * extra
             kv = to_pspec(prefix + ("batch", None, "kv_seq", None), rules)
-            ln = to_pspec(prefix, rules)
+            ln = to_pspec(prefix + ("batch",), rules)
             return KVCache(k=kv, v=kv, length=ln)
         if isinstance(node, RecState):
             extra = len(node.conv.shape) - 3
@@ -227,37 +229,102 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
 # Decode step
 # --------------------------------------------------------------------------
 
-def decode_step(params, cfg, state, tokens: jax.Array, length: jax.Array,
-                *, enc_out: jax.Array | None = None,
-                last_only: bool = False):
-    """One serve step over a window of tokens (B, K), K >= 1, given caches
-    filled to ``length`` — the K tokens occupy positions
-    ``length..length+K-1`` (causal within the window).  K == 1 is classic
-    per-token decode; K > 1 amortizes dispatch and, on the WKV path, the
-    state's HBM round-trip (kernels/wkv/decode).  The state must have been
-    built with ``init_decode_state(insert_window >= K)`` — this is a
-    *contract*: a narrower state still traces for K <= cache size, but
-    once a local-attention ring wraps it silently drops positions the
-    window's earlier queries attend to.
+def _check_ring_slack(cfg, state, t: int, max_len: int | None):
+    """Trace-time guard for the local-attention ring contract.
 
-    ``last_only=True`` projects logits for the window's final position
-    only — a greedy serve loop needs just that, and skipping the other
-    K-1 (or P-1, at prefill) vocab projections keeps the logits buffer
-    (B, 1, V) instead of (B, K, V).
+    A window of ``t`` tokens inserted into a ring of ``S`` slots is exact
+    iff ``S >= attn_window + t - 1`` (the slack ``init_decode_state``
+    sizes via ``insert_window``) — or the ring can never wrap at all,
+    which the builder guarantees by capping ``S`` at ``max_len``.  Before
+    this check, violating the contract silently evicted slots the
+    window's earlier queries still attend to (corrupt logits, no error).
+    ``max_len=None`` (caller didn't vouch for the cap) treats any
+    slack-deficient ring as an error.
+    """
+    if t <= 1 or state is None or cfg.attn_window is None:
+        return
+    pattern, n_periods, remainder = tf.plan_groups(cfg)
+    layers = []
+    if n_periods > 0 and state.get("scanned") is not None:
+        layers += list(zip(pattern, state["scanned"]))
+    layers += list(zip(remainder, state["remainder"]))
+    window = cfg.attn_window
+    for kind, st in layers:
+        if kind != "local" or not isinstance(st, KVCache):
+            continue
+        s_ring = st.k.shape[-2]
+        if s_ring >= window + t - 1:
+            continue                       # enough slack for this window
+        if max_len is not None and s_ring >= max_len:
+            continue                       # capped ring: never wraps
+        raise ValueError(
+            f"decode window of {t} tokens would wrap the local-attention "
+            f"ring of layer kind 'local' (cache {tuple(st.k.shape)}, "
+            f"attn_window={window}): earlier in-window queries would "
+            f"attend to evicted slots.  Build the state with "
+            f"init_decode_state(insert_window >= {t}) (ring >= "
+            f"{window + t - 1} slots) or pass max_len= to vouch that the "
+            f"ring is capped at the position limit."
+        )
+
+
+def decode_step(params, cfg, state, tokens: jax.Array, lengths: jax.Array,
+                *, enc_out: jax.Array | None = None,
+                last_only: bool = False,
+                token_mask: jax.Array | None = None,
+                max_len: int | None = None):
+    """One serve step over a window of tokens (B, K), K >= 1, given caches
+    filled to ``lengths`` — scalar (lockstep: every request at the same
+    position) or per-request ``(B,)``: request b's K tokens occupy
+    positions ``lengths[b]..lengths[b]+K-1`` (causal within the window).
+    K == 1 is classic per-token decode; K > 1 amortizes dispatch and, on
+    the WKV path, the state's HBM round-trip (kernels/wkv/decode).
+
+    ``token_mask`` (B, K) bool marks which window tokens are *real*.
+    Masked tokens contribute nothing to any state — KV-cache slots are not
+    written, per-request lengths don't advance, and recurrent states carry
+    through unchanged (``jnp.where``-frozen) — so an all-False row leaves
+    a finished/empty slot's state bit-identical, and a prefix mask
+    (``arange(K) < prompt_len``) prefills a ragged prompt without pad
+    pollution.  The mask must be a *prefix* per row (valid tokens, then
+    padding): recurrent final states are read at the last valid position.
+
+    The state must have been built with
+    ``init_decode_state(insert_window >= K)``; a slack-deficient
+    local-attention ring now fails at trace time (see
+    :func:`_check_ring_slack`) instead of silently corrupting output —
+    pass ``max_len`` (the position cap the state was built with) to allow
+    rings legitimately capped at ``max_len``.
+
+    ``last_only=True`` projects logits for the window's final *valid*
+    position only (per request, when ``token_mask`` is given) — a greedy
+    serve loop needs just that, and skipping the other K-1 (or P-1, at
+    prefill) vocab projections keeps the logits buffer (B, 1, V) instead
+    of (B, K, V).
 
     Returns (logits (B, K, V) — (B, 1, V) with ``last_only`` — new_state).
     """
     b, t = tokens.shape
+    _check_ring_slack(cfg, state, t, max_len)
+    lengths = jnp.reshape(jnp.asarray(lengths, jnp.int32), (-1, 1))
     positions = jnp.broadcast_to(
-        (length + jnp.arange(t, dtype=jnp.int32))[None, :], (b, t)
+        lengths + jnp.arange(t, dtype=jnp.int32)[None, :], (b, t)
     ).astype(jnp.int32)
     x = embed_tokens(params["tok"], tokens, cfg)
     x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x, new_state = tf.apply_stack(
         params["decoder"], x, cfg, positions=positions, causal=True,
-        states=state, enc_out=enc_out,
+        states=state, enc_out=enc_out, token_mask=token_mask,
     )
     if last_only:
-        x = x[:, -1:]
+        if token_mask is None:
+            x = x[:, -1:]
+        else:
+            # Per-request last valid position (clamped: an all-False row
+            # yields garbage logits the caller must ignore).
+            idx = jnp.clip(
+                jnp.sum(token_mask, axis=1, dtype=jnp.int32) - 1, 0, t - 1
+            )
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return logits_projection(params["tok"], x, cfg), new_state

@@ -70,8 +70,15 @@ def _rglru_gates(params, xb):
     return a, b
 
 
-def apply_rglru_block(params, x: jax.Array, cfg, *, state: RecState | None = None):
-    """x: (B, T, D) -> ((B, T, D), new_state_or_None)."""
+def apply_rglru_block(params, x: jax.Array, cfg, *, state: RecState | None = None,
+                      token_mask: jax.Array | None = None):
+    """x: (B, T, D) -> ((B, T, D), new_state_or_None).
+
+    ``token_mask`` (B, T) bool (stateful calls): masked tokens are state
+    no-ops — the recurrence sees (a=1, b=0) there, so ``h`` carries
+    through unchanged, and the conv tail is gathered at each request's
+    last *valid* tokens.  Must be a prefix mask per row.
+    """
     b_, t, _ = x.shape
     g_ = cfg.fsdp_gather_weights
     w_y = gather_for_use(params["w_y"], ("embed", "rnn"), g_)
@@ -96,13 +103,32 @@ def apply_rglru_block(params, x: jax.Array, cfg, *, state: RecState | None = Non
     }
     a, bb = _rglru_gates(gate_params, xb_conv)
     a32, b32 = a.astype(jnp.float32), bb.astype(jnp.float32)
+    if token_mask is not None and state is not None:
+        # Masked tokens are identity steps: h passes through, so h[:, -1]
+        # is each request's state at its last valid token.
+        m = token_mask[:, :, None]
+        a32 = jnp.where(m, a32, 1.0)
+        b32 = jnp.where(m, b32, 0.0)
     h0 = state.h.astype(jnp.float32) if state is not None else None
-    h = elevator_scan(a32, b32, h0, use_kernel=False if t == 1 else None)
-    h = h.astype(x.dtype)
+    # Stateful (serving) calls dispatch the persistent-state decode path
+    # (kernels/elevator_scan/decode): h rides a VMEM carry across the
+    # window's tokens instead of round-tripping HBM per token.
+    h32 = elevator_scan(a32, b32, h0, decode=state is not None)
+    h = h32.astype(x.dtype)
 
     new_state = None
     if state is not None:
-        new_state = RecState(h=h[:, -1].astype(jnp.float32), conv=conv_tail)
+        if token_mask is not None:
+            # Conv tail at each request's last valid tokens: rows
+            # counts..counts+width-2 of [old tail | window] — all-False
+            # rows keep the old tail verbatim.
+            counts = jnp.sum(token_mask, axis=1, dtype=jnp.int32)
+            idx = counts[:, None] + jnp.arange(cfg.conv_width - 1,
+                                               dtype=jnp.int32)[None]
+            conv_tail = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+        # State read off the f32 scan output (not the model-dtype cast):
+        # a frozen slot must round-trip bit-identically even under bf16.
+        new_state = RecState(h=h32[:, -1], conv=conv_tail)
     out = (h * y) @ gather_for_use(params["w_out"], ("rnn", "embed"), g_)
     return constrain(out, "batch", "seq", "act_embed"), new_state
 
@@ -144,8 +170,16 @@ _wkv_chunked = wkv_chunked_ref
 
 
 def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None,
-                     chunk: int = 16, use_kernel: bool | None = None):
-    """x: (B, T, D) -> ((B, T, D), new_state_or_None)."""
+                     chunk: int = 16, use_kernel: bool | None = None,
+                     token_mask: jax.Array | None = None):
+    """x: (B, T, D) -> ((B, T, D), new_state_or_None).
+
+    ``token_mask`` (B, T) bool (stateful calls): masked tokens are state
+    no-ops — the WKV recurrence sees (w=1, k=0) there, so S carries
+    through unchanged on every backend (chunked, decode, seq-parallel)
+    without touching the kernels, and the token-shift state is gathered
+    at each request's last *valid* token.  Must be a prefix mask per row.
+    """
     b, t, d = x.shape
     h = d // RWKV_HEAD_DIM
     dh = RWKV_HEAD_DIM
@@ -181,6 +215,11 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
         return z.reshape(b, t, h, dh).swapaxes(1, 2)  # (B,H,T,Dh)
 
     r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(w.astype(x.dtype))
+    if token_mask is not None and state is not None:
+        # Masked tokens are identity steps for S: decay 1, zero k^T v.
+        m = token_mask[:, None, :, None]                # (B, 1, T, 1)
+        w_ = jnp.where(m, w_, jnp.ones((), w_.dtype))
+        k_ = jnp.where(m, k_, jnp.zeros((), k_.dtype))
     u = params["u_bonus"].reshape(h, dh)
 
     h0 = (
@@ -237,5 +276,13 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
 
     new_state = None
     if state is not None:
-        new_state = RecState(h=S, conv=x[:, -1:])
+        if token_mask is None:
+            conv = x[:, -1:]
+        else:
+            # Token-shift state = each request's last valid token (row
+            # counts of [x_prev | x]); an all-False row keeps x_prev.
+            counts = jnp.sum(token_mask, axis=1, dtype=jnp.int32)
+            ext = jnp.concatenate([x_prev, x], axis=1)
+            conv = jnp.take_along_axis(ext, counts[:, None, None], axis=1)
+        new_state = RecState(h=S, conv=conv)
     return constrain(out, "batch", "seq", "act_embed"), new_state

@@ -55,20 +55,26 @@ def init_block(mk, cfg, kind: str, name: str, *, cross: bool = False):
 
 def apply_block(
     params, x, cfg, kind: str, *, positions=None, causal=True,
-    state=None, enc_out=None,
+    state=None, enc_out=None, token_mask=None,
 ):
-    """Pre-norm block. Returns (x, new_state_or_None)."""
+    """Pre-norm block. Returns (x, new_state_or_None).
+
+    ``token_mask`` (B, t) bool (decode only): masked tokens leave every
+    state leaf untouched — KV slots unwritten, recurrent carries frozen.
+    """
     h = rms_norm(params["ln1"], x, cfg.norm_eps)
     new_state = None
     if kind in ATTN_KINDS:
         out, new_state = attn_mod.apply_attention(
             params["attn"], h, cfg, kind=kind, positions=positions,
-            causal=causal, kv_cache=state,
+            causal=causal, kv_cache=state, token_mask=token_mask,
         )
     elif kind == "rec":
-        out, new_state = rec_mod.apply_rglru_block(params["rec"], h, cfg, state=state)
+        out, new_state = rec_mod.apply_rglru_block(
+            params["rec"], h, cfg, state=state, token_mask=token_mask)
     elif kind == "rwkv":
-        out, new_state = rec_mod.apply_rwkv_block(params["rwkv"], h, cfg, state=state)
+        out, new_state = rec_mod.apply_rwkv_block(
+            params["rwkv"], h, cfg, state=state, token_mask=token_mask)
     else:
         raise ValueError(kind)
     x = x + out
@@ -153,11 +159,12 @@ def _is_pspec(x):
 
 def apply_stack(
     stack_params, x, cfg, *, positions=None, causal=True,
-    states=None, enc_out=None, num_layers=None,
+    states=None, enc_out=None, num_layers=None, token_mask=None,
 ):
     """Apply scanned periods + remainder.  Returns (x, new_states_or_None).
 
     ``states``: {"scanned": stacked-state pytree or None, "remainder": list}.
+    ``token_mask``: see :func:`apply_block` (decode-state freezing).
     """
     pattern, n_periods, remainder = plan_groups(cfg, num_layers)
     remat_policy = _remat_policy(cfg)
@@ -170,7 +177,7 @@ def apply_stack(
         ):
             x, ns = apply_block(
                 sub_params, x, cfg, kind, positions=positions, causal=causal,
-                state=sub_state, enc_out=enc_out,
+                state=sub_state, enc_out=enc_out, token_mask=token_mask,
             )
             new_states.append(ns)
         return x, new_states
@@ -202,7 +209,7 @@ def apply_stack(
         st = states["remainder"][i] if states is not None else None
         x, ns = apply_block(
             sub_params, x, cfg, kind, positions=positions, causal=causal,
-            state=st, enc_out=enc_out,
+            state=st, enc_out=enc_out, token_mask=token_mask,
         )
         new_rem_states.append(ns)
 

@@ -1,25 +1,39 @@
-"""Serving: prefill + decode steps and a batched greedy-decoding engine.
+"""Serving: prefill + decode steps, a batched greedy engine, and a
+continuous-batching scheduler.
 
 ``make_prefill_step`` / ``make_decode_step`` are the lowering targets for
 the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells;
 ``make_cache_prefill_step`` fills the decode cache from a prompt in one
-jit; ``ServeEngine`` drives them for the runnable example (batched
-requests, greedy sampling) with a windowed, donated-state decode loop —
-the serving rendering of the paper's loop-carried-value argument: the
-decode state stays resident (device buffers donated in place, the WKV
-state in VMEM within a window) instead of round-tripping per token.
+jit; ``ServeEngine`` drives them for the runnable example with a
+windowed, donated-state decode loop — the serving rendering of the
+paper's loop-carried-value argument: the decode state stays resident
+(device buffers donated in place, the WKV state in VMEM within a window)
+instead of round-tripping per token.
+
+``ServeEngine.generate`` is the *lockstep* loop: every request advances
+one window at a time, padded to the longest — a workgroup-global barrier
+at the serving layer, exactly the group-to-group pattern the paper argues
+against.  ``ServeEngine.serve`` replaces it with per-request progress
+(point-to-point hand-offs): each slot decodes at its own position, EOS
+and per-request budgets are detected *inside* the jitted window, and a
+freed slot is re-prefilled with the next queued request without touching
+its neighbors' caches.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.model import model as M
+from repro.model.attention import KVCache
+from repro.model.recurrent import RecState
 
 
 def make_prefill_step(cfg):
@@ -127,18 +141,30 @@ def make_decode_step(cfg):
 
 
 def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
-                            last_only: bool = False):
+                            last_only: bool = False, max_len: int | None = None):
     """One-jit prompt prefill *into the decode cache*.
 
-    ``(params, state, tokens (B, P)) -> (logits (B, P, V), new_state)`` —
-    the whole prompt goes through ``model.decode_step`` as a single window
-    starting at position 0, so the KV caches and recurrent states fill in
-    one dispatch instead of P sequential single-token calls (the WKV part
-    takes the decode-window or chunked elevator kernel, not P state
-    round-trips).  ``state`` is donated: XLA writes the caches in place.
-    ``last_only=True`` returns logits for the final prompt position only
-    ((B, 1, V)) — what a greedy serve loop consumes; the full (B, P, V)
-    projection is for scoring callers.
+    ``(params, state, tokens (B, P)[, prompt_lengths (B,)]) ->
+    (logits (B, P, V), new_state)`` — the whole prompt goes through
+    ``model.decode_step`` as a single window starting at position 0, so
+    the KV caches and recurrent states fill in one dispatch instead of P
+    sequential single-token calls (the WKV part takes the decode-window
+    or chunked elevator kernel, not P state round-trips).  ``state`` is
+    donated: XLA writes the caches in place.  ``last_only=True`` returns
+    logits for the final prompt position only ((B, 1, V)) — what a
+    greedy serve loop consumes; the full (B, P, V) projection is for
+    scoring callers.
+
+    ``prompt_lengths`` masks ragged prompts: request b's tokens beyond
+    ``prompt_lengths[b]`` are padding and contribute *nothing* to any
+    state — pad tokens never enter the KV caches or the WKV/RG-LRU
+    recurrent states (they used to, silently polluting every request
+    shorter than the batch max), each request's cache length ends at its
+    own prompt length, and with ``last_only`` the logits are taken at
+    each request's final *valid* position.
+
+    ``max_len`` (the position cap the state was built with) is forwarded
+    to ``model.decode_step``'s ring-slack trace check.
 
     With ``mesh``, prompts of at least ``min_len`` tokens run under the
     ``prefill_seq`` sharding rules — the same routing rule as
@@ -148,9 +174,17 @@ def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
     """
     from repro.model.sharding import make_rules, sharding_context
 
-    def cache_prefill(params, state, tokens):
+    def cache_prefill(params, state, tokens, prompt_lengths=None):
+        mask = None
+        if prompt_lengths is not None:
+            p = tokens.shape[1]
+            mask = (
+                jnp.arange(p, dtype=jnp.int32)[None, :]
+                < jnp.asarray(prompt_lengths, jnp.int32)[:, None]
+            )
         return M.decode_step(params, cfg, state, tokens, jnp.int32(0),
-                             last_only=last_only)
+                             last_only=last_only, token_mask=mask,
+                             max_len=max_len)
 
     if mesh is None:
         return jax.jit(cache_prefill, donate_argnums=(1,))
@@ -162,15 +196,91 @@ def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
     seq_rules = make_rules(mesh, "prefill_seq")
     plain_rules = make_rules(mesh, "prefill")
 
-    def prefill(params, state, tokens):
+    def prefill(params, state, tokens, prompt_lengths=None):
         fn, rules = (
             (seq_jit, seq_rules) if tokens.shape[1] >= min_len
             else (short_jit, plain_rules)
         )
         with mesh, sharding_context(mesh, rules):
-            return fn(params, state, tokens)
+            return fn(params, state, tokens, prompt_lengths)
 
     return prefill
+
+
+@dataclasses.dataclass
+class Request:
+    """One serve request: a prompt and a per-request generation budget."""
+
+    tokens: Any                    # (P,) int prompt token ids
+    max_new_tokens: int = 16
+
+
+def _bucket32(length: int) -> int:
+    """Prompt-length bucket (next multiple of 32): one shared rounding for
+    admission jit-cache keys and local-ring ``insert_window`` sizing, so
+    the two can't silently diverge."""
+    return -(-max(int(length), 1) // 32) * 32
+
+
+def _reset_slot_rows(state, rows: jax.Array):
+    """Zero the decode state of the slots marked in ``rows`` (B,) bool —
+    and only those: neighbors' caches are untouched (a ``jnp.where`` per
+    leaf along the batch axis, no reallocation, donation-friendly).
+
+    Per-request cache lengths and recurrent states reset to zero; the KV
+    cache *contents* are left in place — with length 0 no stale slot is
+    reachable (the positional masks in ``_decode_attention`` only admit
+    slots whose absolute position is below the slot's own query
+    positions, and those get overwritten by the new prompt's insert).
+    """
+
+    def fix(node):
+        if isinstance(node, KVCache):
+            extra = node.k.ndim - 4              # stacked (L, B, ...) or not
+            m = rows.reshape((1,) * extra + (-1,))
+            return KVCache(
+                k=node.k, v=node.v,
+                length=jnp.where(m, 0, node.length),
+            )
+        if isinstance(node, RecState):
+            extra = node.conv.ndim - 3
+
+            def zero(leaf):
+                m = rows.reshape(
+                    (1,) * extra + (-1,) + (1,) * (leaf.ndim - extra - 1)
+                )
+                return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+            return RecState(h=zero(node.h), conv=zero(node.conv))
+        raise TypeError(type(node))
+
+    return jax.tree.map(
+        fix, state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+    )
+
+
+def _sample_tokens(logits, base_key, req_ids, tok_idx, temperature, top_k):
+    """Sample one token per slot from ``logits`` (B, V).
+
+    ``temperature <= 0`` is greedy argmax.  Otherwise temperature/top-k
+    categorical with a per-slot PRNG key derived as
+    ``fold_in(fold_in(base_key, req_ids[b]), tok_idx[b])`` — a pure
+    function of (request id, token index), so a request's sampled stream
+    is invariant to the decode window K, to which slot it landed in, and
+    to what its batch neighbors are doing.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / float(temperature)
+    if top_k and top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, int(top_k))[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+
+    def one(rid, n, row):
+        key = jax.random.fold_in(jax.random.fold_in(base_key, rid), n)
+        return jax.random.categorical(key, row)
+
+    return jax.vmap(one)(req_ids, tok_idx, lg).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -189,6 +299,10 @@ class ServeEngine:
 
     ``mesh`` routes long prompts through the sequence-parallel prefill
     rules (see :func:`make_cache_prefill_step`).
+
+    ``serve(requests)`` is the continuous-batching scheduler on top of the
+    same jitted pieces: per-request lengths, in-window sampling and EOS
+    detection, and slot recycling (see :meth:`serve`).
     """
 
     cfg: Any
@@ -208,10 +322,17 @@ class ServeEngine:
         )
         # last_only: generate() consumes only the final prompt position's
         # logits — don't materialize the (B, P, V) tensor at prefill.
-        self._prefill = make_cache_prefill_step(cfg, self.mesh, last_only=True)
+        self._prefill = make_cache_prefill_step(
+            cfg, self.mesh, last_only=True, max_len=self.max_len
+        )
         self._windows = {}
+        self._admits = {}
+        self._serve_windows = {}
         # Observability: decode dispatches issued by the last generate().
         self.last_decode_dispatches = 0
+        # serve() counters: decode dispatches / admission prefills /
+        # total slot-steps scanned (incl. masked dead-slot steps).
+        self.last_serve_stats: dict[str, int] = {}
 
     def _window_step(self, k: int, last: bool):
         """Jitted K-token decode window, cached per (k, last).
@@ -246,8 +367,254 @@ class ServeEngine:
             self._windows[(k, last)] = fn
         return fn
 
-    def generate(self, prompts: jax.Array, num_new_tokens: int) -> jax.Array:
-        """prompts: (B, P) int32 -> (B, P + num_new_tokens)."""
+    # ------------------------------------------------------------------
+    # Continuous batching: admission + masked decode windows
+    # ------------------------------------------------------------------
+
+    def _admit_step(self, p: int, temperature: float, top_k: int,
+                    eos_id: int | None):
+        """Jitted slot admission, cached per (prompt bucket, sampling cfg).
+
+        Re-prefills the admitted slots' prompts into the shared decode
+        state without touching neighbors: admitted rows are zeroed
+        (:func:`_reset_slot_rows`), then one masked ``decode_step`` call
+        runs the whole (B, P) batch with a token mask that is all-False
+        outside the admitted rows — so every other slot's KV cache,
+        recurrent state, and length are bit-identical afterwards.  Also
+        samples each admitted request's first token (token index 0).
+
+        With an engine ``mesh`` the admission prefill runs under the same
+        sharding rules :func:`make_cache_prefill_step` would pick for a
+        prompt of this bucket (``prefill_seq`` at/above
+        :data:`SEQ_PREFILL_MIN_T`, plain ``prefill`` below).
+        """
+        key = (p, temperature, top_k, eos_id)
+        fn = self._admits.get(key)
+        if fn is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def admit(params, state, tokens, admit_row, plen, lengths,
+                      counts, budgets, req_ids, active, cur, base_key):
+                state = _reset_slot_rows(state, admit_row)
+                mask = admit_row[:, None] & (
+                    jnp.arange(p, dtype=jnp.int32)[None, :] < plen[:, None]
+                )
+                logits, state = M.decode_step(
+                    params, cfg, state, tokens, jnp.int32(0),
+                    token_mask=mask, last_only=True, max_len=max_len,
+                )
+                tok0 = _sample_tokens(
+                    logits[:, -1], base_key, req_ids,
+                    jnp.zeros_like(counts), temperature, top_k,
+                )
+                lengths = jnp.where(admit_row, plen, lengths)
+                counts = jnp.where(admit_row, 1, counts)
+                done = counts >= budgets
+                if eos_id is not None:
+                    done |= tok0 == eos_id
+                active = jnp.where(admit_row, ~done, active)
+                cur = jnp.where(admit_row[:, None], tok0[:, None], cur)
+                return state, lengths, counts, active, cur, tok0
+
+            fn = jax.jit(admit, donate_argnums=(1,))
+            if self.mesh is not None:
+                from repro.model.sharding import make_rules, sharding_context
+
+                mesh = self.mesh
+                rules = make_rules(
+                    mesh,
+                    "prefill_seq" if p >= SEQ_PREFILL_MIN_T else "prefill",
+                )
+                jitted = fn
+
+                def fn(*args):
+                    with mesh, sharding_context(mesh, rules):
+                        return jitted(*args)
+
+            self._admits[key] = fn
+        return fn
+
+    def _serve_window(self, k: int, temperature: float, top_k: int,
+                      eos_id: int | None):
+        """Jitted continuous decode window, cached per (k, sampling cfg).
+
+        A ``lax.scan`` of k single-token ``decode_step`` calls with
+        per-slot lengths.  Each step: finished/empty slots are masked out
+        of the model (``token_mask`` freezes their caches and recurrent
+        states via ``jnp.where`` — bit-identical across the window), the
+        next token is sampled in-window (temperature / top-k with the
+        per-request PRNG key), and EOS / budget exhaustion flips the
+        slot's ``active`` bit *inside the jit* — the host only sees the
+        window-level result.  Emits (tokens (k, B), emit-mask (k, B)).
+        """
+        key = (k, temperature, top_k, eos_id)
+        fn = self._serve_windows.get(key)
+        if fn is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def win(params, state, cur, lengths, counts, budgets, active,
+                    req_ids, base_key):
+                def body(carry, _):
+                    state, cur, lengths, counts, active = carry
+                    logits, state = M.decode_step(
+                        params, cfg, state, cur, lengths,
+                        token_mask=active[:, None], last_only=True,
+                        max_len=max_len,
+                    )
+                    nxt = _sample_tokens(
+                        logits[:, -1], base_key, req_ids, counts,
+                        temperature, top_k,
+                    )
+                    emit = active
+                    lengths = lengths + emit.astype(jnp.int32)
+                    counts = counts + emit.astype(jnp.int32)
+                    done = counts >= budgets
+                    if eos_id is not None:
+                        done |= nxt == eos_id
+                    active = active & ~done
+                    cur = jnp.where(emit[:, None], nxt[:, None], cur)
+                    return (state, cur, lengths, counts, active), (nxt, emit)
+
+                (state, cur, lengths, counts, active), (toks, emits) = (
+                    jax.lax.scan(
+                        body, (state, cur, lengths, counts, active), None,
+                        length=k,
+                    )
+                )
+                return state, cur, lengths, counts, active, toks, emits
+
+            fn = jax.jit(win, donate_argnums=(1,))
+            self._serve_windows[key] = fn
+        return fn
+
+    def serve(self, requests, *, slots: int = 4, temperature: float = 0.0,
+              top_k: int = 0, eos_id: int | None = None, seed: int = 0):
+        """Continuous-batching scheduler: decode ``requests`` through a
+        fixed pool of ``slots`` batch slots with per-request progress.
+
+        Each request (a :class:`Request`, or anything with ``tokens`` /
+        ``max_new_tokens``) is admitted into a free slot (a single masked
+        prefill that cannot touch neighbors' caches), decodes at its own
+        position, and frees its slot the moment it hits ``eos_id`` or its
+        own ``max_new_tokens`` — detected inside the jitted window, so a
+        finished request never burns another dispatch waiting for the
+        slowest batch member (the lockstep barrier :meth:`generate`
+        pays).  Freed slots are recycled to the next queued request in
+        arrival order.
+
+        Sampling: greedy at ``temperature`` 0 (the parity-testable mode),
+        else temperature / top-k categorical, keyed per (request, token
+        index) — a request's stream is reproducible under a fixed
+        ``seed`` regardless of ``decode_window``, slot assignment, or
+        batch composition.
+
+        Returns a list of per-request generated-token arrays (prompt not
+        included; an EOS, if sampled, is the last element).  Stats land
+        in ``last_serve_stats``.
+        """
+        reqs = [
+            r if hasattr(r, "tokens") else Request(tokens=r)
+            for r in requests
+        ]
+        n = len(reqs)
+        if n == 0:
+            self.last_serve_stats = {
+                "decode_dispatches": 0, "admissions": 0, "slot_steps": 0,
+            }
+            return []
+        b = max(1, min(int(slots), n))
+        k_w = max(1, int(self.decode_window))
+        p_lens = [int(np.asarray(r.tokens).size) for r in reqs]
+        for r, pl in zip(reqs, p_lens):
+            if pl < 1:
+                raise ValueError("request prompt must be non-empty")
+            if int(r.max_new_tokens) < 1:
+                raise ValueError("max_new_tokens must be >= 1")
+            if pl + int(r.max_new_tokens) > self.max_len:
+                raise ValueError(
+                    f"request needs {pl} + {r.max_new_tokens} positions, "
+                    f"engine max_len={self.max_len}"
+                )
+        state = M.init_decode_state(
+            self.cfg, batch=b, max_len=self.max_len,
+            insert_window=max(k_w, _bucket32(max(p_lens))),
+        )
+        lengths = jnp.zeros((b,), jnp.int32)
+        counts = jnp.zeros((b,), jnp.int32)
+        budgets = jnp.zeros((b,), jnp.int32)
+        req_ids = jnp.zeros((b,), jnp.int32)
+        active = jnp.zeros((b,), bool)
+        cur = jnp.zeros((b, 1), jnp.int32)
+        base_key = jax.random.PRNGKey(seed)
+
+        pending = collections.deque(range(n))
+        outputs: list[list[int]] = [[] for _ in range(n)]
+        slot_req = [-1] * b
+        stats = {"decode_dispatches": 0, "admissions": 0, "slot_steps": 0}
+        active_np = np.zeros(b, bool)
+
+        while pending or active_np.any():
+            free = [i for i in range(b) if not active_np[i]]
+            if pending and free:
+                take = [pending.popleft()
+                        for _ in range(min(len(free), len(pending)))]
+                p_b = _bucket32(max(p_lens[ri] for ri in take))
+                tok_np = np.zeros((b, p_b), np.int32)
+                admit_np = np.zeros(b, bool)
+                plen_np = np.zeros(b, np.int32)
+                bud_np = np.array(budgets)
+                rid_np = np.array(req_ids)
+                for slot, ri in zip(free, take):
+                    t_arr = np.asarray(reqs[ri].tokens, np.int32).reshape(-1)
+                    tok_np[slot, : t_arr.size] = t_arr
+                    admit_np[slot] = True
+                    plen_np[slot] = t_arr.size
+                    bud_np[slot] = int(reqs[ri].max_new_tokens)
+                    rid_np[slot] = ri
+                    slot_req[slot] = ri
+                budgets = jnp.asarray(bud_np)
+                req_ids = jnp.asarray(rid_np)
+                fn = self._admit_step(p_b, temperature, top_k, eos_id)
+                state, lengths, counts, active, cur, tok0 = fn(
+                    self.params, state, jnp.asarray(tok_np),
+                    jnp.asarray(admit_np), jnp.asarray(plen_np), lengths,
+                    counts, budgets, req_ids, active, cur, base_key,
+                )
+                tok0_np = np.asarray(tok0)
+                active_np = np.asarray(active)
+                for slot, ri in zip(free, take):
+                    outputs[ri].append(int(tok0_np[slot]))
+                stats["admissions"] += 1
+            if active_np.any():
+                fn = self._serve_window(k_w, temperature, top_k, eos_id)
+                state, cur, lengths, counts, active, toks, emits = fn(
+                    self.params, state, cur, lengths, counts, budgets,
+                    active, req_ids, base_key,
+                )
+                toks_np = np.asarray(toks)
+                emits_np = np.asarray(emits)
+                for step in range(k_w):
+                    for slot in np.nonzero(emits_np[step])[0]:
+                        outputs[slot_req[slot]].append(
+                            int(toks_np[step, slot]))
+                active_np = np.asarray(active)
+                stats["decode_dispatches"] += 1
+                stats["slot_steps"] += k_w * b
+        self.last_serve_stats = stats
+        return [np.asarray(o, np.int32) for o in outputs]
+
+    def generate(self, prompts: jax.Array, num_new_tokens: int,
+                 prompt_lengths=None) -> jax.Array:
+        """prompts: (B, P) int32 -> (B, P + num_new_tokens).
+
+        ``prompt_lengths`` (B,) marks ragged prompts: tokens at/beyond a
+        request's length are padding — masked out of every cache and
+        recurrent state at prefill — and generation continues from each
+        request's own final position (the output keeps the dense layout:
+        row b's generated tokens start at column P regardless of its
+        prompt length).  Decoding itself stays lockstep; :meth:`serve` is
+        the continuous scheduler.
+        """
         b, p_len = prompts.shape
         k_w = max(1, int(self.decode_window))
         # insert_window sizes the local-attention ring slack for the widest
@@ -258,15 +625,19 @@ class ServeEngine:
         # ring is capped at max_len either way).
         state = M.init_decode_state(
             self.cfg, batch=b, max_len=self.max_len,
-            insert_window=max(k_w, -(-p_len // 32) * 32),
+            insert_window=max(k_w, _bucket32(p_len)),
         )
-        logits, state = self._prefill(self.params, state, prompts)
+        logits, state = self._prefill(self.params, state, prompts,
+                                      prompt_lengths)
         self.last_decode_dispatches = 0
         if num_new_tokens <= 0:
             return prompts
         out = [prompts]
         cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        pos = jnp.int32(p_len)
+        pos = (
+            jnp.int32(p_len) if prompt_lengths is None
+            else jnp.asarray(prompt_lengths, jnp.int32)
+        )
         left = num_new_tokens
         while left > 0:
             k = min(k_w, left)

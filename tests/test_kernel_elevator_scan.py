@@ -136,3 +136,130 @@ def test_rejects_bad_chunk():
     a = jnp.ones((1, 96, 128))
     with pytest.raises(ValueError):
         elevator_scan_pallas(a, a, chunk=64, interpret=True)
+
+
+# ==========================================================================
+# Decode micro-kernel: persistent h across a K-token window (ROADMAP (d))
+# ==========================================================================
+
+class TestElevatorDecode:
+    """kernels/elevator_scan/decode: the RG-LRU analogue of wkv/decode."""
+
+    def _inputs(self, b, t, d, seed=0):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, d)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+        h0 = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+        return a, x, h0
+
+    @pytest.mark.parametrize("t", [1, 5, 37])
+    def test_window_kernel_matches_ref(self, t):
+        from repro.kernels.elevator_scan.decode import (
+            elevator_decode_window_pallas,
+        )
+
+        a, x, h0 = self._inputs(2, t, 128, seed=t)
+        got = elevator_decode_window_pallas(a, x, h0, interpret=True)
+        want = elevator_scan_ref(a, x, h0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_window_carry_across_windows(self):
+        # 16 + 16 + 5 chained windows == one 37-token sweep.
+        from repro.kernels.elevator_scan.decode import (
+            elevator_decode_window_pallas,
+        )
+
+        a, x, h0 = self._inputs(2, 37, 128, seed=7)
+        want = elevator_scan_ref(a, x, h0)
+        outs, h = [], h0
+        for lo, hi in ((0, 16), (16, 32), (32, 37)):
+            o = elevator_decode_window_pallas(
+                a[:, lo:hi], x[:, lo:hi], h, interpret=True)
+            outs.append(o)
+            h = o[:, -1]
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_grads_match_autodiff_of_ref(self):
+        from repro.kernels.elevator_scan.decode import elevator_decode_diff
+
+        a, x, h0 = self._inputs(2, 9, 128, seed=11)
+
+        def loss_k(a_, x_, h_):
+            return (elevator_decode_diff(True, True, a_, x_, h_) ** 2).sum()
+
+        def loss_r(a_, x_, h_):
+            return (elevator_scan_ref(a_, x_, h_) ** 2).sum()
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(a, x, h0)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(a, x, h0)
+        for u, v in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_dispatch_routes_decode_to_window_kernel(self, monkeypatch):
+        # decode=True windows <= the threshold must take the decode kernel
+        # (not the chunked kernel, not jnp); longer sweeps fall through.
+        from repro.kernels.elevator_scan import decode as dec_mod
+        from repro.kernels.elevator_scan import ops as es_ops
+
+        monkeypatch.setattr(es_ops, "on_tpu", lambda: True)
+        monkeypatch.setattr(es_ops, "interpret_default", lambda: True)
+        calls = []
+        real = dec_mod.elevator_decode_window_pallas
+        monkeypatch.setattr(
+            es_ops, "elevator_decode_diff",
+            lambda i, p, a, x, h: calls.append("decode")
+            or real(a, x, h, interpret=True))
+        real_chunk = es_ops.elevator_scan_pallas
+        monkeypatch.setattr(
+            es_ops, "elevator_scan_pallas",
+            lambda *a_, **kw: calls.append("chunked")
+            or real_chunk(*a_, **kw))
+
+        a, x, h0 = self._inputs(1, 1, 128, seed=3)
+        got = elevator_scan(a, x, h0, decode=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(elevator_scan_ref(a, x, h0)),
+                                   rtol=1e-6, atol=1e-6)
+        assert calls == ["decode"], calls
+
+        # t == 1 infers decode (the old forced-jnp path, now kernelized).
+        calls.clear()
+        elevator_scan(a, x, h0)
+        assert calls == ["decode"], calls
+
+        # A long stateful sweep (cache prefill) takes the chunked kernel.
+        calls.clear()
+        a2, x2, h2 = self._inputs(1, 256, 128, seed=4)
+        elevator_scan(a2, x2, h2, decode=True)
+        assert calls == ["chunked"], calls
+
+    def test_apply_rglru_block_stateful_reaches_decode_kernel(self, monkeypatch):
+        # End-to-end: the model block's stateful (serving) call must
+        # dispatch the persistent-state decode path under TPU rules —
+        # the old code pinned t==1 to the unfused jnp path.
+        from repro.configs.registry import get_config
+        from repro.kernels.elevator_scan import decode as dec_mod
+        from repro.kernels.elevator_scan import ops as es_ops
+        from repro.model import model as M
+        from repro.model import recurrent as rec
+
+        monkeypatch.setattr(es_ops, "on_tpu", lambda: True)
+        monkeypatch.setattr(es_ops, "interpret_default", lambda: True)
+        calls = []
+        real = dec_mod.elevator_decode_window_pallas
+        monkeypatch.setattr(
+            es_ops, "elevator_decode_diff",
+            lambda i, p, a, x, h: calls.append("decode")
+            or real(a, x, h, interpret=True))
+
+        cfg = get_config("recurrentgemma-2b").reduced()
+        params = M.init_params(cfg, jax.random.key(0))
+        state = M.init_decode_state(cfg, batch=1, max_len=32)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        logits, _ = M.decode_step(params, cfg, state, tok, jnp.int32(0))
+        assert calls and all(c == "decode" for c in calls), calls
+        assert bool(jnp.isfinite(logits).all())
