@@ -6,7 +6,11 @@ and attention-free (rwkv6) — all through the same ServeEngine, twice:
 * lockstep ``generate``: one batch, every request padded to the longest;
 * continuous ``serve``: a ragged request queue through 2 slots with
   per-request budgets, temperature/top-k sampling inside the jitted
-  window, and EOS-freed slots recycled to the next queued request.
+  window, and EOS-freed slots recycled to the next queued request —
+  plus the fault-isolation layer: a chaos-injected NaN is quarantined
+  in-window and recovered by re-prefill (typed ``recovered`` outcome),
+  a per-request deadline and a bounded queue produce ``deadline`` /
+  ``shed`` outcomes, and neighbors stay bit-identical throughout.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -58,7 +62,38 @@ def main():
         st = engine.last_serve_stats
         print(f"{arch:22s} continuous -> {[int(o.size) for o in outs]} "
               f"tokens in {dt:.2f}s ({st['decode_dispatches']} dispatches, "
-              f"{st['admissions']} admissions)")
+              f"{st['admissions']} admissions; outcomes "
+              f"{sorted({o.outcome for o in outs})})")
+
+        # Fault isolation: the same queue under chaos — one pinned
+        # NaN-in-state fault (quarantined in-window, recovered by masked
+        # re-prefill from the accepted prefix), one request on a
+        # zero-millisecond deadline, and a 1-deep bounded queue that
+        # sheds the last arrivals.  Every non-degraded request's stream
+        # is bit-identical to the run above (same seed, per-(request,
+        # token) sampling keys).
+        from repro.serve.chaos import ChaosInjector
+
+        chaos = ChaosInjector(seed=1, nan_at=(2,))
+        c_outs = engine.serve(reqs, slots=2, temperature=0.7, top_k=32,
+                              seed=0, chaos=chaos)
+        st = engine.last_serve_stats
+        identical = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(outs, c_outs))
+        print(f"{arch:22s} chaos      -> outcomes "
+              f"{[o.outcome for o in c_outs]} "
+              f"({st['quarantines']} quarantined, {st['recoveries']} "
+              f"recovered; streams bit-identical: {identical})")
+
+        d_reqs = [Request(tokens=r.tokens, max_new_tokens=r.max_new_tokens,
+                          deadline_ms=0.0 if i == 0 else None)
+                  for i, r in enumerate(reqs)]
+        d_outs = engine.serve(d_reqs, slots=2, temperature=0.7, top_k=32,
+                              seed=0, max_queue=1)
+        print(f"{arch:22s} lifecycle  -> outcomes "
+              f"{[o.outcome for o in d_outs]} (deadline_ms=0 on request "
+              f"0, queue bounded at 2 slots + 1)")
 
 
 if __name__ == "__main__":

@@ -36,3 +36,13 @@ echo "== tier-1 lane 3b: continuous-serve smoke =="
 python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
     --requests 5 --slots 2 --prompt-len 8 --new-tokens 6 --max-len 32 \
     --decode-window 2 --temperature 0.8 --top-k 16
+
+echo "== tier-1 lane 3c: chaos smoke (fault isolation drill) =="
+# Serve under a fixed injection seed: a pinned NaN-in-state fault plus a
+# pinned dispatch drop.  The launcher exits nonzero unless every fault is
+# quarantined+recovered AND every request's stream is bit-identical to
+# the fault-free run (the one-slot blast-radius invariant).
+python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
+    --requests 6 --slots 2 --prompt-len 8 --new-tokens 6 --max-len 64 \
+    --decode-window 2 --chaos-seed 7 --chaos-nan-at 2 --chaos-drop-at 4 \
+    --watchdog-timeout 30

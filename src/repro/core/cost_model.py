@@ -396,6 +396,43 @@ def serve_batch_steps(new_tokens, slots: int, window: int = 1):
     return useful, lockstep, continuous
 
 
+def serve_recovery_steps(prompt_lens, accepted, victim: int,
+                         window: int = 1):
+    """Positions re-processed to recover ONE faulted slot: isolated
+    quarantine+re-prefill vs a batch-global restart (the robustness dual
+    of the barrier argument — a fault's blast radius is one slot's
+    hand-off, not a workgroup-global rollback).
+
+    ``prompt_lens`` / ``accepted``: per-slot prompt lengths and tokens
+    accepted so far; ``victim``: the faulted slot; ``window``: tokens per
+    decode dispatch (K).
+
+    isolated: one masked admission prefill replays the victim's prompt +
+              accepted prefix — ``prompt_lens[victim] +
+              accepted[victim]`` positions, one dispatch, neighbors
+              untouched (their cost is zero by the bit-identity
+              invariant).
+    global:   every slot re-prefills its prompt and the whole batch
+              re-decodes to the furthest accepted token in lockstep
+              windows — ``sum(prompts) + slots * ceil(max(accepted)/K)*K``
+              slot-steps.
+
+    Returns ``(isolated_steps, global_steps)``; global / isolated is the
+    modeled recovery-cost ratio of restart-the-world over per-slot
+    recovery.
+    """
+    prompt_lens = [int(p) for p in prompt_lens]
+    accepted = [int(a) for a in accepted]
+    if len(prompt_lens) != len(accepted) or not prompt_lens:
+        raise ValueError("need matching, non-empty prompt/accepted lists")
+    if not 0 <= victim < len(prompt_lens) or window < 1:
+        raise ValueError("victim out of range or window < 1")
+    isolated = prompt_lens[victim] + accepted[victim]
+    redecode = -(-max(accepted) // window) * window if max(accepted) else 0
+    global_ = sum(prompt_lens) + len(prompt_lens) * redecode
+    return isolated, global_
+
+
 def reduce_traffic(n: int, itemsize: int = 4):
     """Tree reduction: shared version stages each level through scratchpad;
     direct uses windowed elevator edges per level."""

@@ -41,40 +41,96 @@ class NodeFailure(RuntimeError):
 
 
 class StepWatchdog:
-    """Deadline enforcement for (potentially hanging) steps."""
+    """Deadline enforcement for (potentially hanging) steps.
+
+    A Python thread cannot be killed, so a timed-out step's worker keeps
+    running after :class:`StepTimeout` is raised — and with donated device
+    buffers in flight, an abandoned step that later completes would race
+    the restarted one.  Every ``run`` therefore opens a new *generation*:
+    on timeout the generation is fenced off, the stale thread's eventual
+    result or exception is discarded (``stale_discarded`` counts them),
+    and the stale thread can notice it was abandoned via
+    :attr:`cancelled` — a callable the watched ``fn`` may poll at safe
+    points (e.g. *before* consuming donated buffers) to bail out
+    cooperatively instead of mutating state the restarted step now owns.
+    """
 
     def __init__(self, timeout_s: float):
         self.timeout_s = timeout_s
+        self._gen = 0
+        self._lock = threading.Lock()
+        self.stale_discarded = 0
+        self.timeouts = 0
+        # Re-bound at each run(); True once that run has been abandoned.
+        self.cancelled: Callable[[], bool] = lambda: False
 
     def run(self, fn: Callable[[], Any]) -> Any:
-        result: list[Any] = []
-        error: list[BaseException] = []
+        with self._lock:
+            self._gen += 1
+            gen = self._gen
+        self.cancelled = lambda: gen != self._gen
+        outcome: list[tuple[bool, Any]] = []
 
         def target():
             try:
-                result.append(fn())
+                value = fn()
+                ok = True
             except BaseException as e:  # noqa: BLE001 — propagated below
-                error.append(e)
+                value, ok = e, False
+            with self._lock:
+                if gen != self._gen:        # fenced: step was abandoned
+                    self.stale_discarded += 1
+                    return
+                outcome.append((ok, value))
 
         t = threading.Thread(target=target, daemon=True)
         t.start()
         t.join(self.timeout_s)
-        if t.is_alive():
-            raise StepTimeout(f"step exceeded {self.timeout_s}s (hung collective?)")
-        if error:
-            raise error[0]
-        return result[0]
+        with self._lock:
+            if not outcome:
+                # Hung: advance the generation *under the lock*, so a
+                # worker racing to finish right now either already
+                # appended (seen below) or sees the fence and discards.
+                self._gen += 1
+                self.timeouts += 1
+                hung = True
+            else:
+                hung = False
+        if hung:
+            raise StepTimeout(
+                f"step exceeded {self.timeout_s}s (hung collective?)"
+            )
+        ok, value = outcome[0]
+        if not ok:
+            raise value
+        return value
 
 
 @dataclasses.dataclass
 class StragglerDetector:
+    """EWMA straggler flagging.
+
+    ``warmup`` observations are discarded before the baseline seeds: the
+    first step of any jitted loop includes compile time, and folding it
+    into the EWMA poisons the baseline (a 100× compile step makes every
+    real step look fast forever — or, after a restart re-traces, makes
+    the first real step look like a straggler).  :meth:`reset` drops the
+    baseline so a restarted run re-warms instead of comparing against a
+    dead configuration's step times.
+    """
+
     threshold: float = 2.0
     alpha: float = 0.1
+    warmup: int = 1
     _ewma: float | None = None
+    _seen: int = 0
     flagged: int = 0
 
     def observe(self, step_time_s: float) -> bool:
         """Returns True if this step is a straggler."""
+        self._seen += 1
+        if self._seen <= self.warmup:
+            return False
         if self._ewma is None:
             self._ewma = step_time_s
             return False
@@ -85,6 +141,12 @@ class StragglerDetector:
         if is_straggler:
             self.flagged += 1
         return is_straggler
+
+    def reset(self):
+        """Drop the baseline (and re-enter warmup): call after a restart,
+        where the first step re-pays jit compile time."""
+        self._ewma = None
+        self._seen = 0
 
     @property
     def baseline_s(self) -> float | None:
@@ -144,4 +206,8 @@ def run_with_restarts(
                 state, step = make_state(), 0
             else:
                 state, step = restored
+            # The restarted run re-traces: its first step pays compile
+            # time again, and the old baseline belongs to a dead process
+            # configuration — re-warm instead of flagging it.
+            straggler.reset()
     return state, stats

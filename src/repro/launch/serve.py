@@ -10,6 +10,18 @@ window and slot recycling:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --continuous --requests 8 --slots 2 --temperature 0.8 --top-k 40
+
+Fault-isolation knobs (all ``--continuous``): ``--deadline-ms`` /
+``--max-queue`` bound request latency and queue depth (typed ``deadline``
+/ ``shed`` outcomes), ``--watchdog-timeout`` arms the per-dispatch hang
+watchdog, ``--snapshot-every`` / ``--snapshot-dir`` checkpoint the engine
+for preemption recovery, and ``--chaos-seed`` (+ ``--chaos-nan-rate``
+etc.) runs the serve under seed-deterministic fault injection — the
+chaos-smoke drill asserts every injected fault was quarantined and
+recovered with all requests still completing:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+      --continuous --requests 6 --slots 2 --chaos-seed 7 --chaos-nan-at 2
 """
 
 from __future__ import annotations
@@ -48,6 +60,32 @@ def main():
                     help="[--continuous] 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="[--continuous] wall-clock budget per request; "
+                         "expired requests end with outcome 'deadline'")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="[--continuous] bounded admission queue beyond "
+                         "the slot pool; overflow is shed, not queued")
+    ap.add_argument("--watchdog-timeout", type=float, default=None,
+                    help="[--continuous] per-dispatch hang deadline (s)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="[--continuous] snapshot the engine every N "
+                         "decode dispatches (needs --snapshot-dir)")
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--restore-from", default=None,
+                    help="[--continuous] resume a snapshotted serve "
+                         "(same requests/args/seed)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="[--continuous] enable seed-deterministic fault "
+                         "injection (chaos drill mode: exits nonzero "
+                         "unless every fault is recovered)")
+    ap.add_argument("--chaos-nan-rate", type=float, default=0.0)
+    ap.add_argument("--chaos-drop-rate", type=float, default=0.0)
+    ap.add_argument("--chaos-hang-rate", type=float, default=0.0)
+    ap.add_argument("--chaos-nan-at", type=int, nargs="*", default=(),
+                    help="pin NaN faults to decode-dispatch indices")
+    ap.add_argument("--chaos-drop-at", type=int, nargs="*", default=())
+    ap.add_argument("--chaos-hang-at", type=int, nargs="*", default=())
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -83,10 +121,33 @@ def main():
             for _ in range(args.requests)
         ]
         useful = sum(r.max_new_tokens for r in reqs)
+        chaos = baseline = None
+        if args.chaos_seed is not None:
+            from repro.serve.chaos import ChaosInjector
+
+            chaos = ChaosInjector(
+                seed=args.chaos_seed, nan_rate=args.chaos_nan_rate,
+                drop_rate=args.chaos_drop_rate,
+                hang_rate=args.chaos_hang_rate,
+                nan_at=tuple(args.chaos_nan_at),
+                drop_at=tuple(args.chaos_drop_at),
+                hang_at=tuple(args.chaos_hang_at),
+            )
+            # Fault-free reference for the isolation invariant: every
+            # request's stream under chaos must match this bit-for-bit.
+            baseline = engine.serve(
+                reqs, slots=args.slots, temperature=args.temperature,
+                top_k=args.top_k, eos_id=args.eos_id, seed=args.seed)
         t0 = time.perf_counter()
         outs = engine.serve(reqs, slots=args.slots,
                             temperature=args.temperature, top_k=args.top_k,
-                            eos_id=args.eos_id, seed=args.seed)
+                            eos_id=args.eos_id, seed=args.seed,
+                            deadline_ms=args.deadline_ms,
+                            max_queue=args.max_queue,
+                            watchdog_timeout_s=args.watchdog_timeout,
+                            snapshot_every=args.snapshot_every,
+                            snapshot_dir=args.snapshot_dir,
+                            restore_from=args.restore_from, chaos=chaos)
         dt = time.perf_counter() - t0
         emitted = sum(o.size for o in outs)
         st = engine.last_serve_stats
@@ -95,9 +156,39 @@ def main():
               f"({emitted/dt:.1f} tok/s; {st['decode_dispatches']} decode "
               f"dispatches, {st['admissions']} admissions, "
               f"{st['slot_steps']} slot-steps at K={args.decode_window})")
+        counts: dict[str, int] = {}
+        for o in outs:
+            counts[o.outcome] = counts.get(o.outcome, 0) + 1
+        print("outcomes:", " ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())))
         lens = [int(o.size) for o in outs]
         print(f"per-request emitted lengths: {lens}")
         print("first request tokens:", outs[0].tolist())
+        if chaos is not None:
+            faults = sum(chaos.counters.values())
+            print(f"chaos drill: {faults} injected faults "
+                  f"{dict(chaos.counters)}; quarantines="
+                  f"{st['quarantines']} recoveries={st['recoveries']} "
+                  f"retries={st['dispatch_retries']} "
+                  f"watchdog_timeouts={st['watchdog_timeouts']}")
+            if faults == 0:
+                raise SystemExit("chaos drill injected no faults — "
+                                 "pin some with --chaos-nan-at etc.")
+            if chaos.counters["nan"] and not st["recoveries"]:
+                raise SystemExit("chaos drill: NaN faults injected but "
+                                 "none recovered")
+            bad = [r for r in outs
+                   if r.outcome not in ("ok", "eos", "recovered")]
+            if bad:
+                raise SystemExit(
+                    f"chaos drill: unrecovered outcomes {bad}")
+            for i, (want, got) in enumerate(zip(baseline, outs)):
+                if not np.array_equal(np.asarray(want), np.asarray(got)):
+                    raise SystemExit(
+                        f"chaos drill: request {i} diverged from the "
+                        "fault-free run — isolation invariant broken")
+            print("chaos drill: all faults recovered; every stream "
+                  "bit-identical to the fault-free run")
         return
 
     prompts = jnp.asarray(

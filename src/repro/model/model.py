@@ -225,6 +225,49 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
     )
 
 
+def decode_state_finite(state) -> jax.Array:
+    """(B,) bool — per-slot finiteness of the recurrent decode state.
+
+    Reduces ``isfinite`` over every :class:`RecState` leaf (WKV S, RG-LRU
+    h, conv tails) per batch row — the fault-detection flag a serving
+    window folds into its jitted scan: a slot whose recurrent state went
+    non-finite is quarantined *inside* the jit (no extra dispatch, no
+    host sync per token).  KV caches are deliberately not scanned — a
+    NaN KV row poisons that slot's logits the same step it is attended,
+    so the caller's logits-finiteness check covers attention state at
+    O(V) instead of O(max_len·H·Dh) per step.
+
+    Attention-only states (no recurrent layers) return all-True: slot
+    health is then carried entirely by the logits check.
+    """
+    flags = []
+    batch = None
+
+    def visit(node):
+        nonlocal batch
+        if isinstance(node, KVCache):
+            if batch is None:
+                batch = node.length.shape[-1]
+            return
+        if not isinstance(node, RecState):
+            raise TypeError(type(node))
+        # Leaves are (B, ...) or stacked (L, B, ...): the conv tail's rank
+        # relative to its unstacked 3 gives the stacked prefix length,
+        # hence the batch axis, for both leaves.
+        stacked = node.conv.ndim - 3
+        if batch is None:
+            batch = node.conv.shape[stacked]
+        for leaf in (node.h, node.conv):
+            axes = tuple(a for a in range(leaf.ndim) if a != stacked)
+            flags.append(jnp.all(jnp.isfinite(leaf), axis=axes))
+
+    jax.tree.map(visit, state,
+                 is_leaf=lambda x: isinstance(x, (KVCache, RecState)))
+    if not flags:
+        return jnp.ones((batch,), bool)
+    return functools.reduce(jnp.logical_and, flags)
+
+
 # --------------------------------------------------------------------------
 # Decode step
 # --------------------------------------------------------------------------

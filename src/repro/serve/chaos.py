@@ -1,0 +1,207 @@
+"""Chaos injection for the serve engine: seed-deterministic fault drills.
+
+Fault isolation is only as real as its drills.  This module injects the
+four failure modes the engine's recovery paths handle, all driven by one
+seeded RNG so every drill is reproducible bit-for-bit:
+
+  * **NaN-in-state** — poison one active slot's device state between
+    decode windows (a RecState ``h`` row, or a KV cache row for
+    attention-only archs).  Exercises in-window quarantine + host-side
+    re-prefill recovery.
+  * **dispatch exception** — raise :class:`DispatchDropped` *before* the
+    jitted call consumes its (donated) arguments.  Exercises
+    retry-with-backoff; pre-consumption is what makes the retry safe.
+  * **hang** — spin inside the dispatch until the engine's
+    :class:`~repro.ft.watchdog.StepWatchdog` fences the step off
+    (``cancelled()`` flips), then abort *without* invoking the jit — the
+    cooperative-cancel contract that keeps donated buffers valid for the
+    retry.  Exercises watchdog timeout + retry.
+  * **request drop** — an in-flight request vanishes (client gone).
+    Exercises slot freeing with a typed ``dropped`` outcome and
+    neighbor isolation.
+
+``preempt_after`` additionally kills the whole engine loop
+(:class:`EnginePreempted`) after N decode dispatches — the host-
+preemption drill for snapshot/restore.
+
+Injection sites take the *decode-dispatch index* so drills can pin
+faults to exact points (``nan_at=(2,)``) instead of relying on rates;
+rates (``nan_rate`` etc.) drive the bench / smoke lanes.  Every
+injection is appended to :attr:`ChaosInjector.events` as
+``(kind, dispatch_index, detail)`` and tallied in ``counters``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.model.attention import KVCache
+from repro.model.recurrent import RecState
+
+
+class DispatchDropped(RuntimeError):
+    """Injected dispatch failure (raised before the jit consumed args)."""
+
+
+class EnginePreempted(RuntimeError):
+    """Injected host preemption: the serve loop dies mid-run."""
+
+
+def poison_slot_state(state, slot: int):
+    """Return ``state`` with ``slot``'s row made non-finite.
+
+    Prefers recurrent leaves (the WKV (Dh, Dh) S / RG-LRU h — the
+    paper-side loop-carried values); attention-only states get a NaN KV
+    row at position 0 instead, which every later query of that slot
+    attends to (global attention) or which the positional masks zero out
+    only with exact-0 weights that still propagate NaN.  Neighbors'
+    rows are untouched — the blast radius the engine must then prove is
+    one slot.
+    """
+    has_rec = any(
+        isinstance(n, RecState)
+        for n in _nodes(state)
+    )
+
+    def fix(node):
+        if isinstance(node, RecState):
+            stacked = node.conv.ndim - 3
+            idx = (slice(None),) * stacked + (slot,)
+            return RecState(h=node.h.at[idx].set(jnp.nan), conv=node.conv)
+        if isinstance(node, KVCache) and not has_rec:
+            stacked = node.k.ndim - 4
+            idx = (slice(None),) * stacked + (slot, slice(None), 0)
+            return KVCache(k=node.k.at[idx].set(jnp.nan), v=node.v,
+                           length=node.length)
+        return node
+
+    import jax
+
+    return jax.tree.map(
+        fix, state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+    )
+
+
+def _nodes(state):
+    import jax
+
+    return jax.tree.leaves(
+        state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+    )
+
+
+@dataclasses.dataclass
+class ChaosInjector:
+    """Pluggable fault source for :meth:`ServeEngine.serve`.
+
+    Rates are per-opportunity probabilities (one draw per decode window
+    for ``nan_rate`` / ``req_drop_rate``, one per dispatch attempt for
+    ``drop_rate`` / ``hang_rate``); ``*_at`` pin injections to exact
+    decode-dispatch indices for deterministic drills.  All draws come
+    from one ``numpy`` RNG seeded with ``seed`` — a fixed seed replays
+    the identical fault schedule.
+    """
+
+    seed: int = 0
+    nan_rate: float = 0.0
+    drop_rate: float = 0.0
+    hang_rate: float = 0.0
+    req_drop_rate: float = 0.0
+    nan_at: tuple = ()
+    drop_at: tuple = ()
+    hang_at: tuple = ()
+    req_drop_at: tuple = ()
+    preempt_after: int | None = None
+    hang_poll_s: float = 0.005
+    # Safety valve: an un-watched hang (no watchdog) ends here and turns
+    # into a retried DispatchDropped instead of wedging the host loop.
+    max_hang_s: float = 2.0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.events: list[tuple[str, int, Any]] = []
+        self.counters = {
+            "nan": 0, "drop": 0, "hang": 0, "req_drop": 0, "preempt": 0,
+        }
+        self._fired: set[tuple[str, int]] = set()
+
+    def _hit(self, name: str, index: int, rate: float) -> bool:
+        """One draw per opportunity; pinned ``*_at`` indices fire exactly
+        once (a retried dispatch keeps its index — without the once-only
+        guard a pinned hang would re-trigger on every retry, forever)."""
+        pinned = getattr(self, name + "_at")
+        if index in pinned and (name, index) not in self._fired:
+            self._fired.add((name, index))
+            return True
+        return self._rng.random() < rate
+
+    # -- dispatch-path faults (run inside the watchdog thread) ----------
+
+    def before_dispatch(self, kind: str, index: int,
+                        cancelled: Callable[[], bool] | None = None):
+        """Called inside the dispatch wrapper, before the jit is invoked.
+
+        May raise :class:`DispatchDropped` (drop) or hang until the
+        watchdog ``cancelled`` fence flips (hang).  Either way the jitted
+        function — and with it the donated state — is never touched, so
+        the engine's retry re-runs from valid buffers.
+        """
+        if kind != "window":
+            return
+        if self._hit("drop", index, self.drop_rate):
+            self.counters["drop"] += 1
+            self.events.append(("drop", index, None))
+            raise DispatchDropped(f"injected dispatch drop at {index}")
+        if self._hit("hang", index, self.hang_rate):
+            self.counters["hang"] += 1
+            self.events.append(("hang", index, None))
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < self.max_hang_s:
+                if cancelled is not None and cancelled():
+                    # Watchdog fenced us off: abort without touching the
+                    # donated state; our raise is discarded by the fence.
+                    raise DispatchDropped(
+                        f"injected hang at {index} (watchdog cancelled)"
+                    )
+                time.sleep(self.hang_poll_s)
+            raise DispatchDropped(f"injected hang at {index} (unwatched)")
+
+    # -- state / request faults (host side, between windows) ------------
+
+    def maybe_poison(self, state, active: np.ndarray, index: int,
+                     slot_req: list[int]):
+        """Possibly NaN-poison one active slot.  Returns (state, slot|None)."""
+        if not active.any():
+            return state, None
+        if self._hit("nan", index, self.nan_rate):
+            slot = int(self._rng.choice(np.nonzero(active)[0]))
+            self.counters["nan"] += 1
+            self.events.append(("nan", index, slot_req[slot]))
+            return poison_slot_state(state, slot), slot
+        return state, None
+
+    def maybe_drop_request(self, active: np.ndarray, index: int,
+                           slot_req: list[int]):
+        """Possibly drop one in-flight request.  Returns slot|None."""
+        if not active.any():
+            return None
+        if self._hit("req_drop", index, self.req_drop_rate):
+            slot = int(self._rng.choice(np.nonzero(active)[0]))
+            self.counters["req_drop"] += 1
+            self.events.append(("req_drop", index, slot_req[slot]))
+            return slot
+        return None
+
+    def check_preempt(self, decode_dispatches: int):
+        if (self.preempt_after is not None
+                and decode_dispatches >= self.preempt_after):
+            self.counters["preempt"] += 1
+            self.events.append(("preempt", decode_dispatches, None))
+            raise EnginePreempted(
+                f"injected preemption after {decode_dispatches} dispatches"
+            )

@@ -25,12 +25,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.watchdog import StepTimeout, StepWatchdog, StragglerDetector
 from repro.model import model as M
 from repro.model.attention import KVCache
 from repro.model.recurrent import RecState
@@ -209,10 +211,69 @@ def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
 
 @dataclasses.dataclass
 class Request:
-    """One serve request: a prompt and a per-request generation budget."""
+    """One serve request: a prompt, a generation budget, and an optional
+    wall-clock deadline (milliseconds from serve start; ``None`` falls
+    back to the serve-level default, which may itself be ``None`` = no
+    deadline)."""
 
     tokens: Any                    # (P,) int prompt token ids
     max_new_tokens: int = 16
+    deadline_ms: float | None = None
+
+
+#: Terminal per-request outcomes (see :class:`RequestResult`):
+#:   ok        — completed by exhausting its token budget
+#:   eos       — completed by sampling ``eos_id``
+#:   deadline  — killed at its wall-clock deadline (tokens are partial)
+#:   shed      — rejected at admission: the bounded queue was full
+#:   dropped   — chaos/client drop mid-flight (tokens are partial)
+#:   recovered — completed (budget or EOS) after >= 1 quarantine+re-prefill
+OUTCOMES = ("ok", "eos", "deadline", "shed", "dropped", "recovered")
+
+#: ``last_serve_stats`` keys, in the (fixed) order they are packed into
+#: the snapshot stats vector — append only, never reorder.
+SERVE_STAT_KEYS = (
+    "decode_dispatches", "admissions", "slot_steps", "quarantines",
+    "recoveries", "dispatch_retries", "dispatch_drops",
+    "watchdog_timeouts", "stragglers", "deadline_hits", "shed",
+    "req_drops", "snapshots",
+)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One served request's tokens plus its typed outcome.
+
+    Array-like (``__array__`` / ``len`` / indexing / ``.size`` /
+    ``.tolist``) so result lists drop into code written against the bare
+    token-array contract; ``outcome`` and ``recoveries`` carry the
+    fault-isolation story (how the request ended, and how many
+    quarantine+re-prefill cycles it survived on the way).
+    """
+
+    tokens: np.ndarray
+    outcome: str = "ok"
+    recoveries: int = 0
+
+    def __array__(self, dtype=None, copy=None):
+        a = self.tokens if dtype is None else self.tokens.astype(dtype)
+        return a.copy() if copy else a
+
+    def __len__(self):
+        return int(self.tokens.size)
+
+    def __iter__(self):
+        return iter(self.tokens)
+
+    def __getitem__(self, i):
+        return self.tokens[i]
+
+    @property
+    def size(self) -> int:
+        return int(self.tokens.size)
+
+    def tolist(self):
+        return self.tokens.tolist()
 
 
 def _bucket32(length: int) -> int:
@@ -227,19 +288,31 @@ def _reset_slot_rows(state, rows: jax.Array):
     and only those: neighbors' caches are untouched (a ``jnp.where`` per
     leaf along the batch axis, no reallocation, donation-friendly).
 
-    Per-request cache lengths and recurrent states reset to zero; the KV
-    cache *contents* are left in place — with length 0 no stale slot is
+    Per-request cache lengths and recurrent states reset to zero; *finite*
+    KV cache contents are left in place — with length 0 no stale slot is
     reachable (the positional masks in ``_decode_attention`` only admit
     slots whose absolute position is below the slot's own query
     positions, and those get overwritten by the new prompt's insert).
+    Non-finite KV entries in the reset rows are scrubbed to zero: a
+    masked slot contributes ``weight 0 × value``, which is exactly 0 for
+    finite stale values but NaN for a poisoned row — masking hides stale
+    data, it does not disarm NaNs, so quarantine recovery must scrub
+    them (a no-op rewrite for healthy rows, bit-identical fault-free).
     """
 
     def fix(node):
         if isinstance(node, KVCache):
             extra = node.k.ndim - 4              # stacked (L, B, ...) or not
             m = rows.reshape((1,) * extra + (-1,))
+            mk = rows.reshape((1,) * extra + (-1, 1, 1, 1))
+
+            def scrub(a):
+                return jnp.where(
+                    mk & ~jnp.isfinite(a), jnp.zeros((), a.dtype), a
+                )
+
             return KVCache(
-                k=node.k, v=node.v,
+                k=scrub(node.k), v=scrub(node.v),
                 length=jnp.where(m, 0, node.length),
             )
         if isinstance(node, RecState):
@@ -381,7 +454,12 @@ class ServeEngine:
         runs the whole (B, P) batch with a token mask that is all-False
         outside the admitted rows — so every other slot's KV cache,
         recurrent state, and length are bit-identical afterwards.  Also
-        samples each admitted request's first token (token index 0).
+        samples each admitted slot's next token at its ``tok_idx``:
+        0 for a fresh request (its first token), n for a quarantine
+        recovery whose "prompt" is the original prompt plus the n
+        already-accepted tokens — the ``fold_in(req_id, token_idx)``
+        sampling keys then guarantee the resumed stream is the one the
+        fault interrupted.
 
         With an engine ``mesh`` the admission prefill runs under the same
         sharding rules :func:`make_cache_prefill_step` would pick for a
@@ -393,8 +471,9 @@ class ServeEngine:
         if fn is None:
             cfg, max_len = self.cfg, self.max_len
 
-            def admit(params, state, tokens, admit_row, plen, lengths,
-                      counts, budgets, req_ids, active, cur, base_key):
+            def admit(params, state, tokens, admit_row, plen, tok_idx,
+                      lengths, counts, budgets, req_ids, active, cur,
+                      base_key):
                 state = _reset_slot_rows(state, admit_row)
                 mask = admit_row[:, None] & (
                     jnp.arange(p, dtype=jnp.int32)[None, :] < plen[:, None]
@@ -404,11 +483,11 @@ class ServeEngine:
                     token_mask=mask, last_only=True, max_len=max_len,
                 )
                 tok0 = _sample_tokens(
-                    logits[:, -1], base_key, req_ids,
-                    jnp.zeros_like(counts), temperature, top_k,
+                    logits[:, -1], base_key, req_ids, tok_idx,
+                    temperature, top_k,
                 )
                 lengths = jnp.where(admit_row, plen, lengths)
-                counts = jnp.where(admit_row, 1, counts)
+                counts = jnp.where(admit_row, tok_idx + 1, counts)
                 done = counts >= budgets
                 if eos_id is not None:
                     done |= tok0 == eos_id
@@ -445,7 +524,21 @@ class ServeEngine:
         next token is sampled in-window (temperature / top-k with the
         per-request PRNG key), and EOS / budget exhaustion flips the
         slot's ``active`` bit *inside the jit* — the host only sees the
-        window-level result.  Emits (tokens (k, B), emit-mask (k, B)).
+        window-level result.
+
+        Fault detection rides the same scan at zero extra dispatches: a
+        per-slot finiteness flag (``isfinite`` reduced over the recurrent
+        states — :func:`repro.model.model.decode_state_finite` — plus the
+        slot's own logits row, which covers NaN KV rows the moment they
+        are attended) *quarantines* a poisoned slot inside the jit: its
+        ``active`` bit flips off, so the very next step's ``token_mask``
+        freezes its state via the existing dead-slot machinery, its
+        garbage token is never emitted, and — because every per-slot
+        update is a ``jnp.where`` along batch — its neighbors' streams
+        stay bit-identical.  The quarantine mask (B,) comes back to the
+        host, which re-prefills the victim from its accepted prefix.
+
+        Emits (tokens (k, B), emit-mask (k, B), quarantined (B,)).
         """
         key = (k, temperature, top_k, eos_id)
         fn = self._serve_windows.get(key)
@@ -454,16 +547,24 @@ class ServeEngine:
 
             def win(params, state, cur, lengths, counts, budgets, active,
                     req_ids, base_key):
+                quar0 = jnp.zeros_like(active)
+
                 def body(carry, _):
-                    state, cur, lengths, counts, active = carry
+                    state, cur, lengths, counts, active, quar = carry
                     logits, state = M.decode_step(
                         params, cfg, state, cur, lengths,
                         token_mask=active[:, None], last_only=True,
                         max_len=max_len,
                     )
+                    lg = logits[:, -1]
+                    finite = M.decode_state_finite(state) & jnp.all(
+                        jnp.isfinite(lg.astype(jnp.float32)), axis=-1
+                    )
+                    bad = active & ~finite
+                    quar = quar | bad
+                    active = active & ~bad
                     nxt = _sample_tokens(
-                        logits[:, -1], base_key, req_ids, counts,
-                        temperature, top_k,
+                        lg, base_key, req_ids, counts, temperature, top_k,
                     )
                     emit = active
                     lengths = lengths + emit.astype(jnp.int32)
@@ -473,24 +574,86 @@ class ServeEngine:
                         done |= nxt == eos_id
                     active = active & ~done
                     cur = jnp.where(emit[:, None], nxt[:, None], cur)
-                    return (state, cur, lengths, counts, active), (nxt, emit)
+                    return (
+                        (state, cur, lengths, counts, active, quar),
+                        (nxt, emit),
+                    )
 
-                (state, cur, lengths, counts, active), (toks, emits) = (
+                (state, cur, lengths, counts, active, quar), (toks, emits) = (
                     jax.lax.scan(
-                        body, (state, cur, lengths, counts, active), None,
+                        body,
+                        (state, cur, lengths, counts, active, quar0), None,
                         length=k,
                     )
                 )
-                return state, cur, lengths, counts, active, toks, emits
+                return state, cur, lengths, counts, active, quar, toks, emits
 
             fn = jax.jit(win, donate_argnums=(1,))
             self._serve_windows[key] = fn
         return fn
 
+    def _dispatch(self, kind, fn, args, *, chaos, watchdog, straggler,
+                  stats, max_retries, backoff_s, index):
+        """One dispatch through the fault plumbing: chaos injection runs
+        first, inside the watchdog thread, *before* the jitted ``fn``
+        consumes its donated arguments — which is exactly what makes the
+        retry safe: an injected drop raises pre-consumption, and an
+        injected hang aborts cooperatively at the watchdog's generation
+        fence without ever touching the buffers.  (A *real* device hang
+        that dies inside the jit leaves donated buffers unusable; that is
+        the snapshot/restore path's job, not the retry's.)  Retries back
+        off exponentially from ``backoff_s``.
+        """
+
+        def call():
+            if chaos is not None:
+                chaos.before_dispatch(
+                    kind, index,
+                    cancelled=(watchdog.cancelled if watchdog is not None
+                               else None),
+                )
+            return fn(*args)
+
+        attempt = 0
+        while True:
+            try:
+                t0 = time.monotonic()
+                out = watchdog.run(call) if watchdog is not None else call()
+                if straggler is not None and kind == "window":
+                    if straggler.observe(time.monotonic() - t0):
+                        stats["stragglers"] += 1
+                return out
+            except StepTimeout:
+                stats["watchdog_timeouts"] += 1
+            except Exception as e:  # noqa: BLE001 — filtered below
+                from repro.serve.chaos import DispatchDropped
+
+                if not isinstance(e, DispatchDropped):
+                    raise
+                stats["dispatch_drops"] += 1
+            attempt += 1
+            stats["dispatch_retries"] += 1
+            if attempt > max_retries:
+                raise RuntimeError(
+                    f"{kind} dispatch failed after {max_retries} retries"
+                )
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
     def serve(self, requests, *, slots: int = 4, temperature: float = 0.0,
-              top_k: int = 0, eos_id: int | None = None, seed: int = 0):
+              top_k: int = 0, eos_id: int | None = None, seed: int = 0,
+              deadline_ms: float | None = None,
+              max_queue: int | None = None,
+              watchdog_timeout_s: float | None = None,
+              max_dispatch_retries: int = 3,
+              retry_backoff_s: float = 0.02,
+              snapshot_every: int = 0,
+              snapshot_dir: str | None = None,
+              restore_from: str | None = None,
+              chaos: Any = None,
+              recoverable: bool | None = None):
         """Continuous-batching scheduler: decode ``requests`` through a
-        fixed pool of ``slots`` batch slots with per-request progress.
+        fixed pool of ``slots`` batch slots with per-request progress —
+        and with the blast radius of any failure confined to one slot.
 
         Each request (a :class:`Request`, or anything with ``tokens`` /
         ``max_new_tokens``) is admitted into a free slot (a single masked
@@ -502,15 +665,55 @@ class ServeEngine:
         pays).  Freed slots are recycled to the next queued request in
         arrival order.
 
+        Fault isolation (the paper's point-to-point argument as a
+        robustness property — a fault delays one slot's hand-off, never
+        a batch-global barrier):
+
+        * a slot whose state or logits go non-finite is **quarantined**
+          inside the jitted window (see :meth:`_serve_window`) and
+          **recovered** by re-admitting the request from its accepted
+          prefix (prompt + tokens emitted so far) — the read-side dual of
+          :func:`_reset_slot_rows`; with the per-(request, token-index)
+          sampling keys the resumed stream is exactly the one the fault
+          interrupted, and every other slot is bit-identical to a
+          fault-free run;
+        * ``deadline_ms`` (serve-wide default; ``Request.deadline_ms``
+          overrides) kills requests past their wall-clock budget with a
+          typed ``deadline`` outcome instead of letting them squat slots;
+        * ``max_queue`` bounds the admission backlog: beyond ``slots``
+          immediately-admissible requests, at most ``max_queue`` may
+          wait; later arrivals are **shed** (typed outcome, no tokens)
+          instead of queueing unboundedly;
+        * failed / hung dispatches are retried with exponential backoff
+          (``max_dispatch_retries``, ``retry_backoff_s``), a hang being
+          detected by a per-dispatch
+          :class:`~repro.ft.watchdog.StepWatchdog` when
+          ``watchdog_timeout_s`` is set (straggler dispatches are
+          EWMA-flagged in ``last_serve_stats['stragglers']``);
+        * ``snapshot_every`` > 0 checkpoints the whole engine — slot
+          table, queues, per-request progress, device state — to
+          ``snapshot_dir`` every N decode dispatches
+          (:mod:`repro.checkpoint.checkpoint`); ``restore_from`` resumes
+          a preempted serve bit-identically (same requests/args/seed).
+
+        ``chaos`` accepts a :class:`repro.serve.chaos.ChaosInjector` to
+        drill all of the above deterministically.  ``recoverable`` sizes
+        the local-attention rings for worst-case recovery re-prefills
+        (prompt + whole budget); it defaults on when chaos / snapshots /
+        restore are in play and off otherwise, where the ring sizing —
+        and hence fault-free streams — match the pre-fault-isolation
+        engine exactly.
+
         Sampling: greedy at ``temperature`` 0 (the parity-testable mode),
         else temperature / top-k categorical, keyed per (request, token
         index) — a request's stream is reproducible under a fixed
-        ``seed`` regardless of ``decode_window``, slot assignment, or
-        batch composition.
+        ``seed`` regardless of ``decode_window``, slot assignment, batch
+        composition, or how many faults it survived.
 
-        Returns a list of per-request generated-token arrays (prompt not
-        included; an EOS, if sampled, is the last element).  Stats land
-        in ``last_serve_stats``.
+        Returns a list of :class:`RequestResult` (array-like: the
+        generated tokens, prompt not included) with typed ``outcome``
+        (ok / eos / deadline / shed / dropped / recovered) and the
+        per-request recovery count.  Stats land in ``last_serve_stats``.
         """
         reqs = [
             r if hasattr(r, "tokens") else Request(tokens=r)
@@ -518,9 +721,7 @@ class ServeEngine:
         ]
         n = len(reqs)
         if n == 0:
-            self.last_serve_stats = {
-                "decode_dispatches": 0, "admissions": 0, "slot_steps": 0,
-            }
+            self.last_serve_stats = {k: 0 for k in SERVE_STAT_KEYS}
             return []
         b = max(1, min(int(slots), n))
         k_w = max(1, int(self.decode_window))
@@ -535,9 +736,23 @@ class ServeEngine:
                     f"request needs {pl} + {r.max_new_tokens} positions, "
                     f"engine max_len={self.max_len}"
                 )
+        if recoverable is None:
+            recoverable = (chaos is not None or restore_from is not None
+                           or snapshot_every > 0)
+        # Recovery re-prefills replay prompt + accepted tokens in one
+        # window: size the local-attention ring slack for the worst case
+        # (a request quarantined on its last token) when recovery is in
+        # play.  Off the recovery paths, keep the original sizing — ring
+        # shapes feed attention reductions, so changing them for free
+        # would perturb fault-free bit-parity with older baselines.
+        worst = (
+            max(pl + int(r.max_new_tokens) for pl, r in zip(p_lens, reqs))
+            if recoverable else max(p_lens)
+        )
+        insert_window = max(k_w, _bucket32(worst))
         state = M.init_decode_state(
             self.cfg, batch=b, max_len=self.max_len,
-            insert_window=max(k_w, _bucket32(max(p_lens))),
+            insert_window=insert_window,
         )
         lengths = jnp.zeros((b,), jnp.int32)
         counts = jnp.zeros((b,), jnp.int32)
@@ -548,60 +763,327 @@ class ServeEngine:
         base_key = jax.random.PRNGKey(seed)
 
         pending = collections.deque(range(n))
+        recover_q: collections.deque[int] = collections.deque()
         outputs: list[list[int]] = [[] for _ in range(n)]
+        outcomes: list[str | None] = [None] * n
+        recoveries = [0] * n
         slot_req = [-1] * b
-        stats = {"decode_dispatches": 0, "admissions": 0, "slot_steps": 0}
+        stats = {k: 0 for k in SERVE_STAT_KEYS}
         active_np = np.zeros(b, bool)
 
-        while pending or active_np.any():
-            free = [i for i in range(b) if not active_np[i]]
-            if pending and free:
-                take = [pending.popleft()
-                        for _ in range(min(len(free), len(pending)))]
-                p_b = _bucket32(max(p_lens[ri] for ri in take))
-                tok_np = np.zeros((b, p_b), np.int32)
-                admit_np = np.zeros(b, bool)
-                plen_np = np.zeros(b, np.int32)
-                bud_np = np.array(budgets)
-                rid_np = np.array(req_ids)
-                for slot, ri in zip(free, take):
-                    t_arr = np.asarray(reqs[ri].tokens, np.int32).reshape(-1)
-                    tok_np[slot, : t_arr.size] = t_arr
-                    admit_np[slot] = True
-                    plen_np[slot] = t_arr.size
-                    bud_np[slot] = int(reqs[ri].max_new_tokens)
-                    rid_np[slot] = ri
-                    slot_req[slot] = ri
-                budgets = jnp.asarray(bud_np)
-                req_ids = jnp.asarray(rid_np)
-                fn = self._admit_step(p_b, temperature, top_k, eos_id)
-                state, lengths, counts, active, cur, tok0 = fn(
-                    self.params, state, jnp.asarray(tok_np),
-                    jnp.asarray(admit_np), jnp.asarray(plen_np), lengths,
-                    counts, budgets, req_ids, active, cur, base_key,
-                )
-                tok0_np = np.asarray(tok0)
-                active_np = np.asarray(active)
-                for slot, ri in zip(free, take):
-                    outputs[ri].append(int(tok0_np[slot]))
-                stats["admissions"] += 1
-            if active_np.any():
-                fn = self._serve_window(k_w, temperature, top_k, eos_id)
-                state, cur, lengths, counts, active, toks, emits = fn(
-                    self.params, state, cur, lengths, counts, budgets,
-                    active, req_ids, base_key,
-                )
-                toks_np = np.asarray(toks)
-                emits_np = np.asarray(emits)
-                for step in range(k_w):
-                    for slot in np.nonzero(emits_np[step])[0]:
-                        outputs[slot_req[slot]].append(
-                            int(toks_np[step, slot]))
-                active_np = np.asarray(active)
-                stats["decode_dispatches"] += 1
-                stats["slot_steps"] += k_w * b
-        self.last_serve_stats = stats
-        return [np.asarray(o, np.int32) for o in outputs]
+        watchdog = (StepWatchdog(watchdog_timeout_s)
+                    if watchdog_timeout_s is not None else None)
+        straggler = StragglerDetector(warmup=1)
+        t_start = time.monotonic()
+        any_deadline = (deadline_ms is not None
+                        or any(getattr(r, "deadline_ms", None) is not None
+                               for r in reqs))
+
+        def req_deadline(ri):
+            d = getattr(reqs[ri], "deadline_ms", None)
+            return deadline_ms if d is None else d
+
+        def resolve(ri):
+            if recoveries[ri] > 0:
+                outcomes[ri] = "recovered"
+            elif (eos_id is not None and outputs[ri]
+                    and outputs[ri][-1] == eos_id):
+                outcomes[ri] = "eos"
+            else:
+                outcomes[ri] = "ok"
+
+        if restore_from is not None:
+            (state, cur, lengths, counts, budgets, req_ids, active,
+             slot_req, pending, recover_q, outputs, outcomes, recoveries,
+             stats) = self._restore_serve(
+                restore_from, b, k_w, insert_window, n, seed, state)
+            active_np = np.array(active)
+        elif max_queue is not None:
+            # Bounded admission queue: b requests admit immediately, at
+            # most max_queue wait; shed the later arrivals (typed
+            # outcome), never queue unboundedly.
+            cap = b + max(0, int(max_queue))
+            while len(pending) > cap:
+                ri = pending.pop()
+                outcomes[ri] = "shed"
+                stats["shed"] += 1
+
+        def snapshot_now():
+            self._snapshot_serve(
+                snapshot_dir, stats, state, cur, lengths, counts, budgets,
+                req_ids, active, slot_req, pending, recover_q, outputs,
+                outcomes, recoveries, b, k_w, insert_window, n, seed)
+            stats["snapshots"] += 1
+
+        try:
+            while pending or recover_q or active_np.any():
+                # ---- deadlines: in-flight and queued ------------------
+                if any_deadline:
+                    now_ms = (time.monotonic() - t_start) * 1e3
+                    killed = False
+                    for slot in np.nonzero(active_np)[0]:
+                        ri = slot_req[slot]
+                        dl = req_deadline(ri)
+                        if dl is not None and now_ms > dl:
+                            outcomes[ri] = "deadline"
+                            stats["deadline_hits"] += 1
+                            active_np[slot] = False
+                            slot_req[slot] = -1
+                            killed = True
+                    if killed:
+                        active = jnp.asarray(active_np)
+                    for q in (recover_q, pending):
+                        for _ in range(len(q)):
+                            ri = q.popleft()
+                            dl = req_deadline(ri)
+                            if dl is not None and now_ms > dl:
+                                outcomes[ri] = "deadline"
+                                stats["deadline_hits"] += 1
+                            else:
+                                q.append(ri)
+
+                # ---- admission: recoveries first, then fresh ----------
+                free = [i for i in range(b) if not active_np[i]]
+                take: list[int] = []
+                while len(take) < len(free) and (recover_q or pending):
+                    take.append(recover_q.popleft() if recover_q
+                                else pending.popleft())
+                if take:
+                    # A recovery's "prompt" is the original prompt plus
+                    # its accepted tokens; fresh requests have none.
+                    p_b = _bucket32(
+                        max(p_lens[ri] + len(outputs[ri]) for ri in take))
+                    tok_np = np.zeros((b, p_b), np.int32)
+                    admit_np = np.zeros(b, bool)
+                    plen_np = np.zeros(b, np.int32)
+                    tokidx_np = np.zeros(b, np.int32)
+                    bud_np = np.array(budgets)
+                    rid_np = np.array(req_ids)
+                    used = free[: len(take)]
+                    for slot, ri in zip(used, take):
+                        t_arr = np.concatenate([
+                            np.asarray(reqs[ri].tokens,
+                                       np.int32).reshape(-1),
+                            np.asarray(outputs[ri], np.int32),
+                        ])
+                        tok_np[slot, : t_arr.size] = t_arr
+                        admit_np[slot] = True
+                        plen_np[slot] = t_arr.size
+                        tokidx_np[slot] = len(outputs[ri])
+                        bud_np[slot] = int(reqs[ri].max_new_tokens)
+                        rid_np[slot] = ri
+                        slot_req[slot] = ri
+                    budgets = jnp.asarray(bud_np)
+                    req_ids = jnp.asarray(rid_np)
+                    fn = self._admit_step(p_b, temperature, top_k, eos_id)
+                    state, lengths, counts, active, cur, tok0 = (
+                        self._dispatch(
+                            "admit", fn,
+                            (self.params, state, jnp.asarray(tok_np),
+                             jnp.asarray(admit_np), jnp.asarray(plen_np),
+                             jnp.asarray(tokidx_np), lengths, counts,
+                             budgets, req_ids, active, cur, base_key),
+                            chaos=chaos, watchdog=watchdog,
+                            straggler=straggler, stats=stats,
+                            max_retries=max_dispatch_retries,
+                            backoff_s=retry_backoff_s,
+                            index=stats["decode_dispatches"],
+                        )
+                    )
+                    tok0_np = np.asarray(tok0)
+                    active_np = np.array(active)
+                    for slot, ri in zip(used, take):
+                        outputs[ri].append(int(tok0_np[slot]))
+                        if not active_np[slot]:
+                            # Done at admission (budget 1 / instant EOS).
+                            resolve(ri)
+                            slot_req[slot] = -1
+                    stats["admissions"] += 1
+
+                # ---- decode window ------------------------------------
+                if active_np.any():
+                    if chaos is not None:
+                        state, _ = chaos.maybe_poison(
+                            state, active_np, stats["decode_dispatches"],
+                            slot_req)
+                    fn = self._serve_window(k_w, temperature, top_k, eos_id)
+                    (state, cur, lengths, counts, active, quar, toks,
+                     emits) = self._dispatch(
+                        "window", fn,
+                        (self.params, state, cur, lengths, counts, budgets,
+                         active, req_ids, base_key),
+                        chaos=chaos, watchdog=watchdog, straggler=straggler,
+                        stats=stats, max_retries=max_dispatch_retries,
+                        backoff_s=retry_backoff_s,
+                        index=stats["decode_dispatches"],
+                    )
+                    toks_np = np.asarray(toks)
+                    emits_np = np.asarray(emits)
+                    for step in range(k_w):
+                        for slot in np.nonzero(emits_np[step])[0]:
+                            outputs[slot_req[slot]].append(
+                                int(toks_np[step, slot]))
+                    prev_active = active_np
+                    active_np = np.array(active)
+                    quar_np = np.asarray(quar)
+                    stats["decode_dispatches"] += 1
+                    stats["slot_steps"] += k_w * b
+                    # Quarantined slots: queue the victim for re-prefill
+                    # recovery from its accepted prefix.
+                    for slot in np.nonzero(quar_np)[0]:
+                        ri = slot_req[slot]
+                        stats["quarantines"] += 1
+                        stats["recoveries"] += 1
+                        recoveries[ri] += 1
+                        recover_q.append(ri)
+                        slot_req[slot] = -1
+                    # Completions: active before, inactive after, and not
+                    # quarantined.
+                    for slot in np.nonzero(
+                            prev_active & ~active_np & ~quar_np)[0]:
+                        ri = slot_req[slot]
+                        if ri >= 0:
+                            resolve(ri)
+                            slot_req[slot] = -1
+                    if chaos is not None:
+                        slot = chaos.maybe_drop_request(
+                            active_np, stats["decode_dispatches"], slot_req)
+                        if slot is not None:
+                            ri = slot_req[slot]
+                            outcomes[ri] = "dropped"
+                            stats["req_drops"] += 1
+                            active_np[slot] = False
+                            slot_req[slot] = -1
+                            active = jnp.asarray(active_np)
+                    if (snapshot_every > 0 and snapshot_dir is not None
+                            and stats["decode_dispatches"]
+                            % snapshot_every == 0):
+                        snapshot_now()
+                    if chaos is not None:
+                        chaos.check_preempt(stats["decode_dispatches"])
+        finally:
+            self.last_serve_stats = stats
+
+        results = []
+        for i in range(n):
+            if outcomes[i] is None:      # defensive: loop exit ⇒ terminal
+                resolve(i)
+            results.append(RequestResult(
+                tokens=np.asarray(outputs[i], np.int32),
+                outcome=outcomes[i], recoveries=recoveries[i],
+            ))
+        return results
+
+    # -- engine snapshot / restore ---------------------------------------
+
+    def _snapshot_serve(self, snapshot_dir, stats, state, cur, lengths,
+                        counts, budgets, req_ids, active, slot_req, pending,
+                        recover_q, outputs, outcomes, recoveries,
+                        b, k_w, insert_window, n, seed):
+        """Checkpoint the whole serve loop as ONE atomic tree: device
+        state + slot table + queues + per-request progress + stats.
+
+        Everything — including the ragged per-request outputs (flattened
+        to ``out_flat`` + ``out_off`` offsets) — goes through one
+        :func:`checkpoint.save`, so a crash mid-snapshot can never leave
+        device state and bookkeeping describing different moments.  The
+        RNG needs no saving: sampling keys are ``fold_in(req_id,
+        token_idx)`` off ``PRNGKey(seed)``, both of which the restore
+        re-derives, which is exactly what makes resumed streams
+        bit-identical.
+        """
+        from repro.checkpoint import checkpoint as C
+
+        out_off = np.zeros(n + 1, np.int64)
+        for i, o in enumerate(outputs):
+            out_off[i + 1] = out_off[i] + len(o)
+        out_flat = np.asarray(
+            [t for o in outputs for t in o], np.int32)
+        codes = np.asarray(
+            [-1 if oc is None else OUTCOMES.index(oc) for oc in outcomes],
+            np.int32)
+        tree = {
+            "device": {
+                "state": state, "cur": cur, "lengths": lengths,
+                "counts": counts, "budgets": budgets, "req_ids": req_ids,
+                "active": active,
+            },
+            "host": {
+                "slot_req": np.asarray(slot_req, np.int32),
+                "pending": np.asarray(list(pending), np.int32),
+                "recover_q": np.asarray(list(recover_q), np.int32),
+                "out_flat": out_flat,
+                "out_off": out_off,
+                "outcome_codes": codes,
+                "recoveries": np.asarray(recoveries, np.int64),
+                "stats": np.asarray(
+                    [stats[k] for k in SERVE_STAT_KEYS], np.int64),
+            },
+            "meta": np.asarray(
+                [b, k_w, insert_window, n, seed], np.int64),
+        }
+        C.save(snapshot_dir, stats["decode_dispatches"], tree)
+
+    def _restore_serve(self, restore_from, b, k_w, insert_window, n, seed,
+                       state_template):
+        """Resume a snapshotted serve.  The caller must pass the same
+        requests / slots / decode_window / seed the snapshot was taken
+        under (validated against the snapshot's meta); device arrays come
+        back through :func:`checkpoint.restore` against a fresh template
+        (restore is template-driven, so the host-side extras in the same
+        file are simply not materialized on device), ragged host arrays
+        are read straight from the snapshot's ``arrays.npz``.
+        """
+        from pathlib import Path
+
+        from repro.checkpoint import checkpoint as C
+
+        step = C.latest_step(restore_from)
+        if step is None:
+            raise FileNotFoundError(f"no serve snapshot under {restore_from}")
+        template = {
+            "device": {
+                "state": state_template,
+                "cur": jnp.zeros((b, 1), jnp.int32),
+                "lengths": jnp.zeros((b,), jnp.int32),
+                "counts": jnp.zeros((b,), jnp.int32),
+                "budgets": jnp.zeros((b,), jnp.int32),
+                "req_ids": jnp.zeros((b,), jnp.int32),
+                "active": jnp.zeros((b,), bool),
+            },
+        }
+        with np.load(Path(restore_from) / f"step_{step}"
+                     / "arrays.npz") as data:
+            meta = data["meta"]
+            host = {k.split("/", 1)[1]: data[k] for k in data.files
+                    if k.startswith("host/")}
+        want = np.asarray([b, k_w, insert_window, n, seed], np.int64)
+        if not np.array_equal(meta, want):
+            raise ValueError(
+                f"snapshot meta {meta.tolist()} does not match this serve "
+                f"call {want.tolist()} — restore needs the same requests, "
+                "slots, decode_window, and seed"
+            )
+        tree, _ = C.restore(restore_from, template, step=step)
+        d = tree["device"]
+        outputs = [
+            [int(t) for t in host["out_flat"]
+             [host["out_off"][i]: host["out_off"][i + 1]]]
+            for i in range(n)
+        ]
+        outcomes = [
+            None if c < 0 else OUTCOMES[c]
+            for c in host["outcome_codes"]
+        ]
+        stats = {k: int(v)
+                 for k, v in zip(SERVE_STAT_KEYS, host["stats"])}
+        return (d["state"], d["cur"], d["lengths"], d["counts"],
+                d["budgets"], d["req_ids"], d["active"],
+                [int(s) for s in host["slot_req"]],
+                collections.deque(int(i) for i in host["pending"]),
+                collections.deque(int(i) for i in host["recover_q"]),
+                outputs, outcomes,
+                [int(r) for r in host["recoveries"]], stats)
 
     def generate(self, prompts: jax.Array, num_new_tokens: int,
                  prompt_lengths=None) -> jax.Array:

@@ -1,0 +1,291 @@
+"""Fault-isolation drills for the serve engine: injected NaN / dropped
+dispatch / hang / request drop / preemption, each asserting the blast
+radius is one slot — every unaffected request's stream bit-identical to a
+fault-free run — plus snapshot/restore resume parity, request-lifecycle
+outcomes (deadline / shed), and unit tests for the watchdog generation
+fence and straggler warmup."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.ft.watchdog import StepTimeout, StepWatchdog, StragglerDetector
+from repro.model import model as M
+from repro.serve.chaos import ChaosInjector, EnginePreempted
+from repro.serve.engine import Request, ServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = ["rwkv6-1.6b", "gemma3-1b", "recurrentgemma-2b"]
+SPEC = [(5, 9), (12, 3), (7, 14), (3, 6), (9, 11)]
+
+
+def _setup(arch, seed=0):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params, np.random.default_rng(seed)
+
+
+def _requests(rng, cfg, spec=SPEC):
+    return [
+        Request(
+            tokens=rng.integers(0, cfg.vocab_size, (pl,)).astype(np.int32),
+            max_new_tokens=nn,
+        )
+        for pl, nn in spec
+    ]
+
+
+def _assert_streams_equal(base, outs):
+    for i, (b, o) in enumerate(zip(base, outs)):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(o),
+            err_msg=f"request {i} diverged from fault-free run")
+
+
+class TestQuarantineRecovery:
+    """NaN-in-state: quarantined in-window, recovered by re-prefill, and
+    — the acceptance bar — every request's greedy stream (including the
+    victim's) bit-identical to the fault-free run."""
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_nan_poison_recovers_bit_identical(self, arch):
+        cfg, params, rng = _setup(arch)
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs, slots=3, seed=0)
+        assert all(r.outcome in ("ok", "eos") for r in base)
+
+        chaos = ChaosInjector(seed=1, nan_at=(2,))
+        outs = eng.serve(reqs, slots=3, seed=0, chaos=chaos)
+        assert chaos.counters["nan"] == 1
+        stats = eng.last_serve_stats
+        assert stats["quarantines"] == 1 and stats["recoveries"] == 1
+        victims = [r for r in outs if r.recoveries > 0]
+        assert len(victims) == 1 and victims[0].outcome == "recovered"
+        _assert_streams_equal(base, outs)
+
+    def test_two_faults_same_request_allowed(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs, slots=3, seed=0)
+        chaos = ChaosInjector(seed=3, nan_at=(1, 3))
+        outs = eng.serve(reqs, slots=3, seed=0, chaos=chaos)
+        assert eng.last_serve_stats["quarantines"] == 2
+        assert sum(r.recoveries for r in outs) == 2
+        _assert_streams_equal(base, outs)
+
+
+class TestDispatchFaults:
+    """Dropped and hung dispatches: retried (hang via the watchdog's
+    cooperative-cancel fence), with zero effect on any token stream —
+    injection fires before the jit consumes its donated buffers."""
+
+    def test_drop_and_hang_retry_bit_identical(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs, slots=3, seed=0)
+
+        chaos = ChaosInjector(seed=1, hang_at=(1,), drop_at=(3,),
+                              hang_poll_s=0.001)
+        outs = eng.serve(reqs, slots=3, seed=0, chaos=chaos,
+                         watchdog_timeout_s=0.3)
+        stats = eng.last_serve_stats
+        assert stats["watchdog_timeouts"] == 1
+        assert stats["dispatch_drops"] == 1
+        assert stats["dispatch_retries"] == 2
+        assert all(r.outcome in ("ok", "eos") for r in outs)
+        _assert_streams_equal(base, outs)
+
+    def test_retry_budget_exhaustion_raises(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg, [(5, 4)])
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        chaos = ChaosInjector(seed=1, drop_rate=1.0)
+        with pytest.raises(RuntimeError, match="after .* retries"):
+            eng.serve(reqs, slots=1, seed=0, chaos=chaos,
+                      max_dispatch_retries=2, retry_backoff_s=0.001)
+        assert eng.last_serve_stats["dispatch_retries"] == 3
+
+
+class TestSnapshotRestore:
+    """Preempt mid-serve, restore from the snapshot, finish with token
+    streams bit-identical to the uninterrupted run — the fold_in(req_id,
+    token_idx) key scheme means no RNG state needs to survive."""
+
+    def test_preempt_restore_bit_identical(self, tmp_path):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs, slots=3, seed=0, temperature=0.8, top_k=5)
+
+        chaos = ChaosInjector(seed=1, preempt_after=2)
+        with pytest.raises(EnginePreempted):
+            eng.serve(reqs, slots=3, seed=0, temperature=0.8, top_k=5,
+                      snapshot_every=1, snapshot_dir=str(tmp_path),
+                      chaos=chaos)
+        interrupted = eng.last_serve_stats
+        assert interrupted["snapshots"] >= 1
+
+        outs = eng.serve(reqs, slots=3, seed=0, temperature=0.8, top_k=5,
+                         restore_from=str(tmp_path))
+        resumed = eng.last_serve_stats
+        # The restored run continues the counters, not restarts them.
+        assert resumed["decode_dispatches"] > interrupted["decode_dispatches"]
+        _assert_streams_equal(base, outs)
+
+    def test_restore_rejects_mismatched_serve(self, tmp_path):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        with pytest.raises(EnginePreempted):
+            eng.serve(reqs, slots=3, seed=0, snapshot_every=1,
+                      snapshot_dir=str(tmp_path),
+                      chaos=ChaosInjector(preempt_after=1))
+        with pytest.raises(ValueError, match="snapshot meta"):
+            eng.serve(reqs, slots=3, seed=7, restore_from=str(tmp_path))
+
+
+class TestRequestLifecycle:
+    """Typed outcomes for the non-fault exits: deadline kills, queue
+    shedding, chaos request drops — none of which may disturb neighbors."""
+
+    def test_deadline_kills_only_the_expired_request(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        reqs[0] = Request(tokens=reqs[0].tokens,
+                          max_new_tokens=reqs[0].max_new_tokens,
+                          deadline_ms=0.0)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        outs = eng.serve(reqs, slots=3, seed=0)
+        assert outs[0].outcome == "deadline"
+        assert eng.last_serve_stats["deadline_hits"] == 1
+        assert all(r.outcome in ("ok", "eos") for r in outs[1:])
+
+    def test_bounded_queue_sheds_latest_arrivals(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs[:3], slots=2, seed=0)
+        outs = eng.serve(reqs, slots=2, seed=0, max_queue=1)
+        # Capacity = 2 slots + 1 queued: requests 3 and 4 are shed.
+        assert [r.outcome for r in outs[3:]] == ["shed", "shed"]
+        assert all(len(r) == 0 for r in outs[3:])
+        assert eng.last_serve_stats["shed"] == 2
+        _assert_streams_equal(base, outs[:3])
+
+    def test_chaos_request_drop_frees_slot(self):
+        cfg, params, rng = _setup(ARCHS[0])
+        reqs = _requests(rng, cfg)
+        eng = ServeEngine(cfg, params, max_len=96, decode_window=4)
+        base = eng.serve(reqs, slots=2, seed=0)
+        chaos = ChaosInjector(seed=2, req_drop_at=(2,))
+        outs = eng.serve(reqs, slots=2, seed=0, chaos=chaos)
+        dropped = [i for i, r in enumerate(outs) if r.outcome == "dropped"]
+        assert len(dropped) == 1
+        assert eng.last_serve_stats["req_drops"] == 1
+        for i, (b, o) in enumerate(zip(base, outs)):
+            if i not in dropped:
+                np.testing.assert_array_equal(np.asarray(b), np.asarray(o))
+
+
+class TestWatchdogFence:
+    """Satellite: a hung step's stale thread must not race the restart."""
+
+    def test_stale_result_discarded(self):
+        wd = StepWatchdog(timeout_s=0.05)
+        release = threading.Event()
+
+        def slow():
+            release.wait(2.0)
+            return "stale"
+
+        with pytest.raises(StepTimeout):
+            wd.run(slow)
+        assert wd.timeouts == 1
+        # The retried step wins; the abandoned thread's result is fenced.
+        assert wd.run(lambda: "fresh") == "fresh"
+        release.set()
+        deadline = time.monotonic() + 2.0
+        while wd.stale_discarded == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert wd.stale_discarded == 1
+
+    def test_cancelled_flips_for_abandoned_step(self):
+        wd = StepWatchdog(timeout_s=0.05)
+        seen = {}
+
+        def slow():
+            fence = wd.cancelled
+            deadline = time.monotonic() + 2.0
+            while not fence() and time.monotonic() < deadline:
+                time.sleep(0.005)
+            seen["cancelled"] = fence()
+
+        with pytest.raises(StepTimeout):
+            wd.run(slow)
+        deadline = time.monotonic() + 2.0
+        while "cancelled" not in seen and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert seen.get("cancelled") is True
+
+    def test_stale_exception_not_raised_into_restart(self):
+        wd = StepWatchdog(timeout_s=0.05)
+
+        def slow_then_boom():
+            time.sleep(0.2)
+            raise RuntimeError("stale boom")
+
+        with pytest.raises(StepTimeout):
+            wd.run(slow_then_boom)
+        # A fresh run must not see the abandoned step's exception.
+        assert wd.run(lambda: 42) == 42
+
+
+class TestStragglerWarmup:
+    """Satellite: the first (compile-time) observation must not seed the
+    EWMA baseline."""
+
+    def test_compile_step_skipped(self):
+        det = StragglerDetector(threshold=2.0, warmup=1)
+        assert det.observe(100.0) is False       # jit compile: discarded
+        assert det.observe(1.0) is False         # seeds the baseline
+        assert det.baseline_s == 1.0
+        assert det.observe(1.1) is False
+        assert det.observe(5.0) is True          # real straggler
+        assert det.flagged == 1
+
+    def test_reset_reenters_warmup(self):
+        det = StragglerDetector(threshold=2.0, warmup=1)
+        det.observe(100.0)
+        det.observe(1.0)
+        det.reset()
+        assert det.baseline_s is None
+        # Post-restart re-trace: the new first observation is discarded
+        # instead of being compared against the dead baseline.
+        assert det.observe(50.0) is False
+        assert det.observe(1.0) is False
+        assert det.baseline_s == 1.0
+
+
+class TestChaosInjector:
+    def test_pinned_faults_fire_exactly_once(self):
+        chaos = ChaosInjector(seed=0, drop_at=(5,))
+        # A retried dispatch keeps its index: the pin must not re-fire or
+        # the retry loop would never converge.
+        assert chaos._hit("drop", 5, 0.0) is True
+        assert chaos._hit("drop", 5, 0.0) is False
+        assert chaos._hit("drop", 6, 0.0) is False
+
+    def test_fixed_seed_replays_schedule(self):
+        a = ChaosInjector(seed=9, drop_rate=0.3)
+        b = ChaosInjector(seed=9, drop_rate=0.3)
+        draws_a = [a._hit("drop", i, a.drop_rate) for i in range(32)]
+        draws_b = [b._hit("drop", i, b.drop_rate) for i in range(32)]
+        assert draws_a == draws_b and any(draws_a)
