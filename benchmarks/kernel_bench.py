@@ -215,6 +215,34 @@ def main(smoke: bool = False) -> list[dict]:
         "cost_model.wkv_seqshard_traffic)",
     ))
 
+    # analysis cross-check: seq-axis bytes counted out of the traced
+    # jaxpr (the repro.analysis.collectives audit) vs the cost model at
+    # this mesh size.  The tolerance is 5% — above it the cost model has
+    # drifted from the program it claims to describe and the derived
+    # columns of the rows above stop being trustworthy.  The wall-clock
+    # column times the audit itself: the price of proving the protocol
+    # statically before running it.
+    from repro.analysis.collectives import counted_axis_elements
+
+    t0 = time.perf_counter()
+    seqshard_jaxpr = jax.make_jaxpr(
+        lambda *args: wkv_seqshard(
+            *args, mesh=mesh, seq_axis="seq", chunk=chunk,
+            use_kernel=False))(rw, kw, vw, ww, uw, h0w)
+    counted = counted_axis_elements(seqshard_jaxpr, "seq") * 4 * n_dev
+    t_audit = (time.perf_counter() - t0) * 1e6
+    modeled = wkv_seqshard_traffic(
+        bh, hh, tw, dh, n_dev)[2].traffic.fabric_bytes
+    div = abs(counted - modeled) / max(modeled, 1)
+    rows.append((
+        "analysis_crosscheck", t_audit,
+        f"counted_bytes={counted} modeled_bytes={modeled} "
+        f"divergence_pct={div * 100:.2f} tolerance_pct=5 n_dev={n_dev} "
+        f"status={'DRIFT' if div > 0.05 else 'ok'} "
+        "(jaxpr-counted seq-axis traffic vs cost_model.wkv_seqshard_traffic"
+        "; repro.analysis.collectives.counted_axis_elements)",
+    ))
+
     # wkv decode: persistent-state serve windows — per-token dispatch
     # (the pre-decode-kernel serve loop: one jit call per token) vs one
     # K-token window dispatch, tokens/s at K ∈ {1, 8, 32}.  CPU wall-clock

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verify, two lanes.
+# Tier-1 verify.
 #
 # Lane 1 is the canonical single-device suite (ROADMAP "Tier-1 verify").
 # Lane 2 re-runs the device-gated test files with 8 fake CPU devices
@@ -46,3 +46,13 @@ python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
     --requests 6 --slots 2 --prompt-len 8 --new-tokens 6 --max-len 64 \
     --decode-window 2 --chaos-seed 7 --chaos-nan-at 2 --chaos-drop-at 4 \
     --watchdog-timeout 30
+
+echo "== tier-1 lane 4: static audit (repro.analysis, strict) =="
+# Every analysis pass over every default arch family — collectives,
+# donation, dtype flow, VMEM budgets, ring slack, retrace sentinel —
+# on a single device and on an 8-device fake mesh (where the collective
+# budget audit and the cost-model cross-check are non-degenerate).
+# --strict: WARN findings fail the lane too.
+for n in 1 8; do
+    python -m repro.analysis --strict --fake-devices "$n"
+done

@@ -1,0 +1,44 @@
+"""repro.analysis: static audits over jaxpr/HLO — run before anything does.
+
+Passes (each ``repro.analysis.<name>.run(cfg) -> list[Finding]``):
+
+* ``resources``   — Pallas VMEM footprints vs the per-core budget (pure
+  shape math over declared kernel geometry);
+* ``ringslack``   — local-attention ring slack for windowed decode;
+* ``dtype_flow``  — bf16 I/O contract, caller-side upcast lint, f32
+  state/accumulation witnesses;
+* ``collectives`` — per-mesh-axis collective traffic: gather ban,
+  summary-size budgets, cost-model cross-check;
+* ``donation``    — every registered serve/train jit shows
+  ``input_output_alias`` in its compiled HLO;
+* ``retrace``     — serve-loop jits compile once per shape bucket.
+
+CLI: ``python -m repro.analysis --arch rwkv6-1.6b [--strict]``.
+
+This module imports lazily (no jax at import time) so the CLI can
+configure fake devices before jax initializes.
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "Finding": ("repro.analysis.findings", "Finding"),
+    "Severity": ("repro.analysis.findings", "Severity"),
+    "errors": ("repro.analysis.findings", "errors"),
+    "format_table": ("repro.analysis.findings", "format_table"),
+    "DEFAULT_ARCHS": ("repro.analysis.registry", "DEFAULT_ARCHS"),
+    "PASS_MODULES": ("repro.analysis.registry", "PASS_MODULES"),
+    "jit_entries": ("repro.analysis.registry", "jit_entries"),
+    "run_passes": ("repro.analysis.registry", "run_passes"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

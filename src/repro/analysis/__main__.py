@@ -1,0 +1,72 @@
+"""CLI: run the static-audit passes and print a findings table.
+
+  PYTHONPATH=src python -m repro.analysis --arch rwkv6-1.6b --strict
+  PYTHONPATH=src python -m repro.analysis --fake-devices 8   # all archs
+
+Exit status: nonzero iff any ERROR finding (``--strict``: WARN too).
+``--fake-devices N`` forces N XLA host-platform devices so the
+collective audit sees a real multi-device mesh on this CPU container —
+it must be applied before jax initializes, which is why this module
+imports jax only after parsing arguments.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch family to audit (repeatable; default: the "
+                         "registry's DEFAULT_ARCHS)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of passes to run")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat WARN findings as failures too")
+    ap.add_argument("--fake-devices", type=int, default=None,
+                    help="force N XLA host-platform (CPU) devices")
+    args = ap.parse_args(argv)
+
+    if args.fake_devices is not None:
+        if "jax" in sys.modules:
+            print("error: --fake-devices must be applied before jax "
+                  "initializes; run via `python -m repro.analysis`",
+                  file=sys.stderr)
+            return 2
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.fake_devices}"
+        ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.analysis.findings import Severity, format_table, worst
+    from repro.analysis.registry import DEFAULT_ARCHS, run_passes
+    from repro.configs.registry import get_config
+
+    archs = args.arch or list(DEFAULT_ARCHS)
+    passes = args.passes.split(",") if args.passes else None
+
+    import jax
+
+    n_dev = len(jax.devices())
+    failed = False
+    for arch in archs:
+        cfg = get_config(arch)
+        findings = run_passes(cfg, passes)
+        print(format_table(
+            findings,
+            title=f"{arch} — {len(findings)} findings on {n_dev} device(s)",
+        ))
+        print()
+        top = worst(findings)
+        if top >= Severity.ERROR or (args.strict and top >= Severity.WARN):
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

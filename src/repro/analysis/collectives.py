@@ -1,0 +1,289 @@
+"""Collective-traffic audit: what crosses a mesh axis, proven from the jaxpr.
+
+The paper's core claim is that a dataflow fabric makes communication
+*statically knowable*; the jaxpr is where that property lives in JAX — a
+collective primitive either appears with a token-sized operand or it does
+not, before anything runs.  This pass walks a traced program and, per
+mesh axis:
+
+* forbids gather-class collectives (``all_gather`` / ``all_to_all``) —
+  those are exactly the "regressed to re-gathering activations" failure
+  the segment-summary protocol (kernels/wkv/seqpar) exists to avoid;
+* bounds every point-to-point collective operand (``ppermute`` / ``psum``)
+  by a caller-supplied element budget (``B·H·Dh²`` for WKV summaries);
+* counts the total bytes crossing the axis and cross-checks them against
+  the cost model (:func:`repro.core.cost_model.wkv_seqshard_traffic`),
+  flagging divergence — so the model can no longer drift from the
+  program it claims to describe.
+
+This generalizes (and replaced) the hand-rolled walker that lived inline
+in ``tests/test_multidevice.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "collectives"
+
+#: Gather-class collectives: moving one of these over a sequence axis
+#: means token activations crossed the mesh — the protocol regressed.
+GATHER_COLLECTIVES = ("all_gather", "all_to_all", "all_gather_invariant")
+
+#: Point-to-point / reduction collectives the summary protocol is allowed
+#: to use; their operands must stay summary-sized.
+P2P_COLLECTIVES = ("ppermute", "psum", "psum_invariant")
+
+
+def iter_eqns(jaxpr):
+    """Yield every eqn in ``jaxpr`` and (recursively) in any sub-jaxpr
+    reachable through eqn params (pjit bodies, scan bodies, custom_vjp
+    closures, shard_map bodies, ...)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            for item in vals:
+                sub = getattr(item, "jaxpr", item)
+                if hasattr(sub, "eqns"):
+                    yield from iter_eqns(sub)
+
+
+def eqn_axes(eqn) -> tuple:
+    """Mesh-axis names an eqn communicates over (collectives spell them
+    ``axes`` or ``axis_name``, scalar or tuple)."""
+    ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective eqn over the audited axis."""
+
+    primitive: str
+    elements: int            # per-device elements moved (largest operand)
+    shape: tuple[int, ...]
+    reverse: bool = False    # ppermute running high->low shard index
+
+
+def _closed(jaxpr):
+    return getattr(jaxpr, "jaxpr", jaxpr)
+
+
+def collect_collectives(closed, axis: str) -> list[CollectiveOp]:
+    """Every collective over ``axis``, with its largest non-scalar operand.
+
+    Scalar operands (e.g. the constant-folded ``psum(1)`` behind
+    ``axis_size``) are ignored: they never reach the fabric.
+    """
+    ops = []
+    for eqn in iter_eqns(_closed(closed)):
+        name = eqn.primitive.name
+        if name not in GATHER_COLLECTIVES + P2P_COLLECTIVES:
+            continue
+        if axis not in eqn_axes(eqn):
+            continue
+        sized = [
+            tuple(v.aval.shape) for v in eqn.invars
+            if hasattr(v, "aval") and v.aval.shape
+        ]
+        if not sized:
+            continue
+        shape = max(sized, key=lambda s: int(np.prod(s)))
+        rev = False
+        if name == "ppermute":
+            rev = any(src > dst for src, dst in eqn.params.get("perm", ()))
+        ops.append(CollectiveOp(name, int(np.prod(shape)), shape, rev))
+    return ops
+
+
+def has_reverse_hops(closed, axis: str) -> bool:
+    """True iff some ppermute over ``axis`` runs high->low shard index —
+    the device-space *reverse* elevator a transposed carry must contain."""
+    return any(op.reverse for op in collect_collectives(closed, axis)
+               if op.primitive == "ppermute")
+
+
+def counted_axis_elements(closed, axis: str) -> int:
+    """Per-device elements sent over ``axis``: the sum over collective
+    eqns of their (largest) operand size — the static count the cost
+    model's fabric-bytes term must match."""
+    return sum(op.elements for op in collect_collectives(closed, axis))
+
+
+def audit_collectives(closed, *, axis: str, max_elements: int,
+                      what: str = "program",
+                      location: str = "src/repro/kernels/wkv/seqpar.py:wkv_seqshard",
+                      itemsize: int = 4,
+                      require: bool = True) -> list[Finding]:
+    """The per-axis budget audit (the former test_multidevice walker).
+
+    Errors: a gather-class collective over ``axis``; a point-to-point
+    operand above ``max_elements``; no collectives at all when
+    ``require`` (a program claiming to communicate but not communicating
+    usually means the audit traced the wrong thing).
+    """
+    findings: list[Finding] = []
+    ops = collect_collectives(closed, axis)
+    gathers = [op for op in ops if op.primitive in GATHER_COLLECTIVES]
+    for op in gathers:
+        findings.append(error(
+            PASS, location,
+            f"{what}: gather collective '{op.primitive}' over axis "
+            f"'{axis}' moves {op.elements} elements {op.shape} — token "
+            f"data crossed the mesh",
+            elements=op.elements,
+        ))
+    p2p = [op for op in ops if op.primitive in P2P_COLLECTIVES]
+    if require and not ops:
+        findings.append(error(
+            PASS, location,
+            f"{what}: no collectives found over axis '{axis}' — the "
+            f"audited trace does not communicate on this axis",
+        ))
+        return findings
+    biggest = max((op.elements for op in p2p), default=0)
+    if biggest > max_elements:
+        off = [op for op in p2p if op.elements > max_elements]
+        findings.append(error(
+            PASS, location,
+            f"{what}: collective operand of {biggest} elements exceeds "
+            f"the per-hop budget {max_elements} "
+            f"({[(o.primitive, o.shape) for o in off]})",
+            elements=biggest, budget=max_elements,
+        ))
+    per_dev = sum(op.elements for op in p2p)
+    findings.append(info(
+        PASS, location,
+        f"{what}: {len(p2p)} point-to-point collectives over '{axis}', "
+        f"largest operand {biggest} <= budget {max_elements}",
+        collectives=len(p2p), max_elements=biggest,
+        per_device_bytes=per_dev * itemsize,
+    ))
+    return findings
+
+
+def crosscheck_cost_model(closed, *, axis: str, b: int, h: int, t: int,
+                          dh: int, n_dev: int, itemsize: int = 4,
+                          tolerance: float = 0.05,
+                          location: str = "src/repro/core/cost_model.py:wkv_seqshard_traffic",
+                          what: str = "forward") -> list[Finding]:
+    """Counted bytes (from the jaxpr) vs modeled bytes (cost model).
+
+    The cost model's ``wkv_seqshard_traffic`` "direct" variant claims
+    ``hops·(Dh²+Dh) + Dh²`` elements per (batch, head) per device cross
+    the axis.  This pass counts the actual collective operands in the
+    traced program and flags divergence above ``tolerance`` — the drift
+    alarm that keeps BENCH notes honest.
+    """
+    from repro.core import cost_model
+
+    counted = counted_axis_elements(closed, axis) * itemsize * n_dev
+    modeled = cost_model.wkv_seqshard_traffic(
+        b, h, t, dh, n_dev, itemsize=itemsize
+    )[2].traffic.fabric_bytes
+    div = abs(counted - modeled) / max(modeled, 1)
+    msg = (f"{what}: counted {counted} B over '{axis}' vs modeled "
+           f"{modeled} B (divergence {div * 100:.2f}%)")
+    metrics = dict(counted_bytes=counted, modeled_bytes=modeled,
+                   divergence_pct=round(div * 100, 3), n_dev=n_dev)
+    if div > tolerance:
+        return [error(PASS, location,
+                      msg + f" — cost model drifted past {tolerance:.0%}",
+                      **metrics)]
+    return [info(PASS, location, msg, **metrics)]
+
+
+# --------------------------------------------------------------------------
+# Pass runner: audit the registered seq-parallel entrypoint for a config
+# --------------------------------------------------------------------------
+
+def run(cfg, *, mesh=None, seq_axis: str = "seq",
+        tolerance: float = 0.05) -> list[Finding]:
+    """Audit the sequence-parallel WKV protocol for ``cfg``.
+
+    Traces (never executes) ``wkv_seqshard`` forward and backward over a
+    mesh of all visible devices, bounds every seq-axis collective by the
+    ``B·H·Dh²`` summary budget, requires reverse hops in the backward,
+    and cross-checks counted vs modeled bytes (the latter only on >= 2
+    devices, where the hop count is non-degenerate).
+
+    Families with no recurrent WKV layers have no registered collective
+    entrypoints — that is reported as an info finding, not silence.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.model.recurrent import RWKV_HEAD_DIM
+
+    loc = "src/repro/kernels/wkv/seqpar.py:wkv_seqshard"
+    if "rwkv" not in tuple(cfg.pattern):
+        return [info(
+            PASS, loc,
+            f"{cfg.name}: no seq-parallel collective entrypoints "
+            f"registered for pattern {tuple(cfg.pattern)}",
+        )]
+
+    from repro.kernels.wkv.seqpar import wkv_seqshard
+
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (seq_axis,))
+    n_dev = math.prod(mesh.shape.values())
+    dh = RWKV_HEAD_DIM
+    b, h = 1, max(1, cfg.d_model // dh)
+    chunk = 8
+    t = 2 * chunk * n_dev
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((b, h, t, dh), jnp.float32),   # r
+        sds((b, h, t, dh), jnp.float32),   # k
+        sds((b, h, t, dh), jnp.float32),   # v
+        sds((b, h, t, dh), jnp.float32),   # w
+        sds((h, dh), jnp.float32),         # u
+        sds((b, h, dh, dh), jnp.float32),  # h0
+    )
+
+    def shard(*a):
+        return wkv_seqshard(*a, mesh=mesh, seq_axis=seq_axis, chunk=chunk,
+                            use_kernel=False)
+
+    def loss(*a):
+        o, s = shard(*a)
+        return o.sum() + s.sum()
+
+    budget = b * h * dh * dh
+    findings: list[Finding] = []
+    fwd = jax.make_jaxpr(shard)(*args)
+    findings += audit_collectives(
+        fwd, axis=seq_axis, max_elements=budget,
+        what=f"{cfg.name} forward", location=loc)
+    bwd = jax.make_jaxpr(jax.grad(loss, argnums=tuple(range(6))))(*args)
+    findings += audit_collectives(
+        bwd, axis=seq_axis, max_elements=budget,
+        what=f"{cfg.name} backward", location=loc)
+    # Reverse hops only exist with >= 2 shards (a 1-device perm is the
+    # identity, so direction is undefined there).
+    if n_dev >= 2 and not has_reverse_hops(bwd, seq_axis):
+        findings.append(error(
+            PASS, loc,
+            f"{cfg.name} backward: no reverse-direction ppermute hops — "
+            f"the transposed carry is not a reverse elevator",
+        ))
+    if n_dev >= 2:
+        findings += crosscheck_cost_model(
+            fwd, axis=seq_axis, b=b, h=h, t=t, dh=dh, n_dev=n_dev,
+            tolerance=tolerance, what=f"{cfg.name} forward")
+    else:
+        findings.append(info(
+            PASS, loc,
+            f"{cfg.name}: single device — counted "
+            f"{counted_axis_elements(fwd, seq_axis) * 4} B/device over "
+            f"'{seq_axis}'; cost-model cross-check needs >= 2 devices",
+        ))
+    return findings

@@ -1,0 +1,73 @@
+"""Donation/aliasing verifier: every registered serve/train jit must
+alias its state pytree in place.
+
+PR 4's perf story — decode state resident across windows instead of
+copied per dispatch — rests on ``donate_argnums`` showing up as
+``input_output_alias`` in the compiled HLO.  A new jit that forgets the
+donation ships silently: the code still runs, it just pays a full cache
+copy per dispatch.  This pass lowers each *registered* entrypoint with
+abstract (ShapeDtypeStruct) arguments — nothing executes — compiles it,
+and errors unless the HLO text shows input/output aliasing.
+
+Entrypoints come from registration hooks next to the jits they describe
+(:func:`repro.serve.engine.audit_jit_entrypoints`,
+:func:`repro.train.step.audit_jit_entrypoints`), so adding a jit without
+registering it is a reviewable one-liner away from being audited.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "donation"
+
+
+@dataclasses.dataclass(frozen=True)
+class JitEntry:
+    """One registered jitted entrypoint: the jit object plus abstract
+    arguments sufficient to lower it without executing anything."""
+
+    name: str                 # e.g. "serve.window"
+    fn: Any                   # the jax.jit-wrapped callable
+    args: tuple               # ShapeDtypeStruct pytrees (or None leaves)
+    location: str             # repo-path-like location of the jit
+    donated: str = "state"    # human label for what must alias
+
+
+def check_entry(entry: JitEntry) -> list[Finding]:
+    """Lower + compile ``entry`` abstractly; require input_output_alias."""
+    try:
+        hlo = entry.fn.lower(*entry.args).compile().as_text()
+    except Exception as e:  # noqa: BLE001 — a broken lowering IS a finding
+        return [error(
+            PASS, entry.location,
+            f"{entry.name}: failed to lower/compile for audit: {e!r}",
+        )]
+    if "input_output_alias" not in hlo:
+        return [error(
+            PASS, entry.location,
+            f"{entry.name}: compiled HLO shows no input_output_alias — "
+            f"the {entry.donated} pytree is copied per dispatch "
+            f"(missing donate_argnums?)",
+        )]
+    n = hlo.count("input_output_alias")
+    return [info(
+        PASS, entry.location,
+        f"{entry.name}: {entry.donated} aliased in place",
+        alias_sites=n,
+    )]
+
+
+def run(cfg) -> list[Finding]:
+    """Audit every registered serve + train jit for ``cfg`` (reduced to
+    its smoke-size family member: donation is shape-independent and the
+    audit compiles, so small shapes keep it cheap)."""
+    from repro.analysis.registry import jit_entries
+
+    findings: list[Finding] = []
+    for entry in jit_entries(cfg.reduced()):
+        findings += check_entry(entry)
+    return findings

@@ -1,0 +1,275 @@
+"""Dtype-flow lint: bf16 stays bf16 on kernel I/O, f32 stays f32 in state.
+
+The kernels advertise a precise dtype contract (see ``wkv_fused``'s
+docstring): activations may arrive in bf16 and come back in bf16 — every
+backend accumulates in float32 *internally* — and recurrent decode state
+(WKV S, RG-LRU h) is float32 end to end.  Two silent regressions break
+that contract without breaking any test:
+
+* a caller-side ``astype(float32)`` sneaks onto the kernel I/O path,
+  doubling the unavoidable HBM traffic (``cost_model.wkv_traffic``'s
+  ``io`` term) for zero numerical benefit;
+* the internal f32 accumulation is dropped, so long sequences quietly
+  lose precision in the recurrence.
+
+This pass traces (never executes) the dispatch entrypoints with bf16
+activations and checks three things statically:
+
+1. **I/O contract** (``jax.eval_shape``): bf16 in -> bf16 out, state out
+   float32 — on both the jnp and Pallas backends.
+2. **Upcast lint** (top-level jaxpr walk): no ``convert_element_type``
+   bf16 -> f32 on an activation-sized operand *outside* the custom-vjp
+   boundary.  Inside is the backend's business (that is the f32
+   accumulation); outside is a caller paying double I/O.
+3. **f32-accumulation witness** (full jaxpr walk): at least one
+   bf16 -> f32 convert exists *somewhere* in the traced program — the
+   static shadow of "accumulates in float32 internally".
+
+Plus the state-dtype audit: every ``RecState.h`` leaf in the abstract
+decode state must be float32 (``_layer_state_shape`` builds it; a frozen
+slot must round-trip bit-identically even under bf16 models).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "dtype_flow"
+
+#: Primitives whose sub-jaxprs are the *backend interior* — intentional
+#: f32 accumulation lives there, so the upcast lint does not descend.
+CUSTOM_BOUNDARIES = ("custom_vjp_call", "custom_jvp_call", "custom_lin")
+
+
+def iter_top_eqns(jaxpr, *, boundaries: tuple = CUSTOM_BOUNDARIES):
+    """Yield eqns reachable without crossing a custom-diff boundary
+    (descends pjit/scan/etc. bodies, stops at custom_vjp/jvp interiors)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if any(eqn.primitive.name.startswith(b) for b in boundaries):
+            continue
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            for item in vals:
+                sub = getattr(item, "jaxpr", item)
+                if hasattr(sub, "eqns"):
+                    yield from iter_top_eqns(sub, boundaries=boundaries)
+
+
+def _converts(eqns, src, dst):
+    """(shape, elements) of every convert_element_type src->dst in eqns."""
+    import jax.numpy as jnp
+
+    out = []
+    for eqn in eqns:
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        if jnp.dtype(eqn.params.get("new_dtype")) != jnp.dtype(dst):
+            continue
+        v = eqn.invars[0]
+        if not hasattr(v, "aval"):
+            continue
+        if jnp.dtype(v.aval.dtype) != jnp.dtype(src):
+            continue
+        shape = tuple(v.aval.shape)
+        out.append((shape, int(np.prod(shape)) if shape else 1))
+    return out
+
+
+def lint_upcasts(closed, *, min_elements: int, what: str,
+                 location: str) -> list[Finding]:
+    """Error on any activation-sized bf16 -> f32 convert outside the
+    custom-diff boundary of ``closed``."""
+    import jax.numpy as jnp
+
+    jaxpr = getattr(closed, "jaxpr", closed)
+    ups = _converts(iter_top_eqns(jaxpr), jnp.bfloat16, jnp.float32)
+    big = [(s, n) for s, n in ups if n >= min_elements]
+    if big:
+        return [error(
+            PASS, location,
+            f"{what}: caller-side bf16->f32 upcast of activation-sized "
+            f"operand(s) {[s for s, _ in big]} on the kernel I/O path — "
+            f"doubles HBM traffic for no numerical benefit",
+            upcasts=len(big), largest=max(n for _, n in big),
+        )]
+    return [info(
+        PASS, location,
+        f"{what}: no activation-sized bf16->f32 upcasts outside the "
+        f"kernel boundary",
+    )]
+
+
+def confirm_f32_accumulation(closed, *, what: str,
+                             location: str) -> list[Finding]:
+    """Require a bf16 -> f32 convert *somewhere* in the full trace — the
+    static witness of internal float32 accumulation."""
+    import jax.numpy as jnp
+
+    from repro.analysis.collectives import iter_eqns
+
+    jaxpr = getattr(closed, "jaxpr", closed)
+    ups = _converts(iter_eqns(jaxpr), jnp.bfloat16, jnp.float32)
+    if not ups:
+        return [error(
+            PASS, location,
+            f"{what}: no bf16->f32 convert anywhere in the trace — the "
+            f"backend is accumulating the recurrence in bf16",
+        )]
+    return [info(
+        PASS, location,
+        f"{what}: f32 accumulation confirmed "
+        f"({len(ups)} internal upcast sites)",
+        upcast_sites=len(ups),
+    )]
+
+
+def check_io_contract(fn, args, *, out_dtypes: tuple, what: str,
+                      location: str) -> list[Finding]:
+    """``jax.eval_shape`` the dispatch and compare leaf dtypes with the
+    advertised contract (a tuple parallel to the flattened outputs)."""
+    import jax
+    import jax.numpy as jnp
+
+    try:
+        out = jax.eval_shape(fn, *args)
+    except Exception as e:  # noqa: BLE001 — a broken trace IS a finding
+        return [error(PASS, location,
+                      f"{what}: failed to trace for dtype audit: {e!r}")]
+    leaves = jax.tree.leaves(out)
+    got = tuple(jnp.dtype(l.dtype) for l in leaves)
+    want = tuple(jnp.dtype(d) for d in out_dtypes)
+    if got != want:
+        return [error(
+            PASS, location,
+            f"{what}: output dtypes {tuple(str(d) for d in got)} != "
+            f"contract {tuple(str(d) for d in want)}",
+        )]
+    return [info(
+        PASS, location,
+        f"{what}: I/O contract holds "
+        f"({' ,'.join(str(d) for d in want)})",
+    )]
+
+
+def audit_state_dtypes(cfg, *, batch: int = 2, max_len: int = 32,
+                       location: str = "src/repro/model/model.py:_layer_state_shape",
+                       ) -> list[Finding]:
+    """Every RecState.h leaf in the abstract decode state must be f32."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.model import model as M
+    from repro.model.recurrent import RecState
+
+    state = M.abstract_decode_state(cfg, batch=batch, max_len=max_len)
+    bad, n_rec = [], 0
+    for node in jax.tree.leaves(
+        state, is_leaf=lambda x: isinstance(x, RecState)
+    ):
+        if not isinstance(node, RecState):
+            continue
+        n_rec += 1
+        if jnp.dtype(node.h.dtype) != jnp.dtype(jnp.float32):
+            bad.append(str(node.h.dtype))
+    if bad:
+        return [error(
+            PASS, location,
+            f"{cfg.name}: recurrent decode state h carried in {bad} — "
+            f"must be float32 for bit-exact slot round-trips",
+        )]
+    if n_rec == 0:
+        return []
+    return [info(
+        PASS, location,
+        f"{cfg.name}: {n_rec} recurrent state group(s) carry h in float32",
+        rec_groups=n_rec,
+    )]
+
+
+# --------------------------------------------------------------------------
+# Pass runner
+# --------------------------------------------------------------------------
+
+def run(cfg, *, b: int = 1, t: int = 64, chunk: int = 16) -> list[Finding]:
+    """Dtype-flow audit for ``cfg``'s kernel dispatch paths.
+
+    The WKV entrypoint is late-bound through the module object so the
+    audit sees exactly what the model would call (mutation tests — and
+    real regressions — swap the attribute).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    findings: list[Finding] = []
+    pattern = tuple(cfg.pattern)
+    sds = jax.ShapeDtypeStruct
+
+    if "rwkv" in pattern:
+        from repro.kernels.wkv import ops as wkv_ops
+        from repro.model.recurrent import RWKV_HEAD_DIM
+
+        loc = "src/repro/kernels/wkv/ops.py:wkv_fused"
+        dh = RWKV_HEAD_DIM
+        h = max(1, cfg.d_model // dh)
+        act = sds((b, h, t, dh), jnp.bfloat16)
+        u = sds((h, dh), jnp.bfloat16)
+        h0 = sds((b, h, dh, dh), jnp.float32)
+        args = (act, act, act, act, u, h0)
+        min_el = b * h * t * dh
+
+        for uk in (False, True):
+            def dispatch(r, k, v, w, u_, h0_, _uk=uk):
+                return wkv_ops.wkv_fused(
+                    r, k, v, w, u_, h0_, chunk=chunk,
+                    use_kernel=_uk, decode=False,
+                )
+
+            tag = "kernel" if uk else "jnp"
+            findings += check_io_contract(
+                dispatch, args, out_dtypes=(jnp.bfloat16, jnp.float32),
+                what=f"{cfg.name} wkv_fused[{tag}] bf16",
+                location=loc)
+            try:
+                closed = jax.make_jaxpr(dispatch)(*args)
+            except Exception as e:  # noqa: BLE001
+                findings.append(error(
+                    PASS, loc,
+                    f"{cfg.name} wkv_fused[{tag}]: trace failed: {e!r}"))
+                continue
+            findings += lint_upcasts(
+                closed, min_elements=min_el,
+                what=f"{cfg.name} wkv_fused[{tag}]", location=loc)
+            findings += confirm_f32_accumulation(
+                closed, what=f"{cfg.name} wkv_fused[{tag}]", location=loc)
+
+    if "rec" in pattern:
+        from repro.kernels.elevator_scan import ops as elev_ops
+
+        loc = "src/repro/kernels/elevator_scan/ops.py:elevator_scan"
+        d = cfg.d_rnn
+        a = sds((b, t, d), jnp.bfloat16)
+        x = sds((b, t, d), jnp.bfloat16)
+
+        def elev(a_, x_):
+            return elev_ops.elevator_scan(a_, x_, None, use_kernel=False,
+                                          decode=False)
+
+        findings += check_io_contract(
+            elev, (a, x), out_dtypes=(jnp.bfloat16,),
+            what=f"{cfg.name} elevator_scan bf16", location=loc)
+        closed = jax.make_jaxpr(elev)(a, x)
+        findings += confirm_f32_accumulation(
+            closed, what=f"{cfg.name} elevator_scan", location=loc)
+
+    if not ({"rwkv", "rec"} & set(pattern)):
+        findings.append(info(
+            PASS, "src/repro/model/transformer.py",
+            f"{cfg.name}: attention-only pattern {pattern} — no recurrent "
+            f"f32-accumulation contract to audit",
+        ))
+
+    findings += audit_state_dtypes(cfg.reduced())
+    return findings

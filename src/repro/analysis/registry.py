@@ -1,0 +1,59 @@
+"""Pass registry + audited-entrypoint aggregation.
+
+Passes are registered here by name; jitted entrypoints are *not* — they
+are declared next to the jits they describe
+(``repro.serve.engine.audit_jit_entrypoints``,
+``repro.train.step.audit_jit_entrypoints``) and aggregated by
+:func:`jit_entries`, so adding a serve/train jit and registering it for
+audit is one diff in one file.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.analysis.findings import Finding
+
+#: Arch families the CLI / tier-1 lane audit by default: one per layer
+#: pattern family (pure RWKV, recurrent+local hybrid, local/global attn).
+DEFAULT_ARCHS = ("rwkv6-1.6b", "recurrentgemma-2b", "gemma3-1b")
+
+#: pass name -> module (each module exposes ``run(cfg) -> list[Finding]``
+#: and a ``PASS`` constant matching its key here).  Ordered: pure shape
+#: math first, tracing passes next, the one executing pass (retrace)
+#: last — so a geometry error surfaces before anything compiles.
+PASS_MODULES = {
+    "resources": "repro.analysis.resources",
+    "ringslack": "repro.analysis.ringslack",
+    "dtype_flow": "repro.analysis.dtype_flow",
+    "collectives": "repro.analysis.collectives",
+    "donation": "repro.analysis.donation",
+    "retrace": "repro.analysis.retrace",
+}
+
+
+def get_pass(name: str):
+    if name not in PASS_MODULES:
+        raise KeyError(
+            f"unknown analysis pass {name!r}; have {sorted(PASS_MODULES)}"
+        )
+    return importlib.import_module(PASS_MODULES[name])
+
+
+def jit_entries(cfg):
+    """Every registered jitted entrypoint for ``cfg`` (serve + train)."""
+    from repro.serve import engine
+    from repro.train import step
+
+    return list(engine.audit_jit_entrypoints(cfg)) + list(
+        step.audit_jit_entrypoints(cfg)
+    )
+
+
+def run_passes(cfg, passes=None) -> list[Finding]:
+    """Run ``passes`` (default: all, in registry order) over ``cfg``."""
+    names = list(PASS_MODULES) if passes is None else list(passes)
+    findings: list[Finding] = []
+    for name in names:
+        findings += get_pass(name).run(cfg)
+    return findings

@@ -1,0 +1,149 @@
+"""Retrace sentinel: serve-loop jits must compile once per shape bucket.
+
+The engine's perf story assumes each jitted piece compiles once and is
+then dispatched hundreds of times.  A shape leak — a Python int that
+should have been bucketed, a state whose shape depends on the exact
+prompt length — silently turns every dispatch into a recompile, and
+nothing fails: the serve loop just gets ~100x slower.
+
+This pass runs a *tiny real* serve session (smoke-reduced config, CPU)
+with deliberately ragged prompt lengths spanning two admission buckets,
+then inspects the engine's jit caches:
+
+* ``_serve_windows``: exactly one entry for one sampling configuration,
+  compiled exactly once across all dispatches;
+* ``_admits``: at most one entry per *declared* prompt bucket (the
+  32-multiple rounding), each compiled once — the bucket arithmetic is
+  re-declared here (:data:`PROMPT_BUCKET`) rather than imported from the
+  engine, so an engine that stops bucketing cannot fool its own audit;
+* ``generate()``: at most two window jits (interior + last), plus a
+  prefill compiled once.
+
+This is the one pass that executes anything — counting retraces requires
+dispatching — but only at smoke scale (two slots, < 100 positions).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "retrace"
+LOCATION = "src/repro/serve/engine.py:ServeEngine"
+
+#: The auditor's own declaration of the admission bucket width.  The
+#: engine has an equivalent ``_bucket32``; keeping an independent copy
+#: here is deliberate — the audit is the spec, the engine the
+#: implementation, and they must agree through behavior, not imports.
+PROMPT_BUCKET = 32
+
+
+def _bucket(n: int) -> int:
+    return -(-max(int(n), 1) // PROMPT_BUCKET) * PROMPT_BUCKET
+
+
+def _cache_size(fn):
+    """Compile count of a ``jax.jit`` wrapper (None if unknowable)."""
+    try:
+        return int(fn._cache_size())
+    except Exception:  # noqa: BLE001 — non-jit callables have no cache
+        return None
+
+
+def _check_once(findings, name, fn, *, allow: int = 1):
+    n = _cache_size(fn)
+    if n is None:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{name}: not a jit wrapper (cannot count retraces) — the "
+            f"entry lost its jit boundary",
+        ))
+    elif n > allow:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{name}: compiled {n} times (allowed {allow}) — a shape is "
+            f"leaking through the jit cache key",
+            compiles=n, allowed=allow,
+        ))
+
+
+def run(cfg, *, prompt_lens: tuple[int, ...] = (3, 5, 33, 7),
+        max_new: int = 4, slots: int = 2) -> list[Finding]:
+    """Serve ``prompt_lens`` through a smoke engine and audit retraces."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.model import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    rcfg = cfg.reduced()
+    if rcfg.frontend or rcfg.is_enc_dec:
+        return [info(
+            PASS, LOCATION,
+            f"{cfg.name}: frontend/enc-dec serving not audited by the "
+            f"retrace sentinel (token-only engine)",
+        )]
+
+    params = M.init_params(rcfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(rcfg, params=params, max_len=96, decode_window=2)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(tokens=rng.integers(1, rcfg.vocab_size, size=(pl,))
+                .astype(np.int32), max_new_tokens=max_new)
+        for pl in prompt_lens
+    ]
+    eng.serve(reqs, slots=slots)
+
+    findings: list[Finding] = []
+    buckets = {_bucket(pl) for pl in prompt_lens}
+
+    if len(eng._serve_windows) != 1:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: {len(eng._serve_windows)} serve-window jits for "
+            f"one sampling configuration (expected 1) — the window cache "
+            f"key leaked a non-shape value",
+            windows=len(eng._serve_windows),
+        ))
+    for key, fn in eng._serve_windows.items():
+        _check_once(findings, f"{cfg.name} serve_window{key}", fn)
+
+    if len(eng._admits) > len(buckets):
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: {len(eng._admits)} admission jits for prompt "
+            f"lengths {tuple(prompt_lens)} spanning {len(buckets)} "
+            f"declared {PROMPT_BUCKET}-buckets {sorted(buckets)} — "
+            f"admission stopped bucketing prompt shapes",
+            admits=len(eng._admits), buckets=len(buckets),
+        ))
+    for key, fn in eng._admits.items():
+        _check_once(findings, f"{cfg.name} admit{key}", fn)
+
+    # Lockstep generate(): interior + last window jits, prefill once.
+    prompts = jnp.asarray(
+        rng.integers(1, rcfg.vocab_size, size=(2, 16)), jnp.int32
+    )
+    eng.generate(prompts, 2 * max_new)
+    if len(eng._windows) > 2:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: {len(eng._windows)} decode-window jits after one "
+            f"generate() (expected <= 2: interior + last)",
+            windows=len(eng._windows),
+        ))
+    for key, fn in eng._windows.items():
+        _check_once(findings, f"{cfg.name} window{key}", fn)
+    _check_once(findings, f"{cfg.name} prefill", eng._prefill)
+
+    if not findings:
+        findings.append(info(
+            PASS, LOCATION,
+            f"{cfg.name}: serve session over prompts {tuple(prompt_lens)} "
+            f"compiled {len(eng._admits)} admit / "
+            f"{len(eng._serve_windows)} serve-window / "
+            f"{len(eng._windows)} window jits, each exactly once",
+            admits=len(eng._admits), buckets=len(buckets),
+        ))
+    return findings

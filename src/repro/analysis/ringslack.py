@@ -1,0 +1,123 @@
+"""Local-attention ring-slack checker: windowed decode must never wrap.
+
+A window of ``t`` tokens inserted into a local-attention ring of ``S``
+slots is exact iff ``S >= attn_window + t - 1`` — or the ring is capped
+at ``max_len`` and can never wrap at all.  ``init_decode_state`` sizes
+the slack via ``insert_window``; the failure mode of building a state
+too small is silent (earlier in-window queries attend to evicted slots:
+corrupt logits, no error).
+
+The rule itself lives here — :func:`ring_slack_violations` is the single
+source of truth — and ``model.decode_step`` delegates to it at trace
+time, so the serving path and the static audit can never disagree.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "ringslack"
+LOCATION = "src/repro/model/model.py:_check_ring_slack"
+
+
+def ring_slack_violations(cfg, state, t: int,
+                          max_len: int | None) -> list[str]:
+    """Every ring-contract violation in ``state`` for a ``t``-token
+    window, as human-readable messages (empty list = contract holds).
+
+    ``max_len=None`` (caller didn't vouch for the cap) treats any
+    slack-deficient ring as a violation.
+    """
+    from repro.model import transformer as tf
+    from repro.model.model import KVCache
+
+    if t <= 1 or state is None or cfg.attn_window is None:
+        return []
+    pattern, n_periods, remainder = tf.plan_groups(cfg)
+    layers = []
+    if n_periods > 0 and state.get("scanned") is not None:
+        layers += list(zip(pattern, state["scanned"]))
+    layers += list(zip(remainder, state["remainder"]))
+    window = cfg.attn_window
+    msgs = []
+    for kind, st in layers:
+        if kind != "local" or not isinstance(st, KVCache):
+            continue
+        s_ring = st.k.shape[-2]
+        if s_ring >= window + t - 1:
+            continue                       # enough slack for this window
+        if max_len is not None and s_ring >= max_len:
+            continue                       # capped ring: never wraps
+        msgs.append(
+            f"decode window of {t} tokens would wrap the local-attention "
+            f"ring of layer kind 'local' (cache {tuple(st.k.shape)}, "
+            f"attn_window={window}): earlier in-window queries would "
+            f"attend to evicted slots.  Build the state with "
+            f"init_decode_state(insert_window >= {t}) (ring >= "
+            f"{window + t - 1} slots) or pass max_len= to vouch that the "
+            f"ring is capped at the position limit."
+        )
+    return msgs
+
+
+def run(cfg, *, batch: int = 2, max_len: int = 128,
+        windows: tuple[int, ...] = (1, 4, 8)) -> list[Finding]:
+    """Audit the ring contract for every window size a serve loop uses.
+
+    Builds abstract decode states exactly the way the engine does —
+    through the late-bound ``model.abstract_decode_state`` with
+    ``insert_window=t`` — and requires zero violations; then probes the
+    negative direction (a state built *without* slack must be rejected
+    for multi-token windows), so the guard itself is proven live, not
+    just never-triggered.
+    """
+    from repro.model import model as M
+
+    rcfg = cfg.reduced()
+    findings: list[Finding] = []
+    if rcfg.attn_window is None:
+        return [info(
+            PASS, LOCATION,
+            f"{cfg.name}: no local-attention layers — ring contract "
+            f"trivially holds",
+        )]
+
+    for t in windows:
+        state = M.abstract_decode_state(
+            rcfg, batch=batch, max_len=max_len, insert_window=t
+        )
+        msgs = ring_slack_violations(rcfg, state, t, max_len)
+        if msgs:
+            findings.append(error(
+                PASS, LOCATION,
+                f"{cfg.name}: state built with insert_window={t} still "
+                f"violates the ring contract: {msgs[0]}",
+                window=t,
+            ))
+    # The guard must actually fire: a slack-less ring + a window wider
+    # than the remaining slack, with no max_len vouching for the cap.
+    t_probe = max(windows)
+    if t_probe > 1:
+        bare = M.abstract_decode_state(
+            rcfg, batch=batch, max_len=max_len, insert_window=1
+        )
+        ring = min(max_len, rcfg.attn_window)
+        if ring < max_len and not ring_slack_violations(
+            rcfg, bare, t_probe, None
+        ):
+            findings.append(error(
+                PASS, LOCATION,
+                f"{cfg.name}: guard did not flag a {t_probe}-token window "
+                f"into a slack-less ring of {ring} slots — the trace-time "
+                f"check is dead",
+                window=t_probe,
+            ))
+    if not findings:
+        findings.append(info(
+            PASS, LOCATION,
+            f"{cfg.name}: ring contract holds for windows {windows} "
+            f"(attn_window={rcfg.attn_window}, max_len={max_len}) and the "
+            f"guard fires on slack-less states",
+            windows=list(windows),
+        ))
+    return findings

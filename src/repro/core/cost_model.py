@@ -321,7 +321,10 @@ def wkv_seqshard_traffic(b: int, h: int, t: int, dh: int, n_dev: int,
 
     state = dh * dh
     summary = state + dh
-    hops = max(1, int(math.ceil(math.log2(max(n_dev, 2))))) + 1
+    # ceil(log2 n) doubling rounds plus the final Δ=+1 boundary shift; at
+    # n = 1 the scan degenerates to that single shift (verified against
+    # the traced collective count by analysis.collectives' cross-check).
+    hops = int(math.ceil(math.log2(max(n_dev, 1)))) + 1
     tokens = 4 * t * dh                               # r, k, v, w
     naive = Traffic(
         dram_bytes=b * h * (n_dev - 1) * tokens * itemsize

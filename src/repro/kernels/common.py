@@ -26,6 +26,10 @@ and interpret-mode plumbing the per-kernel ``ops.py`` wrappers share.
 
 from __future__ import annotations
 
+import dataclasses
+import math
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -43,6 +47,9 @@ __all__ = [
     "pick_d_block",
     "largest_divisor_chunk",
     "halving_chunk",
+    "KernelResources",
+    "KERNEL_RESOURCE_SPECS",
+    "register_kernel_resources",
 ]
 
 
@@ -173,6 +180,65 @@ def rev_cumsum_rows(v: jax.Array, rows: int) -> jax.Array:
         acc = acc + shift_rows(acc, -shift, 0.0)
         shift *= 2
     return acc
+
+
+# --------------------------------------------------------------------------
+# Static resource declarations (repro.analysis.resources)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelResources:
+    """Static VMEM footprint of one Pallas kernel configuration.
+
+    Declared by each kernel's ``ops.py`` next to the ``pallas_call`` it
+    mirrors (``register_kernel_resources``) and audited — pure shape
+    math, nothing traced or executed — by
+    :mod:`repro.analysis.resources` against the per-core VMEM budget.
+
+    ``blocks``/``scratch`` are ``(name, block_shape, itemsize)`` tuples:
+    exactly the BlockSpec block shapes (ins + outs) and scratch_shapes of
+    the ``pallas_call``, so a kernel edit that grows a tile without
+    updating its declaration shows up as a divergence in review.
+    """
+
+    kernel: str                 # e.g. "wkv.fwd"
+    location: str               # repo-path-like site of the pallas_call
+    grid: tuple[int, ...]
+    blocks: tuple[tuple[str, tuple[int, ...], int], ...]
+    scratch: tuple[tuple[str, tuple[int, ...], int], ...] = ()
+
+    def block_bytes(self) -> int:
+        return sum(math.prod(s) * isz for _, s, isz in self.blocks)
+
+    def scratch_bytes(self) -> int:
+        return sum(math.prod(s) * isz for _, s, isz in self.scratch)
+
+    def vmem_bytes(self, *, double_buffer: int = 2) -> int:
+        """Estimated VMEM high-water mark: every in/out block held
+        ``double_buffer``-deep (the pipelined prefetch) + scratch."""
+        return double_buffer * self.block_bytes() + self.scratch_bytes()
+
+    def grid_steps(self) -> int:
+        return math.prod(self.grid) if self.grid else 1
+
+
+#: name -> spec fn.  A spec fn has signature ``fn(cfg) -> KernelResources
+#: | None`` (None: kernel not applicable to this config) and must *raise*
+#: (ValueError) on invalid geometry — the audit converts that into an
+#: error finding, which is how the wrappers' divisibility validation
+#: (``validate_divisible`` / ``pick_d_block`` / chunk resolution) gets
+#: checked without building a single array.
+KERNEL_RESOURCE_SPECS: dict[str, Callable] = {}
+
+
+def register_kernel_resources(name: str):
+    """Decorator: register a resource-spec fn under ``name``."""
+
+    def deco(fn):
+        KERNEL_RESOURCE_SPECS[name] = fn
+        return fn
+
+    return deco
 
 
 # --------------------------------------------------------------------------

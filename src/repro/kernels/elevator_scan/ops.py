@@ -21,7 +21,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import halving_chunk, interpret_default, on_tpu
+from repro.kernels.common import (
+    KernelResources,
+    halving_chunk,
+    interpret_default,
+    on_tpu,
+    pick_d_block,
+    register_kernel_resources,
+    validate_divisible,
+)
 from repro.kernels.elevator_scan.decode import (
     ELEVATOR_DECODE_WINDOW_MAX,
     elevator_decode_diff,
@@ -126,3 +134,55 @@ def _h0_or_zeros(a: jax.Array, h0: jax.Array | None) -> jax.Array:
         return h0
     b, _, d = a.shape
     return jnp.zeros((b, d), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Static resource declarations (repro.analysis.resources)
+# --------------------------------------------------------------------------
+
+def _elevator_geometry(cfg):
+    d = cfg.d_rnn
+    d_block = pick_d_block(d)
+    isz = jnp.dtype(cfg.dtype).itemsize
+    return d, d_block, isz
+
+
+@register_kernel_resources("elevator_scan.fwd")
+def _elevator_fwd_resources(cfg, *, t: int = 4096, chunk: int = 256):
+    """Chunked decayed scan (the RG-LRU recurrence)."""
+    if "rec" not in tuple(cfg.pattern):
+        return None
+    d, d_block, isz = _elevator_geometry(cfg)
+    c = halving_chunk(t, chunk)
+    validate_divisible("T", t, c)
+    seq = (1, c, d_block)
+    return KernelResources(
+        kernel="elevator_scan.fwd",
+        location="src/repro/kernels/elevator_scan/kernel.py:elevator_scan_pallas",
+        grid=(1, d // d_block, t // c),
+        blocks=(
+            ("a", seq, isz), ("x", seq, isz),
+            ("h0", (1, d_block), 4), ("out", seq, isz),
+        ),
+        scratch=(("h", (1, d_block), 4),),
+    )
+
+
+@register_kernel_resources("elevator_scan.decode_window")
+def _elevator_decode_resources(cfg, *, window: int = ELEVATOR_DECODE_WINDOW_MAX):
+    """Persistent-state decode window: h rides VMEM across the window."""
+    if "rec" not in tuple(cfg.pattern):
+        return None
+    d, d_block, isz = _elevator_geometry(cfg)
+    seq = (1, 1, d_block)
+    return KernelResources(
+        kernel="elevator_scan.decode_window",
+        location=("src/repro/kernels/elevator_scan/decode.py:"
+                  "elevator_decode_window_pallas"),
+        grid=(1, d // d_block, window),
+        blocks=(
+            ("a", seq, isz), ("x", seq, isz),
+            ("h0", (1, d_block), 4), ("out", seq, isz),
+        ),
+        scratch=(("h", (1, d_block), 4),),
+    )

@@ -4,7 +4,14 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.common import interpret_default, on_tpu
+from repro.kernels.common import (
+    KernelResources,
+    interpret_default,
+    on_tpu,
+    pick_d_block,
+    register_kernel_resources,
+    validate_divisible,
+)
 from repro.kernels.token_shift.kernel import token_shift_pallas
 from repro.kernels.token_shift.ref import token_shift_ref
 
@@ -17,3 +24,34 @@ def token_shift(x: jax.Array, w: jax.Array, *, use_kernel: bool | None = None):
     if kernel:
         return token_shift_pallas(x, w, interpret=interpret_default())
     return token_shift_ref(x, w)
+
+
+# --------------------------------------------------------------------------
+# Static resource declarations (repro.analysis.resources)
+# --------------------------------------------------------------------------
+
+@register_kernel_resources("token_shift.fwd")
+def _token_shift_resources(cfg, *, t: int = 4096, chunk: int = 256):
+    """Fused causal depthwise conv (the RG-LRU temporal mixer)."""
+    if "rec" not in tuple(cfg.pattern):
+        return None
+    import jax.numpy as jnp
+
+    taps = cfg.conv_width
+    d = cfg.d_rnn
+    c = min(chunk, t)
+    validate_divisible("T", t, c)
+    if c < taps:
+        raise ValueError(f"chunk {c} must be >= taps {taps}")
+    d_block = pick_d_block(d)
+    isz = jnp.dtype(cfg.dtype).itemsize
+    seq = (1, c, d_block)
+    return KernelResources(
+        kernel="token_shift.fwd",
+        location="src/repro/kernels/token_shift/kernel.py:token_shift_pallas",
+        grid=(1, d // d_block, t // c),
+        blocks=(
+            ("x", seq, isz), ("w", (taps, d_block), isz), ("out", seq, isz),
+        ),
+        scratch=(("tail", (taps - 1, d_block), 4),),
+    )

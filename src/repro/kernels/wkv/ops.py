@@ -33,32 +33,70 @@ calls hit the decode path with no caller change.
 
 from __future__ import annotations
 
+import contextlib
 import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_default, largest_divisor_chunk, on_tpu
+from repro.kernels.common import (
+    interpret_default,
+    largest_divisor_chunk,
+    on_tpu,
+    register_kernel_resources,
+    KernelResources,
+)
 from repro.kernels.wkv.decode import DECODE_WINDOW_MAX, wkv_decode_diff
 from repro.kernels.wkv.ref import wkv_sequential_ref
 from repro.kernels.wkv.vjp import wkv_diff, wkv_diff_summary
 
-# (T, chunk) pairs already warned about — dedupes across retraces/calls.
-_CHUNK_WARNED: set[tuple[int, int]] = set()
+# (T, chunk) pairs already warned about, keyed by warn scope — dedupes
+# across retraces/calls *within* a scope, so two models (or two test
+# cases) hitting the same awkward (T, chunk) each get their own warning.
+# The old module-global flat set deduped across unrelated configs: the
+# second model's chunk adjustment was silent for the whole process life.
+_CHUNK_WARNED: dict[str | None, set[tuple[int, int]]] = {}
+
+# Active scope stack (chunk_warning_scope); empty -> the None scope.
+_WARN_SCOPE: list[str | None] = []
 
 
-def resolve_chunk(t: int, chunk: int) -> int:
+def reset_chunk_warnings(scope: str | None = None, *, all_scopes: bool = False):
+    """Forget warned (T, chunk) pairs — one scope, or every scope."""
+    if all_scopes:
+        _CHUNK_WARNED.clear()
+    else:
+        _CHUNK_WARNED.pop(scope, None)
+
+
+@contextlib.contextmanager
+def chunk_warning_scope(tag: str | None):
+    """Scope chunk-adjustment warnings to ``tag`` for the duration —
+    model code wraps its dispatch so each config warns independently."""
+    _WARN_SCOPE.append(tag)
+    try:
+        yield
+    finally:
+        _WARN_SCOPE.pop()
+
+
+def resolve_chunk(t: int, chunk: int, *, scope: str | None = None) -> int:
     """Largest divisor of ``t`` no larger than ``chunk``; warns on adjust
-    (once per distinct ``(t, chunk)``)."""
+    (once per distinct ``(t, chunk)`` per warn scope)."""
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     c = largest_divisor_chunk(t, chunk)
-    if c != min(chunk, t) and (t, chunk) not in _CHUNK_WARNED:
-        _CHUNK_WARNED.add((t, chunk))
-        warnings.warn(
-            f"wkv chunk={chunk} does not divide T={t}; using chunk={c}",
-            stacklevel=3,
+    if c != min(chunk, t):
+        key = scope if scope is not None else (
+            _WARN_SCOPE[-1] if _WARN_SCOPE else None
         )
+        seen = _CHUNK_WARNED.setdefault(key, set())
+        if (t, chunk) not in seen:
+            seen.add((t, chunk))
+            warnings.warn(
+                f"wkv chunk={chunk} does not divide T={t}; using chunk={c}",
+                stacklevel=3,
+            )
     return c
 
 
@@ -75,6 +113,7 @@ def wkv_fused(
     chunk: int = 64,
     use_kernel: bool | None = None,
     decode: bool | None = None,
+    warn_scope: str | None = None,
 ):
     """RWKV6 WKV:  S_t = diag(w_t) S_{t-1} + k_t^T v_t;
     o_t = r_t · (S_{t-1} + u k_t^T v_t).
@@ -110,7 +149,7 @@ def wkv_fused(
         # autodiff through a few steps is trivial.
         out, s_out = wkv_sequential_ref(r, k, v, w, u, h0)
         return out.astype(r.dtype), s_out
-    c = resolve_chunk(t, chunk)
+    c = resolve_chunk(t, chunk, scope=warn_scope)
     return wkv_diff(c, interpret_default(), bool(kernel), r, k, v, w, u, h0)
 
 
@@ -124,6 +163,7 @@ def wkv_fused_summary(
     *,
     chunk: int = 64,
     use_kernel: bool | None = None,
+    warn_scope: str | None = None,
 ):
     """Like :func:`wkv_fused` but additionally returns ``a_seg`` (B, H, Dh)
     float32 — the segment decay product, i.e. the diag half of the
@@ -140,7 +180,96 @@ def wkv_fused_summary(
     if h0 is None:
         h0 = jnp.zeros((b, h, dh, dh), jnp.float32)
     kernel = on_tpu() if use_kernel is None else use_kernel
-    c = resolve_chunk(t, chunk)
+    c = resolve_chunk(t, chunk, scope=warn_scope)
     return wkv_diff_summary(
         c, interpret_default(), bool(kernel), r, k, v, w, u, h0
+    )
+
+
+# --------------------------------------------------------------------------
+# Static resource declarations (repro.analysis.resources)
+# --------------------------------------------------------------------------
+
+_WKV_DH = 64  # RWKV6 head-dim convention (model.recurrent.RWKV_HEAD_DIM)
+
+
+def _wkv_geometry(cfg, t: int, chunk: int):
+    import jax.numpy as jnp
+
+    if cfg.d_model % _WKV_DH:
+        raise ValueError(
+            f"{cfg.name}: d_model={cfg.d_model} not divisible by the WKV "
+            f"head dim {_WKV_DH}"
+        )
+    h = cfg.d_model // _WKV_DH
+    c = resolve_chunk(t, chunk)
+    isz = jnp.dtype(cfg.dtype).itemsize
+    return h, c, isz
+
+
+@register_kernel_resources("wkv.fwd")
+def _wkv_fwd_resources(cfg, *, t: int = 4096, chunk: int = 64):
+    """Chunked forward elevator sweep (inference: no state history)."""
+    if "rwkv" not in tuple(cfg.pattern):
+        return None
+    dh = _WKV_DH
+    h, c, isz = _wkv_geometry(cfg, t, chunk)
+    seq = (1, 1, c, dh)
+    state = (1, 1, dh, dh)
+    return KernelResources(
+        kernel="wkv.fwd",
+        location="src/repro/kernels/wkv/kernel.py:_wkv_pallas_call",
+        grid=(1, h, t // c),
+        blocks=(
+            ("r", seq, isz), ("k", seq, isz), ("v", seq, isz),
+            ("w", seq, isz), ("u", (1, dh), isz), ("h0", state, 4),
+            ("out", seq, isz), ("s_out", state, 4),
+        ),
+        scratch=(("S", (dh, dh), 4),),
+    )
+
+
+@register_kernel_resources("wkv.train")
+def _wkv_train_resources(cfg, *, t: int = 4096, chunk: int = 64):
+    """Forward sweep with the per-chunk state history the VJP replays."""
+    base = _wkv_fwd_resources(cfg, t=t, chunk=chunk)
+    if base is None:
+        return None
+    dh = _WKV_DH
+    return KernelResources(
+        kernel="wkv.train",
+        location="src/repro/kernels/wkv/kernel.py:_wkv_pallas_call",
+        grid=base.grid,
+        blocks=base.blocks + (("s_hist", (1, 1, 1, dh, dh), 4),),
+        scratch=base.scratch,
+    )
+
+
+@register_kernel_resources("wkv.decode_window")
+def _wkv_decode_resources(cfg, *, window: int = DECODE_WINDOW_MAX):
+    """Persistent-state decode window: S rides VMEM across the window."""
+    if "rwkv" not in tuple(cfg.pattern):
+        return None
+    import jax.numpy as jnp
+
+    if cfg.d_model % _WKV_DH:
+        raise ValueError(
+            f"{cfg.name}: d_model={cfg.d_model} not divisible by the WKV "
+            f"head dim {_WKV_DH}"
+        )
+    dh = _WKV_DH
+    h = cfg.d_model // dh
+    isz = jnp.dtype(cfg.dtype).itemsize
+    seq = (1, 1, 1, dh)
+    state = (1, 1, dh, dh)
+    return KernelResources(
+        kernel="wkv.decode_window",
+        location="src/repro/kernels/wkv/decode.py:wkv_decode_window_pallas",
+        grid=(1, h, window),
+        blocks=(
+            ("r", seq, isz), ("k", seq, isz), ("v", seq, isz),
+            ("w", seq, isz), ("u", (1, dh), isz), ("h0", state, 4),
+            ("out", seq, isz), ("s_out", state, 4),
+        ),
+        scratch=(("S", (dh, dh), 4),),
     )

@@ -283,32 +283,16 @@ def _check_ring_slack(cfg, state, t: int, max_len: int | None):
     window's earlier queries still attend to (corrupt logits, no error).
     ``max_len=None`` (caller didn't vouch for the cap) treats any
     slack-deficient ring as an error.
+
+    The rule itself lives in :mod:`repro.analysis.ringslack` (one source
+    of truth for the trace-time guard and the static audit); this wrapper
+    only turns violations into the trace-time ``ValueError``.
     """
-    if t <= 1 or state is None or cfg.attn_window is None:
-        return
-    pattern, n_periods, remainder = tf.plan_groups(cfg)
-    layers = []
-    if n_periods > 0 and state.get("scanned") is not None:
-        layers += list(zip(pattern, state["scanned"]))
-    layers += list(zip(remainder, state["remainder"]))
-    window = cfg.attn_window
-    for kind, st in layers:
-        if kind != "local" or not isinstance(st, KVCache):
-            continue
-        s_ring = st.k.shape[-2]
-        if s_ring >= window + t - 1:
-            continue                       # enough slack for this window
-        if max_len is not None and s_ring >= max_len:
-            continue                       # capped ring: never wraps
-        raise ValueError(
-            f"decode window of {t} tokens would wrap the local-attention "
-            f"ring of layer kind 'local' (cache {tuple(st.k.shape)}, "
-            f"attn_window={window}): earlier in-window queries would "
-            f"attend to evicted slots.  Build the state with "
-            f"init_decode_state(insert_window >= {t}) (ring >= "
-            f"{window + t - 1} slots) or pass max_len= to vouch that the "
-            f"ring is capped at the position limit."
-        )
+    from repro.analysis.ringslack import ring_slack_violations
+
+    msgs = ring_slack_violations(cfg, state, t, max_len)
+    if msgs:
+        raise ValueError(msgs[0])
 
 
 def decode_step(params, cfg, state, tokens: jax.Array, lengths: jax.Array,

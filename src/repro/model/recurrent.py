@@ -268,6 +268,9 @@ def apply_rwkv_block(params, x: jax.Array, cfg, *, state: RecState | None = None
             chunk=chunk,
             use_kernel=use_kernel,
             decode=state is not None,
+            # Per-config warn dedup: two configs sharing an awkward
+            # (T, chunk) each get their own chunk-adjustment warning.
+            warn_scope=getattr(cfg, "name", None),
         )
 
     out = out.swapaxes(1, 2).reshape(b, t, d).astype(x.dtype)

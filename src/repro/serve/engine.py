@@ -209,6 +209,64 @@ def make_cache_prefill_step(cfg, mesh=None, *, min_len: int = SEQ_PREFILL_MIN_T,
     return prefill
 
 
+def audit_jit_entrypoints(cfg, *, batch: int = 2, max_len: int = 64,
+                          decode_window: int = 4, prompt: int = 32):
+    """Registration hook for :mod:`repro.analysis.donation`: every jit the
+    serve engine dispatches, with abstract arguments sufficient to lower
+    it (nothing executes — params and state are ShapeDtypeStructs).
+
+    Adding a jit to the engine means adding it here; the donation pass
+    audits exactly this list, so an unregistered jit is a review-visible
+    gap rather than a silently un-audited one.
+    """
+    from repro.analysis.donation import JitEntry
+
+    sds = jax.ShapeDtypeStruct
+    eng = ServeEngine(cfg, params=M.abstract_params(cfg), max_len=max_len,
+                      decode_window=decode_window)
+    k = max(1, decode_window)
+    p = _bucket32(prompt)
+    params = eng.params
+    state = M.abstract_decode_state(
+        cfg, batch=batch, max_len=max_len,
+        insert_window=max(k, _bucket32(prompt)),
+    )
+    i32, b = jnp.int32, batch
+    vec = sds((b,), i32)
+    key = sds((2,), jnp.uint32)
+    here = "src/repro/serve/engine.py:ServeEngine"
+    return [
+        JitEntry(
+            "serve.decode_step", eng._decode,
+            (params, state, sds((b, 1), i32), sds((), i32)),
+            f"{here}.__post_init__",
+        ),
+        JitEntry(
+            "serve.prefill", eng._prefill,
+            (params, state, sds((b, p), i32), vec),
+            "src/repro/serve/engine.py:make_cache_prefill_step",
+        ),
+        JitEntry(
+            "serve.window", eng._window_step(k, last=False),
+            (params, state, sds((b, 1), i32), vec),
+            f"{here}._window_step",
+        ),
+        JitEntry(
+            "serve.serve_window", eng._serve_window(k, 0.0, 0, None),
+            (params, state, sds((b, 1), i32), vec, vec, vec,
+             sds((b,), jnp.bool_), vec, key),
+            f"{here}._serve_window",
+        ),
+        JitEntry(
+            "serve.admit", eng._admit_step(p, 0.0, 0, None),
+            (params, state, sds((b, p), i32), sds((b,), jnp.bool_), vec,
+             vec, vec, vec, vec, vec, sds((b,), jnp.bool_),
+             sds((b, 1), i32), key),
+            f"{here}._admit_step",
+        ),
+    ]
+
+
 @dataclasses.dataclass
 class Request:
     """One serve request: a prompt, a generation budget, and an optional

@@ -152,3 +152,51 @@ def make_train_step(
         return TrainState(new_params, new_opt, ef), metrics
 
     return train_step
+
+
+def make_jitted_train_step(
+    cfg,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    *,
+    compress: bool = False,
+    accum_dtype=jnp.float32,
+    donate: bool = True,
+):
+    """The canonical jitted train step: ``TrainState`` donated.
+
+    Params, optimizer moments, and error-feedback residuals are all
+    replaced wholesale every step, so the state pytree is the textbook
+    donation target — without it XLA copies two full model-sized trees
+    (params + moments) through HBM per step.  Launchers should use this
+    instead of wrapping :func:`make_train_step` in a bare ``jax.jit``
+    (which is exactly the forgot-``donate_argnums`` regression the
+    donation pass in :mod:`repro.analysis` guards against).
+    """
+    step = make_train_step(
+        cfg, opt_cfg, compress=compress, accum_dtype=accum_dtype
+    )
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def audit_jit_entrypoints(cfg, *, batch: int | None = None, seq: int = 16):
+    """Registration hook for :mod:`repro.analysis.donation`: the train
+    step jit with abstract state/batch (nothing executes)."""
+    from repro.analysis.donation import JitEntry
+
+    b = batch if batch is not None else 2 * max(1, cfg.microbatch)
+    bt = {
+        "tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+    }
+    if cfg.is_enc_dec:
+        bt["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return [
+        JitEntry(
+            "train.step", make_jitted_train_step(cfg),
+            (abstract_train_state(cfg), bt),
+            "src/repro/train/step.py:make_jitted_train_step",
+            donated="TrainState",
+        ),
+    ]

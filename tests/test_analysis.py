@@ -1,0 +1,277 @@
+"""Tests for ``repro.analysis``: the static-audit subsystem.
+
+Three layers:
+
+* **clean tree** — every pass, on every default arch family, produces
+  findings and none of them are errors (the CLI-green property, asserted
+  in-process so a failure points at the pass, not at an exit code);
+* **mutations** — five deliberate regressions (dropped donation, caller
+  -side f32 upcast, slack-less ring, oversized VMEM scratch, unbucketed
+  admission shapes) each caught by exactly the pass that owns the
+  invariant, with the right severity and a location that points at the
+  contract;
+* **plumbing** — the Finding table/severity helpers and the per-scope
+  chunk-adjustment warning fix (PR 7 satellite: ``resolve_chunk``'s
+  warn-once set used to be a single module global shared across configs).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import findings as F
+from repro.analysis.registry import DEFAULT_ARCHS, PASS_MODULES, get_pass
+from repro.configs.registry import get_config
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+# --------------------------------------------------------------------------
+# Clean tree: every pass x every arch family audits green
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", DEFAULT_ARCHS)
+@pytest.mark.parametrize("pass_name", sorted(PASS_MODULES))
+def test_clean_tree_pass_is_green(pass_name, arch):
+    cfg = get_config(arch)
+    findings = get_pass(pass_name).run(cfg)
+    assert findings, f"{pass_name} was silent for {arch} (must report evidence)"
+    assert all(f.pass_name == pass_name for f in findings)
+    errs = F.errors(findings)
+    assert not errs, "\n" + F.format_table(errs, title=f"{arch}/{pass_name}")
+
+
+def test_cli_green_exit_and_table():
+    """The module CLI (what tier-1 lane 4 runs) exits 0 on a clean tree
+    and prints a per-arch findings table.  Cheap passes only — the full
+    sweep belongs to the tier-1 lane, not the unit suite."""
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--arch", "rwkv6-1.6b",
+         "--passes", "resources,ringslack", "--strict"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "rwkv6-1.6b" in r.stdout
+    assert "info" in r.stdout
+
+
+# --------------------------------------------------------------------------
+# Mutation 1: drop donate_argnums from the decode-window jit
+# --------------------------------------------------------------------------
+
+def test_mutation_dropped_donation_is_caught(monkeypatch):
+    from repro.analysis import donation
+    from repro.serve.engine import ServeEngine
+
+    orig = ServeEngine._window_step
+
+    def no_donate(self, k, last):
+        # Same traced function, donation dropped: the silent perf bug.
+        return jax.jit(orig(self, k, last).__wrapped__)
+
+    monkeypatch.setattr(ServeEngine, "_window_step", no_donate)
+    findings = donation.run(get_config("rwkv6-1.6b"))
+    errs = F.errors(findings)
+    assert errs, "donation pass missed the un-donated window jit"
+    assert any(
+        e.location.endswith("_window_step")
+        and "input_output_alias" in e.message
+        for e in errs
+    ), F.format_table(errs)
+    # Only the mutated entry fails; the untouched jits still audit green.
+    assert all(e.location.endswith("_window_step") for e in errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 2: caller-side f32 upcast on the WKV dispatch path
+# --------------------------------------------------------------------------
+
+def test_mutation_f32_upcast_is_caught(monkeypatch):
+    from repro.analysis import dtype_flow
+    from repro.kernels.wkv import ops as wkv_ops
+
+    orig = wkv_ops.wkv_fused
+
+    def upcast_dispatch(r, k, v, w, u, h0, **kw):
+        # The classic regression: "for safety" float32 on the I/O path.
+        f32 = jnp.float32
+        out, s = orig(r.astype(f32), k.astype(f32), v.astype(f32),
+                      w.astype(f32), u.astype(f32), h0, **kw)
+        return out.astype(r.dtype), s
+
+    monkeypatch.setattr(wkv_ops, "wkv_fused", upcast_dispatch)
+    findings = dtype_flow.run(get_config("rwkv6-1.6b"))
+    errs = F.errors(findings)
+    assert errs, "dtype_flow missed the caller-side upcast"
+    assert any(
+        "upcast" in e.message and e.location.endswith("wkv_fused")
+        for e in errs
+    ), F.format_table(errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 3: decode state built without ring slack
+# --------------------------------------------------------------------------
+
+def test_mutation_slackless_ring_is_caught(monkeypatch):
+    from repro.analysis import ringslack
+    from repro.model import model as M
+
+    orig = M.abstract_decode_state
+
+    def ignores_insert_window(cfg, **kw):
+        kw["insert_window"] = 1     # state sized as if windows were 1 token
+        return orig(cfg, **kw)
+
+    monkeypatch.setattr(M, "abstract_decode_state", ignores_insert_window)
+    findings = ringslack.run(get_config("gemma3-1b"))
+    errs = F.errors(findings)
+    assert errs, "ringslack missed the slack-less decode state"
+    assert any(
+        "ring contract" in e.message
+        and e.location.endswith("_check_ring_slack")
+        for e in errs
+    ), F.format_table(errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 4: a kernel declares VMEM scratch past the per-core budget
+# --------------------------------------------------------------------------
+
+def test_mutation_oversized_vmem_scratch_is_caught(monkeypatch):
+    from repro.analysis import resources
+    from repro.kernels import common
+
+    resources._load_specs()     # ensure the real registrations exist first
+    huge = common.KernelResources(
+        kernel="mutant.fwd",
+        location="src/repro/kernels/mutant.py:mutant_pallas_call",
+        grid=(1, 1, 1),
+        blocks=(("x", (1, 128), 4),),
+        scratch=(("acc", (4096, 4096), 4),),     # 64 MiB of scratch
+    )
+    monkeypatch.setitem(
+        common.KERNEL_RESOURCE_SPECS, "mutant.fwd", lambda cfg: huge
+    )
+    findings = resources.run(get_config("rwkv6-1.6b"))
+    errs = F.errors(findings)
+    assert errs, "resources pass missed the VMEM blowout"
+    assert any(
+        "exceeds" in e.message and "mutant.py" in e.location
+        and e.metrics.get("vmem_bytes", 0) > resources.VMEM_BUDGET_BYTES
+        for e in errs
+    ), F.format_table(errs)
+    # Real kernels still fit: the mutant is the only error.
+    assert all("mutant.py" in e.location for e in errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 5: admission stops bucketing prompt shapes (retrace leak)
+# --------------------------------------------------------------------------
+
+def test_mutation_unbucketed_admission_is_caught(monkeypatch):
+    from repro.analysis import retrace
+    from repro.serve import engine as eng_mod
+
+    # Identity "bucketing": every distinct prompt length becomes its own
+    # jit-cache key.  slots=1 serializes admissions so each request's
+    # exact length reaches the cache key.
+    monkeypatch.setattr(
+        eng_mod, "_bucket32", lambda length: max(int(length), 1)
+    )
+    findings = retrace.run(get_config("rwkv6-1.6b"), slots=1)
+    errs = F.errors(findings)
+    assert errs, "retrace sentinel missed the unbucketed admission shapes"
+    assert any(
+        "bucketing" in e.message and e.metrics.get("admits", 0) > 2
+        for e in errs
+    ), F.format_table(errs)
+
+
+# --------------------------------------------------------------------------
+# Satellite: resolve_chunk warns once per scope, not once per process
+# --------------------------------------------------------------------------
+
+def test_resolve_chunk_warns_once_per_scope():
+    from repro.kernels.wkv import ops as wkv_ops
+
+    wkv_ops.reset_chunk_warnings(all_scopes=True)
+    try:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            assert wkv_ops.resolve_chunk(10, 4, scope="cfg-a") == 2
+            wkv_ops.resolve_chunk(10, 4, scope="cfg-a")   # deduped
+            wkv_ops.resolve_chunk(10, 4, scope="cfg-b")   # fresh scope
+        assert len(rec) == 2, [str(w.message) for w in rec]
+
+        # The context manager scopes call sites that can't thread a tag.
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            with wkv_ops.chunk_warning_scope("cfg-c"):
+                wkv_ops.resolve_chunk(10, 4)
+                wkv_ops.resolve_chunk(10, 4)              # deduped in scope
+            wkv_ops.resolve_chunk(10, 4)                  # None scope: new
+        assert len(rec) == 2, [str(w.message) for w in rec]
+
+        # Per-scope reset forgets one config without silencing others.
+        wkv_ops.reset_chunk_warnings("cfg-a")
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            wkv_ops.resolve_chunk(10, 4, scope="cfg-a")   # warns again
+            wkv_ops.resolve_chunk(10, 4, scope="cfg-b")   # still deduped
+        assert len(rec) == 1, [str(w.message) for w in rec]
+    finally:
+        wkv_ops.reset_chunk_warnings(all_scopes=True)
+
+
+def test_wkv_fused_threads_warn_scope():
+    from repro.kernels.wkv import ops as wkv_ops
+
+    wkv_ops.reset_chunk_warnings(all_scopes=True)
+    try:
+        r = jnp.zeros((1, 1, 10, 4), jnp.float32)
+        u = jnp.zeros((1, 4), jnp.float32)
+        h0 = jnp.zeros((1, 1, 4, 4), jnp.float32)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            for scope in ("model-a", "model-a", "model-b"):
+                wkv_ops.wkv_fused(r, r, r, r, u, h0, chunk=4,
+                                  use_kernel=False, warn_scope=scope)
+        assert len(rec) == 2, [str(w.message) for w in rec]
+    finally:
+        wkv_ops.reset_chunk_warnings(all_scopes=True)
+
+
+# --------------------------------------------------------------------------
+# Plumbing: findings helpers
+# --------------------------------------------------------------------------
+
+def test_findings_severity_and_table():
+    fs = [
+        F.info("p", "src/a.py:f", "fine", n=1),
+        F.warn("p", "src/b.py:g", "iffy"),
+        F.error("q", "src/c.py:h", "broken", bytes=7),
+    ]
+    assert F.worst(fs) == F.Severity.ERROR
+    assert F.worst([]) == F.Severity.INFO
+    assert [f.location for f in F.errors(fs)] == ["src/c.py:h"]
+    assert str(F.Severity.ERROR) == "error"
+    assert F.Severity.ERROR > F.Severity.WARN > F.Severity.INFO
+
+    table = F.format_table(fs, title="T")
+    lines = table.splitlines()
+    assert lines[0] == "T"
+    # Most severe first, metrics rendered inline.
+    assert lines[1].lstrip().startswith("error")
+    assert "bytes=7" in lines[1]
+    assert "src/a.py:f" in table and "n=1" in table
+    assert F.format_table([]) == "  (no findings)"

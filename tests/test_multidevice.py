@@ -10,8 +10,10 @@ Two scripts: SCRIPT exercises the core primitives; SCRIPT_WKV is the
 sequence-parallel WKV acceptance suite — forward and gradient parity of
 ``wkv_seqshard`` against the single-device fused path on 8 devices, a
 jaxpr audit proving only O(Dh²) segment summaries (never token
-activations) cross the ``seq`` axis, the model-level ``prefill_seq``
-dispatch and the serve-engine long-context prefill step.
+activations) cross the ``seq`` axis — via the shared
+``repro.analysis.collectives`` pass, which replaced the walker that used
+to live inline here — the model-level ``prefill_seq`` dispatch and the
+serve-engine long-context prefill step.
 """
 
 import subprocess
@@ -259,56 +261,25 @@ SCRIPT_WKV = textwrap.dedent(
     # --- jaxpr audit: only segment summaries cross the seq axis --------------
     # Every collective over the mesh (ppermute hops of the carry, the final
     # masked psum) must move O(Dh^2) summaries; a token-sized operand
-    # (B, H, T/n, Dh) would mean the protocol regressed to a gather.
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            yield eqn
-            for val in eqn.params.values():
-                vals = val if isinstance(val, (list, tuple)) else [val]
-                for item in vals:
-                    sub = getattr(item, "jaxpr", item)
-                    if hasattr(sub, "eqns"):
-                        yield from walk(sub)
+    # (B, H, T/n, Dh) would mean the protocol regressed to a gather.  The
+    # walker that used to live inline here is now the shared static-audit
+    # pass (repro.analysis.collectives) — same budget, same gather ban.
+    from repro.analysis.collectives import audit_collectives, has_reverse_hops
+    from repro.analysis.findings import errors, format_table
 
     summary_size = b * h * dh * dh          # the (Dh, Dh) state summary
-    token_size = b * h * (t // 8) * dh      # a per-shard activation block
-
-    def seq_axes(eqn):
-        ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
-        return "seq" in (ax if isinstance(ax, tuple) else (ax,))
-
-    def audit(closed, what):
-        comms = []
-        for eqn in walk(closed.jaxpr):
-            name = eqn.primitive.name
-            if name in ("all_gather", "all_to_all", "all_gather_invariant"):
-                if seq_axes(eqn):
-                    raise AssertionError(f"{what}: gather collective {name}")
-            if name in ("ppermute", "psum", "psum_invariant") and seq_axes(eqn):
-                sizes = [int(np.prod(v.aval.shape)) for v in eqn.invars
-                         if hasattr(v, "aval") and v.aval.shape]
-                comms.append((name, max(sizes, default=0)))
-        assert comms, f"{what}: no collectives found over the seq axis"
-        biggest = max(s for _, s in comms)
-        assert biggest <= summary_size, (
-            f"{what}: a collective moved {biggest} elements "
-            f"(> summary {summary_size}; token block = {token_size}) "
-            f"-- token activations crossed the seq axis: {comms}")
-        return comms
 
     fwd_jaxpr = jax.make_jaxpr(shard)(r, k, v, w, u, h0)
-    audit(fwd_jaxpr, "forward")
     bwd_jaxpr = jax.make_jaxpr(
         jax.grad(loss(shard), argnums=tuple(range(6))))(r, k, v, w, u, h0)
-    audit(bwd_jaxpr, "backward")
+    for what, closed in (("forward", fwd_jaxpr), ("backward", bwd_jaxpr)):
+        bad = errors(audit_collectives(
+            closed, axis="seq", max_elements=summary_size, what=what))
+        assert not bad, format_table(bad)
     # The transposed carry is the device-space *reverse* elevator: the
     # backward must contain ppermute hops running high->low shard index.
-    rev_hops = [
-        eqn for eqn in walk(bwd_jaxpr.jaxpr)
-        if eqn.primitive.name == "ppermute" and seq_axes(eqn)
-        and any(src > dst for src, dst in eqn.params["perm"])
-    ]
-    assert rev_hops, "backward jaxpr has no reverse-direction ppermute hops"
+    assert has_reverse_hops(bwd_jaxpr, "seq"), (
+        "backward jaxpr has no reverse-direction ppermute hops")
 
     # --- model level: apply_rwkv_block under prefill_seq rules ---------------
     from repro.model import recurrent as rec
