@@ -47,6 +47,20 @@ python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
     --decode-window 2 --chaos-seed 7 --chaos-nan-at 2 --chaos-drop-at 4 \
     --watchdog-timeout 30
 
+echo "== tier-1 lane 3d: paged-serve smoke (pooled KV + shared prefix) =="
+# Pooled KV pages + page tables + one 40-token shared prefix, sampled
+# decoding, tight pool (4 private pages per node).  The launcher exits
+# nonzero unless every stream is bit-identical to a dense reference
+# engine, the page-table audit is clean, and the explicitly sized pool
+# beats the dense footprint.
+python -m repro.launch.serve --arch gemma3-1b --smoke --continuous --paged \
+    --requests 5 --slots 2 --prompt-len 6 --new-tokens 6 --max-len 128 \
+    --decode-window 2 --prefix-len 40 --pool-pages 4 \
+    --temperature 0.8 --top-k 16
+# The paged bench row (admission-cost ratio + footprint fields) must be
+# present in the committed benchmark results.
+grep -q '"name": "serve_paged"' BENCH_kernels.json
+
 echo "== tier-1 lane 4: static audit (repro.analysis, strict) =="
 # Every analysis pass over every default arch family — collectives,
 # donation, dtype flow, VMEM budgets, ring slack, retrace sentinel —

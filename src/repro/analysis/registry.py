@@ -25,6 +25,7 @@ DEFAULT_ARCHS = ("rwkv6-1.6b", "recurrentgemma-2b", "gemma3-1b")
 PASS_MODULES = {
     "resources": "repro.analysis.resources",
     "ringslack": "repro.analysis.ringslack",
+    "paging": "repro.analysis.paging",
     "dtype_flow": "repro.analysis.dtype_flow",
     "collectives": "repro.analysis.collectives",
     "donation": "repro.analysis.donation",

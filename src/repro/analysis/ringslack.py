@@ -29,7 +29,7 @@ def ring_slack_violations(cfg, state, t: int,
     slack-deficient ring as a violation.
     """
     from repro.model import transformer as tf
-    from repro.model.model import KVCache
+    from repro.model.model import KVCache, PagedKVCache
 
     if t <= 1 or state is None or cfg.attn_window is None:
         return []
@@ -41,9 +41,13 @@ def ring_slack_violations(cfg, state, t: int,
     window = cfg.attn_window
     msgs = []
     for kind, st in layers:
-        if kind != "local" or not isinstance(st, KVCache):
+        if kind != "local" or not isinstance(st, (KVCache, PagedKVCache)):
             continue
-        s_ring = st.k.shape[-2]
+        # A paged node's ring extent is its dense-equivalent view size
+        # (the page table only changes *where* slots live, not how many
+        # there are); a dense node's is its sequence axis.
+        s_ring = (st.s_view if isinstance(st, PagedKVCache)
+                  else st.k.shape[-2])
         if s_ring >= window + t - 1:
             continue                       # enough slack for this window
         if max_len is not None and s_ring >= max_len:

@@ -22,6 +22,17 @@ recovered with all requests still completing:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --continuous --requests 6 --slots 2 --chaos-seed 7 --chaos-nan-at 2
+
+``--paged`` swaps the per-slot dense KV rings for a pooled page store
+(``--page-size`` / ``--pool-pages``) and runs the paged drill: the same
+requests served by a dense reference engine, exiting nonzero unless
+every stream is bit-identical and the page-table audit is clean.
+``--prefix-len N`` additionally registers one N-token shared prefix and
+admits every request through it (recurrent-state prefix sharing):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --continuous --paged --requests 5 --slots 2 --max-len 128 \
+      --prefix-len 40 --pool-pages 4
 """
 
 from __future__ import annotations
@@ -86,6 +97,18 @@ def main():
                     help="pin NaN faults to decode-dispatch indices")
     ap.add_argument("--chaos-drop-at", type=int, nargs="*", default=())
     ap.add_argument("--chaos-hang-at", type=int, nargs="*", default=())
+    ap.add_argument("--paged", action="store_true",
+                    help="[--continuous] pooled KV pages + per-slot page "
+                         "tables (drill mode: exits nonzero unless every "
+                         "stream is bit-identical to the dense engine)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="[--paged] tokens per KV page (multiple of 32)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="[--paged] private pages per node pool "
+                         "(default: dense-equivalent sizing)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="[--paged] register one shared prefix of this "
+                         "many tokens and admit every request through it")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -94,10 +117,15 @@ def main():
     if cfg.is_enc_dec:
         raise SystemExit("enc-dec serving demo: use examples/serve_decode.py")
 
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged requires --continuous")
+
     print(f"initializing {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
     params = M.init_params(cfg, jax.random.key(args.seed))
     engine = ServeEngine(cfg, params, max_len=args.max_len,
-                         decode_window=args.decode_window)
+                         decode_window=args.decode_window,
+                         paged=args.paged, page_size=args.page_size,
+                         pool_pages=args.pool_pages)
     rng = np.random.default_rng(args.seed)
 
     if args.continuous:
@@ -120,6 +148,30 @@ def main():
             )
             for _ in range(args.requests)
         ]
+        if args.paged and args.prefix_len:
+            if args.prefix_len < args.page_size:
+                raise SystemExit("--prefix-len must cover at least one page")
+            prefix = rng.integers(
+                0, cfg.vocab_size, (args.prefix_len,)).astype(np.int32)
+            pid = engine.register_prefix(prefix)
+            reqs = [
+                Request(tokens=np.concatenate(
+                            [prefix, np.asarray(r.tokens, np.int32)]),
+                        max_new_tokens=r.max_new_tokens, prefix_id=pid)
+                for r in reqs
+            ]
+        paged_ref = None
+        if args.paged:
+            # Dense reference on the same weights/requests: the paged
+            # drill's bit-identity oracle (prefix admissions included —
+            # the dense engine just re-prefills the prefix per request).
+            dense_eng = ServeEngine(cfg, params, max_len=args.max_len,
+                                    decode_window=args.decode_window)
+            paged_ref = dense_eng.serve(
+                [Request(tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+                 for r in reqs],
+                slots=args.slots, temperature=args.temperature,
+                top_k=args.top_k, eos_id=args.eos_id, seed=args.seed)
         useful = sum(r.max_new_tokens for r in reqs)
         chaos = baseline = None
         if args.chaos_seed is not None:
@@ -189,6 +241,34 @@ def main():
                         "fault-free run — isolation invariant broken")
             print("chaos drill: all faults recovered; every stream "
                   "bit-identical to the fault-free run")
+        if args.paged:
+            pg = engine.last_paged_stats
+            print(f"paged: page_size={pg['page_size']} "
+                  f"shared_pages={pg['shared_pages']} "
+                  f"pool_bytes={pg['pool_bytes']} "
+                  f"dense_bytes={pg['dense_bytes']} "
+                  f"peak_mapped_bytes={pg['peak_mapped_bytes']} "
+                  f"prefix_admissions={st['prefix_admissions']} "
+                  f"page_waits={st['page_waits']}")
+            if pg["page_table_violations"]:
+                raise SystemExit(
+                    f"paged drill: {pg['page_table_violations']} page-"
+                    "table violations (double-map / freed-page reach)")
+            if args.pool_pages is not None and (
+                    pg["pool_bytes"] >= pg["dense_bytes"]):
+                raise SystemExit(
+                    "paged drill: explicitly sized pool does not beat the "
+                    f"dense footprint ({pg['pool_bytes']} >= "
+                    f"{pg['dense_bytes']} bytes)")
+            for i, (want, got) in enumerate(zip(paged_ref, outs)):
+                if want.outcome != got.outcome or not np.array_equal(
+                        np.asarray(want), np.asarray(got)):
+                    raise SystemExit(
+                        f"paged drill: request {i} diverged from the dense "
+                        f"engine ({want.outcome} vs {got.outcome}) — paging "
+                        "must be an exact storage-layout change")
+            print("paged drill: every stream bit-identical to the dense "
+                  "engine")
         return
 
     prompts = jnp.asarray(

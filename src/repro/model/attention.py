@@ -9,6 +9,7 @@ point-to-point pattern rather than a KV all-gather.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import NamedTuple
 
@@ -26,6 +27,55 @@ class KVCache(NamedTuple):
     length: jax.Array     # (B,) int32 — tokens filled per request (a scalar
     #                       broadcasts: every request at the same position,
     #                       the lockstep special case)
+
+
+#: Physical page 0 of every page pool is the *null page*: never allocated,
+#: never written (unmapped logical pages scatter with index -1 / mode
+#: "drop", and gathers clip unmapped entries here), so it stays exactly
+#: zero for the life of the pool — a masked read of an unmapped slot sees
+#: the same zeros a dense cache's never-written slot holds.
+NULL_PAGE = 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """A KV cache stored as pooled fixed-size pages + a per-slot page table.
+
+    The dense cache's ``(B, Hkv, S, Dh)`` sequence axis becomes
+    indirection: logical ring slot ``i`` (= position mod ``s_view``) of
+    request ``b`` lives at offset ``i % page_size`` of physical page
+    ``page_table[b, i // page_size]``.  ``s_view`` is *exactly* the
+    sequence extent the dense cache would have had (``max_len``, or the
+    local ring ``min(max_len, window + insert_window - 1)``) — the last
+    logical page may be partial — so the gathered view has the dense
+    cache's shape and valid content, the positional masks in
+    :func:`_decode_attention` apply unchanged, and token streams are
+    bit-identical to the dense engine.  Freed/unmapped pages are
+    unreachable by construction: an unmapped table entry is ``-1``, whose
+    gather clips to the all-zero :data:`NULL_PAGE`, and every slot a
+    stale page could alias maps to an absolute position the masks
+    already reject.
+
+    ``s_view`` and ``page_size`` are pytree aux data (static at trace
+    time); the arrays are the children, so the cache rides ``lax.scan``
+    stacking, donation, and checkpointing like any NamedTuple state node.
+    """
+
+    k: jax.Array           # (P, page_size, Hkv, Dh) pooled pages
+    v: jax.Array           # (P, page_size, Hkv, Dh)
+    page_table: jax.Array  # (B, NL) int32 physical page ids; -1 = unmapped
+    length: jax.Array      # (B,) int32 — tokens filled per request
+    s_view: int            # static: dense-equivalent sequence extent
+    page_size: int         # static: tokens per page
+
+    def tree_flatten(self):
+        return ((self.k, self.v, self.page_table, self.length),
+                (self.s_view, self.page_size))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
 
 
 def init_attention(mk, cfg, name: str, *, cross: bool = False):
@@ -114,13 +164,29 @@ def apply_attention(
         # because for a full-length cache length + t <= S.  Lengths are
         # per-request: each slot inserts at — and attends from — its own
         # position.
-        k_cache = _masked_insert(kv_cache.k, k, kv_cache.length, token_mask)
-        v_cache = _masked_insert(kv_cache.v, v, kv_cache.length, token_mask)
         advance = (
             jnp.int32(t) if token_mask is None
             else jnp.sum(token_mask, axis=1, dtype=jnp.int32)
         )
-        new_cache = KVCache(k_cache, v_cache, kv_cache.length + advance)
+        if isinstance(kv_cache, PagedKVCache):
+            # Page-table indirection: scatter the window into the slots'
+            # mapped pages, gather the dense-shaped view back, and run
+            # the *same* positional-mask attention — values at every
+            # valid slot equal the dense cache's, so the outputs are
+            # bit-identical (masked slots contribute exactly-0 weights
+            # either way).
+            pool_k, pool_v = _paged_insert(kv_cache, k, v, token_mask)
+            new_cache = PagedKVCache(
+                pool_k, pool_v, kv_cache.page_table,
+                kv_cache.length + advance,
+                kv_cache.s_view, kv_cache.page_size,
+            )
+            k_cache = _paged_gather(new_cache, pool_k)
+            v_cache = _paged_gather(new_cache, pool_v)
+        else:
+            k_cache = _masked_insert(kv_cache.k, k, kv_cache.length, token_mask)
+            v_cache = _masked_insert(kv_cache.v, v, kv_cache.length, token_mask)
+            new_cache = KVCache(k_cache, v_cache, kv_cache.length + advance)
         out = _decode_attention(
             q, k_cache, v_cache, kv_cache.length, cfg, window=window
         )
@@ -191,6 +257,61 @@ def _masked_insert(cache: jax.Array, new: jax.Array, length: jax.Array,
         axis=2,
     )
     return jnp.where(sel[:, None, :, None], gathered, cache)
+
+
+def _paged_gather(cache: PagedKVCache, pool: jax.Array) -> jax.Array:
+    """Gather a pooled cache into the dense view ``(B, Hkv, s_view, Dh)``.
+
+    Logical ring slot ``i`` reads offset ``i % page_size`` of physical
+    page ``page_table[b, i // page_size]``.  Unmapped entries (-1) clip
+    to the all-zero :data:`NULL_PAGE`; every such slot is already
+    rejected by the positional masks (it would alias a position beyond
+    the slot's fill), so the zeros only guarantee finiteness, exactly
+    like a dense cache's never-written slots.
+    """
+    s, ps = cache.s_view, cache.page_size
+    b = cache.page_table.shape[0]
+    p, _, hkv, dh = pool.shape
+    i = jnp.arange(s, dtype=jnp.int32)
+    pages = jnp.take(cache.page_table, i // ps, axis=1)        # (B, S)
+    flat = jnp.clip(pages, 0) * ps + (i % ps)[None, :]
+    out = jnp.take(pool.reshape(p * ps, hkv, dh), flat.reshape(-1), axis=0)
+    return out.reshape(b, s, hkv, dh).swapaxes(1, 2)
+
+
+def _paged_insert(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                  token_mask: jax.Array | None = None):
+    """Paged dual of :func:`_masked_insert`: scatter ``k_new``/``v_new``
+    (B, Hkv, t, Dh) at absolute positions ``length..length+t-1`` into the
+    slots' mapped pages (ring slot = pos mod ``s_view``, then page-table
+    indirection).  Masked or unmapped targets scatter with index -1 /
+    ``mode="drop"`` — nothing is written, so a finished slot's pages, a
+    shared read-only prefix page (positions below the slot's start
+    length are never insert targets), and the null page all stay
+    bit-identical.  Returns (new_k_pool, new_v_pool).
+    """
+    b, hkv, t, dh = k_new.shape
+    s, ps = cache.s_view, cache.page_size
+    if t > s:
+        raise ValueError(
+            f"decode window of {t} tokens exceeds paged view size {s}; "
+            f"build the state with init_decode_state(insert_window >= {t})"
+        )
+    pos = _lengths_2d(cache.length, b) + jnp.arange(t, dtype=jnp.int32)[None]
+    slot = jnp.mod(pos, s)                                     # (B, t)
+    pages = jnp.take_along_axis(cache.page_table, slot // ps, axis=1)
+    ok = pages >= 0
+    if token_mask is not None:
+        ok &= token_mask
+    flat = jnp.where(ok, pages * ps + slot % ps, -1).reshape(-1)
+
+    def put(pool, new):
+        pf = pool.reshape(-1, hkv, dh)
+        src = new.swapaxes(1, 2).reshape(b * t, hkv, dh).astype(pool.dtype)
+        pf = pf.at[flat].set(src, mode="drop")
+        return pf.reshape(pool.shape)
+
+    return put(cache.k, k_new), put(cache.v, v_new)
 
 
 def _decode_attention(q, k_cache, v_cache, cur_pos, cfg, *, window=None):

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.model import transformer as tf
-from repro.model.attention import KVCache
+from repro.model.attention import KVCache, PagedKVCache
 from repro.model.layers import (
     embed_tokens,
     init_embeddings,
@@ -129,8 +129,27 @@ def forward(
 # Decode state (KV caches / recurrent states), concrete + abstract
 # --------------------------------------------------------------------------
 
+class PageSpec(NamedTuple):
+    """Geometry of a paged decode state (see
+    :class:`repro.model.attention.PagedKVCache`).
+
+    ``page_size``: tokens per physical page — a multiple of the 32-token
+    admit bucket, so page boundaries and admission buckets line up.
+    ``private_pages``: allocatable (non-shared) physical pages per KV
+    node pool; ``None`` = dense-equivalent capacity (``batch`` × logical
+    pages per slot), which can never starve.  Each node's pool is capped
+    at that dense-equivalent count regardless — a local ring can't use
+    more.  ``shared_pages``: extra read-only pages reserved (per
+    full-view node) for prefilled shared prefixes.
+    """
+
+    page_size: int = 32
+    private_pages: int | None = None
+    shared_pages: int = 0
+
+
 def _layer_state_shape(cfg, kind: str, batch: int, max_len: int,
-                       insert_window: int = 1):
+                       insert_window: int = 1, paged: PageSpec | None = None):
     dt = _dtype(cfg)
     if kind in tf.ATTN_KINDS:
         window = cfg.attn_window if kind == "local" else None
@@ -140,6 +159,24 @@ def _layer_state_shape(cfg, kind: str, batch: int, max_len: int,
         # queries still attend to; capped at max_len the ring can't wrap at
         # all, so either way windowed decode stays exact.
         s = min(max_len, window + insert_window - 1) if window else max_len
+        if paged is not None:
+            ps = int(paged.page_size)
+            nl = -(-s // ps)                       # logical pages per slot
+            cap = batch * nl                       # dense-equivalent pool
+            private = cap if paged.private_pages is None else min(
+                int(paged.private_pages), cap)
+            # Shared prefix pages only exist where they are immutable:
+            # a view spanning every position (s == max_len) never wraps,
+            # so pages below a slot's start length are never written.
+            shared = int(paged.shared_pages) if s == max_len else 0
+            pool = (1 + shared + private, ps, cfg.num_kv_heads, cfg.head_dim)
+            return PagedKVCache(
+                k=jax.ShapeDtypeStruct(pool, dt),
+                v=jax.ShapeDtypeStruct(pool, dt),
+                page_table=jax.ShapeDtypeStruct((batch, nl), jnp.int32),
+                length=jax.ShapeDtypeStruct((batch,), jnp.int32),
+                s_view=s, page_size=ps,
+            )
         kv_shape = (batch, cfg.num_kv_heads, s, cfg.head_dim)
         return KVCache(
             k=jax.ShapeDtypeStruct(kv_shape, dt),
@@ -163,7 +200,8 @@ def _layer_state_shape(cfg, kind: str, batch: int, max_len: int,
 
 
 def abstract_decode_state(cfg, batch: int, max_len: int,
-                          insert_window: int = 1):
+                          insert_window: int = 1,
+                          paged: PageSpec | None = None):
     pattern, n_periods, remainder = tf.plan_groups(cfg)
 
     def stack(sds_tree):
@@ -173,37 +211,61 @@ def abstract_decode_state(cfg, batch: int, max_len: int,
         )
 
     scanned = (
-        [stack(_layer_state_shape(cfg, k, batch, max_len, insert_window))
+        [stack(_layer_state_shape(cfg, k, batch, max_len, insert_window,
+                                  paged))
          for k in pattern]
         if n_periods > 0
         else None
     )
-    rem = [_layer_state_shape(cfg, k, batch, max_len, insert_window)
+    rem = [_layer_state_shape(cfg, k, batch, max_len, insert_window, paged)
            for k in remainder]
     return {"scanned": scanned, "remainder": rem}
 
 
-def init_decode_state(cfg, batch: int, max_len: int, insert_window: int = 1):
+def init_decode_state(cfg, batch: int, max_len: int, insert_window: int = 1,
+                      paged: PageSpec | None = None):
     """Zeroed decode state.  ``insert_window`` is the widest token window
     any single ``decode_step`` call will insert (1 = classic per-token
     decode) — it sizes the local-attention ring slack; recurrent states
     are O(1) in it.  The WKV state stays (B, H, Dh, Dh) float32 end to
-    end: serve loops carry it without per-step reshapes or casts."""
-    return jax.tree.map(
+    end: serve loops carry it without per-step reshapes or casts.
+
+    ``paged`` swaps every KV node for a :class:`PagedKVCache` pool of
+    that geometry; page tables initialize to -1 (nothing mapped)."""
+    state = jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype),
-        abstract_decode_state(cfg, batch, max_len, insert_window),
+        abstract_decode_state(cfg, batch, max_len, insert_window, paged),
+    )
+    if paged is None:
+        return state
+
+    def unmap(node):
+        if isinstance(node, PagedKVCache):
+            return PagedKVCache(
+                node.k, node.v, jnp.full_like(node.page_table, -1),
+                node.length, node.s_view, node.page_size,
+            )
+        return node
+
+    return jax.tree.map(
+        unmap, state,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
     )
 
 
 def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
-                        insert_window: int = 1):
+                        insert_window: int = 1,
+                        paged: PageSpec | None = None):
     """PartitionSpecs for the decode state.
 
     KV caches shard (batch, ·, kv_seq, ·); recurrent states shard
     (batch, rnn-ish) — built by walking the typed abstract tree, so stacked
-    (leading ``layers``) axes are detected from rank deltas.
+    (leading ``layers``) axes are detected from rank deltas.  Paged pools
+    stay replicated (any slot's table may reference any page); their
+    tables/lengths shard along batch.
     """
-    abstract = abstract_decode_state(cfg, batch, max_len, insert_window)
+    abstract = abstract_decode_state(cfg, batch, max_len, insert_window,
+                                     paged)
 
     def node_spec(node):
         if isinstance(node, KVCache):
@@ -212,6 +274,14 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
             kv = to_pspec(prefix + ("batch", None, "kv_seq", None), rules)
             ln = to_pspec(prefix + ("batch",), rules)
             return KVCache(k=kv, v=kv, length=ln)
+        if isinstance(node, PagedKVCache):
+            extra = len(node.k.shape) - 4
+            prefix = ("layers",) * extra
+            pool = to_pspec(prefix + (None, None, None, None), rules)
+            tbl = to_pspec(prefix + ("batch", None), rules)
+            ln = to_pspec(prefix + ("batch",), rules)
+            return PagedKVCache(k=pool, v=pool, page_table=tbl, length=ln,
+                                s_view=node.s_view, page_size=node.page_size)
         if isinstance(node, RecState):
             extra = len(node.conv.shape) - 3
             prefix = ("layers",) * extra
@@ -221,7 +291,8 @@ def decode_state_pspecs(cfg, batch: int, max_len: int, rules: dict,
         raise TypeError(type(node))
 
     return jax.tree.map(
-        node_spec, abstract, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+        node_spec, abstract,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
     )
 
 
@@ -245,7 +316,7 @@ def decode_state_finite(state) -> jax.Array:
 
     def visit(node):
         nonlocal batch
-        if isinstance(node, KVCache):
+        if isinstance(node, (KVCache, PagedKVCache)):
             if batch is None:
                 batch = node.length.shape[-1]
             return
@@ -262,7 +333,8 @@ def decode_state_finite(state) -> jax.Array:
             flags.append(jnp.all(jnp.isfinite(leaf), axis=axes))
 
     jax.tree.map(visit, state,
-                 is_leaf=lambda x: isinstance(x, (KVCache, RecState)))
+                 is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache,
+                                                  RecState)))
     if not flags:
         return jnp.ones((batch,), bool)
     return functools.reduce(jnp.logical_and, flags)

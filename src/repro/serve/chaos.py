@@ -40,7 +40,7 @@ from typing import Any, Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.model.attention import KVCache
+from repro.model.attention import KVCache, PagedKVCache
 from repro.model.recurrent import RecState
 
 
@@ -78,12 +78,33 @@ def poison_slot_state(state, slot: int):
             idx = (slice(None),) * stacked + (slot, slice(None), 0)
             return KVCache(k=node.k.at[idx].set(jnp.nan), v=node.v,
                            length=node.length)
+        if isinstance(node, PagedKVCache) and not has_rec:
+            # Poison the slot's most recently written position (always a
+            # page the slot itself owns — shared prefix pages are below
+            # its start length, so the blast radius stays one slot).
+            stacked = node.k.ndim - 4      # pool is (P, ps, Hkv, Dh) (+L)
+            tbl = np.asarray(node.page_table)
+            ln = np.asarray(node.length)
+            while tbl.ndim > 2:
+                tbl, ln = tbl[0], ln[0]
+            pos = max(int(ln[slot]) - 1, 0) % node.s_view
+            page = int(tbl[slot, pos // node.page_size])
+            if page < 0:
+                return node
+            idx = (slice(None),) * stacked + (
+                page, pos % node.page_size, slice(None), 0)
+            return PagedKVCache(
+                k=node.k.at[idx].set(jnp.nan), v=node.v,
+                page_table=node.page_table, length=node.length,
+                s_view=node.s_view, page_size=node.page_size,
+            )
         return node
 
     import jax
 
     return jax.tree.map(
-        fix, state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+        fix, state,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
     )
 
 
@@ -91,7 +112,8 @@ def _nodes(state):
     import jax
 
     return jax.tree.leaves(
-        state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+        state,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
     )
 
 

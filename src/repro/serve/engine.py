@@ -34,8 +34,9 @@ import numpy as np
 
 from repro.ft.watchdog import StepTimeout, StepWatchdog, StragglerDetector
 from repro.model import model as M
-from repro.model.attention import KVCache
+from repro.model.attention import KVCache, PagedKVCache
 from repro.model.recurrent import RecState
+from repro.serve import paging
 
 
 def make_prefill_step(cfg):
@@ -264,6 +265,53 @@ def audit_jit_entrypoints(cfg, *, batch: int = 2, max_len: int = 64,
              sds((b, 1), i32), key),
             f"{here}._admit_step",
         ),
+    ] + _paged_jit_entrypoints(cfg, batch=batch, max_len=max_len,
+                               decode_window=decode_window, prompt=prompt)
+
+
+def _paged_jit_entrypoints(cfg, *, batch, max_len, decode_window, prompt):
+    """Paged-engine jits for the donation audit: the decode window lowered
+    against a pooled state (donation must alias the pools in place), and
+    the paged admit with its page-table / prefix-entry operands."""
+    from repro.analysis.donation import JitEntry
+
+    sds = jax.ShapeDtypeStruct
+    eng = ServeEngine(cfg, params=M.abstract_params(cfg), max_len=max_len,
+                      decode_window=decode_window, paged=True)
+    k = max(1, decode_window)
+    p = _bucket32(prompt)
+    iw = max(k, p)
+    params = eng.params
+    state = M.abstract_decode_state(
+        cfg, batch=batch, max_len=max_len, insert_window=iw,
+        paged=M.PageSpec(page_size=eng.page_size),
+    )
+    ctl = paging.PagedController(cfg, state, batch=batch, max_len=max_len)
+    entry = M.abstract_decode_state(cfg, batch=1, max_len=max_len,
+                                    insert_window=iw)
+    rec, kv = paging.split_entry(entry)
+    ring = [kv[i] for i, role in enumerate(ctl.roles) if role == "copy"]
+    tables = [sds((batch, g.nl), jnp.int32) for g in ctl.geoms]
+    i32, b = jnp.int32, batch
+    vec = sds((b,), i32)
+    bvec = sds((b,), jnp.bool_)
+    key = sds((2,), jnp.uint32)
+    here = "src/repro/serve/engine.py:ServeEngine"
+    return [
+        JitEntry(
+            "serve.paged_window", eng._serve_window(k, 0.0, 0, None),
+            (params, state, sds((b, 1), i32), vec, vec, vec, bvec, vec,
+             key),
+            f"{here}._serve_window",
+        ),
+        JitEntry(
+            "serve.paged_admit",
+            eng._admit_step_paged(p, 0.0, 0, None, ctl.roles),
+            (params, state, sds((b, p), i32), bvec, vec, vec, bvec,
+             tables, tables, rec, ring, vec, vec, vec, vec, vec, bvec,
+             sds((b, 1), i32), key),
+            f"{here}._admit_step_paged",
+        ),
     ]
 
 
@@ -277,6 +325,11 @@ class Request:
     tokens: Any                    # (P,) int prompt token ids
     max_new_tokens: int = 16
     deadline_ms: float | None = None
+    #: Paged engines only: id from :meth:`ServeEngine.register_prefix`.
+    #: The prompt must extend the registered prefix; its page-aligned head
+    #: is admitted by sharing/copying the prefix entry instead of being
+    #: re-prefilled.
+    prefix_id: int | None = None
 
 
 #: Terminal per-request outcomes (see :class:`RequestResult`):
@@ -294,7 +347,7 @@ SERVE_STAT_KEYS = (
     "decode_dispatches", "admissions", "slot_steps", "quarantines",
     "recoveries", "dispatch_retries", "dispatch_drops",
     "watchdog_timeouts", "stragglers", "deadline_hits", "shed",
-    "req_drops", "snapshots",
+    "req_drops", "snapshots", "page_waits", "prefix_admissions",
 )
 
 
@@ -383,10 +436,25 @@ def _reset_slot_rows(state, rows: jax.Array):
                 return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
 
             return RecState(h=zero(node.h), conv=zero(node.conv))
+        if isinstance(node, PagedKVCache):
+            # Paged rendering of the reset: unmap the rows (and zero their
+            # lengths) — pool *contents* stay put, since pages are shared
+            # storage.  Stale finite data is unreachable (length 0 +
+            # positional masks) and non-finite garbage is scrubbed when a
+            # page is next mapped (:func:`repro.serve.paging._admit_kv_one`).
+            extra = node.page_table.ndim - 2
+            m = rows.reshape((1,) * extra + (-1,))
+            return PagedKVCache(
+                k=node.k, v=node.v,
+                page_table=jnp.where(m[..., None], -1, node.page_table),
+                length=jnp.where(m, 0, node.length),
+                s_view=node.s_view, page_size=node.page_size,
+            )
         raise TypeError(type(node))
 
     return jax.tree.map(
-        fix, state, is_leaf=lambda x: isinstance(x, (KVCache, RecState))
+        fix, state,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
     )
 
 
@@ -441,9 +509,27 @@ class ServeEngine:
     max_len: int = 256
     decode_window: int = 8
     mesh: Any = None
+    #: Paged KV storage: ``serve()`` replaces per-slot dense caches with
+    #: page pools + per-slot page tables (see :mod:`repro.serve.paging`).
+    #: ``page_size`` must be a multiple of the 32-token admit bucket;
+    #: ``pool_pages`` caps allocatable private pages per KV node pool
+    #: (``None`` = dense-equivalent capacity, which can never starve).
+    paged: bool = False
+    page_size: int = 32
+    pool_pages: int | None = None
 
     def __post_init__(self):
         cfg = self.cfg
+        if self.paged:
+            if self.page_size < 32 or self.page_size % 32:
+                raise ValueError(
+                    f"page_size must be a positive multiple of the 32-token "
+                    f"admit bucket, got {self.page_size}"
+                )
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "paged serving does not compose with a mesh yet"
+                )
         # Per-token fallback step (the decode_window=1 shape).  state is
         # donated here too: without it every step copies the full cache
         # pytree through HBM just to update one slot.
@@ -458,12 +544,23 @@ class ServeEngine:
         )
         self._windows = {}
         self._admits = {}
+        self._admits_paged = {}
         self._serve_windows = {}
+        # Prefix registry: id -> prompt tokens; entries cache the one-time
+        # batch-1 prefill of a prefix's page-aligned head per insert
+        # window (its recurrent states + dense KV views).
+        self._prefixes: dict[int, np.ndarray] = {}
+        self._prefix_entries: dict = {}
+        self._null_entries: dict = {}
+        self._next_prefix_id = 0
         # Observability: decode dispatches issued by the last generate().
         self.last_decode_dispatches = 0
         # serve() counters: decode dispatches / admission prefills /
         # total slot-steps scanned (incl. masked dead-slot steps).
         self.last_serve_stats: dict[str, int] = {}
+        # Paged byte accounting from the last paged serve(): pool vs
+        # dense-equivalent bytes, peak mapped bytes, audit violations.
+        self.last_paged_stats: dict[str, int] = {}
 
     def _window_step(self, k: int, last: bool):
         """Jitted K-token decode window, cached per (k, last).
@@ -569,6 +666,123 @@ class ServeEngine:
                         return jitted(*args)
 
             self._admits[key] = fn
+        return fn
+
+    # -- paged admission + prefix sharing --------------------------------
+
+    def register_prefix(self, tokens) -> int:
+        """Register a shared prompt prefix (paged engines only).
+
+        Returns an id for :attr:`Request.prefix_id`.  The prefix's
+        page-aligned head (``floor(len / page_size) × page_size`` tokens)
+        is prefilled once per serve; every request carrying the id is
+        admitted by *sharing* the resulting KV pages (full-view nodes) /
+        *copying* the ring content and recurrent states (wrapping local
+        nodes, WKV S / RG-LRU h) instead of re-prefilling those tokens.
+        Prompts must strictly extend the prefix.
+        """
+        if not self.paged:
+            raise ValueError("prefix sharing requires a paged engine")
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if toks.size < self.page_size:
+            raise ValueError(
+                f"prefix of {toks.size} tokens is shorter than one "
+                f"{self.page_size}-token page — nothing to share"
+            )
+        if toks.size >= self.max_len:
+            raise ValueError(
+                f"prefix of {toks.size} tokens leaves no room to decode "
+                f"within max_len={self.max_len}"
+            )
+        pid = self._next_prefix_id
+        self._next_prefix_id += 1
+        self._prefixes[pid] = toks
+        return pid
+
+    def _prefix_entry(self, pid: int, insert_window: int):
+        """(start_len, rec nodes, per-KV-node dense (k, v) views) for a
+        registered prefix: one batch-1 dense prefill of its page-aligned
+        head, cached per (prefix, insert window) — the shared state every
+        prefix admission copies from (``insert_window`` is the serve's,
+        which always covers the prefix: prompts extend it, and the window
+        is bucketed from the longest prompt)."""
+        key = (pid, insert_window)
+        ent = self._prefix_entries.get(key)
+        if ent is None:
+            toks = self._prefixes[pid]
+            start = (toks.size // self.page_size) * self.page_size
+            st = M.init_decode_state(
+                self.cfg, batch=1, max_len=self.max_len,
+                insert_window=insert_window,
+            )
+            _, st = self._prefill(
+                self.params, st, jnp.asarray(toks[:start])[None, :], None)
+            rec, kv = paging.split_entry(st)
+            ent = (start, rec, kv)
+            self._prefix_entries[key] = ent
+        return ent
+
+    def _null_entry(self, insert_window: int):
+        """Zero-filled prefix-entry operands (rec nodes + dense KV views)
+        for admissions that carry no prefix — every use inside the jit is
+        gated on ``prefix_rows``, so the zeros are never observable."""
+        ent = self._null_entries.get(insert_window)
+        if ent is None:
+            st = M.init_decode_state(
+                self.cfg, batch=1, max_len=self.max_len,
+                insert_window=insert_window,
+            )
+            ent = paging.split_entry(st)
+            self._null_entries[insert_window] = ent
+        return ent
+
+    def _admit_step_paged(self, p: int, temperature: float, top_k: int,
+                          eos_id: int | None, roles: tuple):
+        """Paged slot admission, cached per (suffix bucket, sampling cfg,
+        KV-node roles).  The dense :meth:`_admit_step` plus the page-table
+        surgery of :func:`repro.serve.paging.apply_admission`: admitted
+        rows are unmapped and re-pointed at freshly reserved pages (which
+        are scrubbed of non-finite garbage on the way in), prefix rows
+        start from the shared entry's recurrent state / ring content at
+        ``start_len``, and only the prompt *suffix* beyond ``start_len``
+        is prefilled — the cost win the pool exists for.
+        """
+        key = (p, temperature, top_k, eos_id, roles)
+        fn = self._admits_paged.get(key)
+        if fn is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def admit(params, state, tokens, admit_row, plen, start_len,
+                      prefix_rows, tables, scrubs, rec_entries,
+                      ring_contents, tok_idx, lengths, counts, budgets,
+                      req_ids, active, cur, base_key):
+                state = _reset_slot_rows(state, admit_row)
+                state = paging.apply_admission(
+                    state, roles, admit_row, prefix_rows, start_len,
+                    tables, scrubs, rec_entries, ring_contents,
+                )
+                mask = admit_row[:, None] & (
+                    jnp.arange(p, dtype=jnp.int32)[None, :] < plen[:, None]
+                )
+                logits, state = M.decode_step(
+                    params, cfg, state, tokens, start_len,
+                    token_mask=mask, last_only=True, max_len=max_len,
+                )
+                tok0 = _sample_tokens(
+                    logits[:, -1], base_key, req_ids, tok_idx,
+                    temperature, top_k,
+                )
+                lengths = jnp.where(admit_row, start_len + plen, lengths)
+                counts = jnp.where(admit_row, tok_idx + 1, counts)
+                done = counts >= budgets
+                if eos_id is not None:
+                    done |= tok0 == eos_id
+                active = jnp.where(admit_row, ~done, active)
+                cur = jnp.where(admit_row[:, None], tok0[:, None], cur)
+                return state, lengths, counts, active, cur, tok0
+
+            fn = jax.jit(admit, donate_argnums=(1,))
+            self._admits_paged[key] = fn
         return fn
 
     def _serve_window(self, k: int, temperature: float, top_k: int,
@@ -783,17 +997,47 @@ class ServeEngine:
             return []
         b = max(1, min(int(slots), n))
         k_w = max(1, int(self.decode_window))
-        p_lens = [int(np.asarray(r.tokens).size) for r in reqs]
-        for r, pl in zip(reqs, p_lens):
+        prompts_np = [np.asarray(r.tokens, np.int32).reshape(-1)
+                      for r in reqs]
+        p_lens = [int(a.size) for a in prompts_np]
+        outputs: list[list[int]] = [[] for _ in range(n)]
+        outcomes: list[str | None] = [None] * n
+        recoveries = [0] * n
+        stats = {k: 0 for k in SERVE_STAT_KEYS}
+        ps = int(self.page_size)
+        pid_of: list[int | None] = [None] * n
+        start_of = [0] * n
+        for i, (r, pl) in enumerate(zip(reqs, p_lens)):
             if pl < 1:
                 raise ValueError("request prompt must be non-empty")
             if int(r.max_new_tokens) < 1:
                 raise ValueError("max_new_tokens must be >= 1")
+            pid = getattr(r, "prefix_id", None)
+            if pid is not None:
+                if not self.paged:
+                    raise ValueError(
+                        "Request.prefix_id requires a paged engine")
+                pre = self._prefixes.get(pid)
+                if pre is None:
+                    raise ValueError(f"unknown prefix id {pid}")
+                if (pl < pre.size
+                        or not np.array_equal(prompts_np[i][:pre.size],
+                                              pre)):
+                    raise ValueError(
+                        f"request {i}: prompt does not extend registered "
+                        f"prefix {pid}")
+                start = (pre.size // ps) * ps
+                if pl > start:
+                    pid_of[i], start_of[i] = pid, start
+                # else the prompt IS the page-aligned prefix: the entry
+                # leaves no suffix token to prefill from — admit cold.
             if pl + int(r.max_new_tokens) > self.max_len:
-                raise ValueError(
-                    f"request needs {pl} + {r.max_new_tokens} positions, "
-                    f"engine max_len={self.max_len}"
-                )
+                # A request that cannot fit the engine's position limit is
+                # load to refuse, not a caller bug that should abort every
+                # other request in the batch: typed shed outcome.
+                outcomes[i] = "shed"
+                stats["shed"] += 1
+        live = [i for i in range(n) if outcomes[i] is None]
         if recoverable is None:
             recoverable = (chaos is not None or restore_from is not None
                            or snapshot_every > 0)
@@ -803,15 +1047,51 @@ class ServeEngine:
         # play.  Off the recovery paths, keep the original sizing — ring
         # shapes feed attention reductions, so changing them for free
         # would perturb fault-free bit-parity with older baselines.
-        worst = (
-            max(pl + int(r.max_new_tokens) for pl, r in zip(p_lens, reqs))
-            if recoverable else max(p_lens)
-        )
+        worst = max(
+            (p_lens[i] + int(reqs[i].max_new_tokens) if recoverable
+             else p_lens[i])
+            for i in live
+        ) if live else 1
         insert_window = max(k_w, _bucket32(worst))
-        state = M.init_decode_state(
-            self.cfg, batch=b, max_len=self.max_len,
-            insert_window=insert_window,
-        )
+        ctl = None
+        if self.paged:
+            # One shared-page region per registered prefix in use this
+            # serve: prefill each prefix's aligned head once (cached),
+            # reserve its pages in every full-view pool, and upload the
+            # K/V content before any admission.
+            used_pids = sorted({pid_of[i] for i in live
+                                if pid_of[i] is not None})
+            shared_map, entries, nxt = {}, {}, 1
+            for pid in used_pids:
+                start, rec, kv = self._prefix_entry(pid, insert_window)
+                shared_map[pid] = (nxt, start // ps)
+                nxt += start // ps
+                entries[pid] = (rec, kv)
+            spec = M.PageSpec(page_size=ps, private_pages=self.pool_pages,
+                              shared_pages=nxt - 1)
+            state = M.init_decode_state(
+                self.cfg, batch=b, max_len=self.max_len,
+                insert_window=insert_window, paged=spec,
+            )
+            ctl = paging.PagedController(
+                self.cfg, state, batch=b, max_len=self.max_len,
+                shared_map=shared_map,
+            )
+            if entries:
+                state = paging.upload_shared(state, ctl, entries)
+            for i in live:
+                if not ctl.fits_capacity(
+                        p_lens[i] + int(reqs[i].max_new_tokens),
+                        start_of[i]):
+                    # Needs more private pages than the pool ever has:
+                    # waiting can never help — shed, don't deadlock.
+                    outcomes[i] = "shed"
+                    stats["shed"] += 1
+        else:
+            state = M.init_decode_state(
+                self.cfg, batch=b, max_len=self.max_len,
+                insert_window=insert_window,
+            )
         lengths = jnp.zeros((b,), jnp.int32)
         counts = jnp.zeros((b,), jnp.int32)
         budgets = jnp.zeros((b,), jnp.int32)
@@ -820,13 +1100,10 @@ class ServeEngine:
         cur = jnp.zeros((b, 1), jnp.int32)
         base_key = jax.random.PRNGKey(seed)
 
-        pending = collections.deque(range(n))
+        pending = collections.deque(
+            i for i in range(n) if outcomes[i] is None)
         recover_q: collections.deque[int] = collections.deque()
-        outputs: list[list[int]] = [[] for _ in range(n)]
-        outcomes: list[str | None] = [None] * n
-        recoveries = [0] * n
         slot_req = [-1] * b
-        stats = {k: 0 for k in SERVE_STAT_KEYS}
         active_np = np.zeros(b, bool)
 
         watchdog = (StepWatchdog(watchdog_timeout_s)
@@ -854,7 +1131,7 @@ class ServeEngine:
             (state, cur, lengths, counts, budgets, req_ids, active,
              slot_req, pending, recover_q, outputs, outcomes, recoveries,
              stats) = self._restore_serve(
-                restore_from, b, k_w, insert_window, n, seed, state)
+                restore_from, b, k_w, insert_window, n, seed, state, ctl)
             active_np = np.array(active)
         elif max_queue is not None:
             # Bounded admission queue: b requests admit immediately, at
@@ -870,7 +1147,7 @@ class ServeEngine:
             self._snapshot_serve(
                 snapshot_dir, stats, state, cur, lengths, counts, budgets,
                 req_ids, active, slot_req, pending, recover_q, outputs,
-                outcomes, recoveries, b, k_w, insert_window, n, seed)
+                outcomes, recoveries, b, k_w, insert_window, n, seed, ctl)
             stats["snapshots"] += 1
 
         try:
@@ -887,6 +1164,8 @@ class ServeEngine:
                             stats["deadline_hits"] += 1
                             active_np[slot] = False
                             slot_req[slot] = -1
+                            if ctl is not None:
+                                ctl.free_slot(slot)
                             killed = True
                     if killed:
                         active = jnp.asarray(active_np)
@@ -903,44 +1182,121 @@ class ServeEngine:
                 # ---- admission: recoveries first, then fresh ----------
                 free = [i for i in range(b) if not active_np[i]]
                 take: list[int] = []
+                slot_alloc: dict[int, tuple] = {}
+                group_pid: int | None = None
                 while len(take) < len(free) and (recover_q or pending):
-                    take.append(recover_q.popleft() if recover_q
-                                else pending.popleft())
+                    q = recover_q if recover_q else pending
+                    ri = q[0]
+                    if ctl is not None:
+                        pid = pid_of[ri]
+                        if pid is not None:
+                            if group_pid is None:
+                                group_pid = pid
+                            elif pid != group_pid:
+                                # One prefix entry per admission dispatch:
+                                # a second prefix waits for the next round.
+                                break
+                        alloc = ctl.try_admit(
+                            free[len(take)],
+                            p_lens[ri] + int(reqs[ri].max_new_tokens),
+                            pid, start_of[ri])
+                        if alloc is None:
+                            # Pool pressure: the head-of-line request
+                            # waits for pages freed by completions — it
+                            # is never skipped (no starvation reorder).
+                            stats["page_waits"] += 1
+                            break
+                        slot_alloc[free[len(take)]] = alloc
+                    q.popleft()
+                    take.append(ri)
                 if take:
                     # A recovery's "prompt" is the original prompt plus
                     # its accepted tokens; fresh requests have none.
-                    p_b = _bucket32(
-                        max(p_lens[ri] + len(outputs[ri]) for ri in take))
-                    tok_np = np.zeros((b, p_b), np.int32)
+                    used = free[: len(take)]
                     admit_np = np.zeros(b, bool)
                     plen_np = np.zeros(b, np.int32)
                     tokidx_np = np.zeros(b, np.int32)
                     bud_np = np.array(budgets)
                     rid_np = np.array(req_ids)
-                    used = free[: len(take)]
-                    for slot, ri in zip(used, take):
-                        t_arr = np.concatenate([
-                            np.asarray(reqs[ri].tokens,
-                                       np.int32).reshape(-1),
+                    full = {
+                        ri: np.concatenate([
+                            prompts_np[ri],
                             np.asarray(outputs[ri], np.int32),
                         ])
-                        tok_np[slot, : t_arr.size] = t_arr
-                        admit_np[slot] = True
-                        plen_np[slot] = t_arr.size
-                        tokidx_np[slot] = len(outputs[ri])
-                        bud_np[slot] = int(reqs[ri].max_new_tokens)
-                        rid_np[slot] = ri
-                        slot_req[slot] = ri
-                    budgets = jnp.asarray(bud_np)
-                    req_ids = jnp.asarray(rid_np)
-                    fn = self._admit_step(p_b, temperature, top_k, eos_id)
+                        for ri in take
+                    }
+                    if ctl is None:
+                        p_b = _bucket32(max(full[ri].size for ri in take))
+                        tok_np = np.zeros((b, p_b), np.int32)
+                        for slot, ri in zip(used, take):
+                            t_arr = full[ri]
+                            tok_np[slot, : t_arr.size] = t_arr
+                            admit_np[slot] = True
+                            plen_np[slot] = t_arr.size
+                            tokidx_np[slot] = len(outputs[ri])
+                            bud_np[slot] = int(reqs[ri].max_new_tokens)
+                            rid_np[slot] = ri
+                            slot_req[slot] = ri
+                        budgets = jnp.asarray(bud_np)
+                        req_ids = jnp.asarray(rid_np)
+                        fn = self._admit_step(
+                            p_b, temperature, top_k, eos_id)
+                        args = (self.params, state, jnp.asarray(tok_np),
+                                jnp.asarray(admit_np), jnp.asarray(plen_np),
+                                jnp.asarray(tokidx_np), lengths, counts,
+                                budgets, req_ids, active, cur, base_key)
+                    else:
+                        # Paged: only the suffix past each request's
+                        # shared-prefix start is prefilled; the prefix
+                        # rides in as copied state / shared pages.
+                        p_b = _bucket32(max(
+                            full[ri].size - start_of[ri] for ri in take))
+                        tok_np = np.zeros((b, p_b), np.int32)
+                        start_np = np.zeros(b, np.int32)
+                        prefix_np = np.zeros(b, bool)
+                        for slot, ri in zip(used, take):
+                            t_arr = full[ri][start_of[ri]:]
+                            tok_np[slot, : t_arr.size] = t_arr
+                            admit_np[slot] = True
+                            plen_np[slot] = t_arr.size
+                            start_np[slot] = start_of[ri]
+                            prefix_np[slot] = start_of[ri] > 0
+                            tokidx_np[slot] = len(outputs[ri])
+                            bud_np[slot] = int(reqs[ri].max_new_tokens)
+                            rid_np[slot] = ri
+                            slot_req[slot] = ri
+                            if start_of[ri] > 0:
+                                stats["prefix_admissions"] += 1
+                        budgets = jnp.asarray(bud_np)
+                        req_ids = jnp.asarray(rid_np)
+                        tables, scrubs = [], []
+                        for i_node, g in enumerate(ctl.geoms):
+                            t_rows = np.full((b, g.nl), -1, np.int32)
+                            s_rows = np.full((b, g.nl), -1, np.int32)
+                            for slot in used:
+                                t_rows[slot] = slot_alloc[slot][0][i_node]
+                                s_rows[slot] = slot_alloc[slot][1][i_node]
+                            tables.append(jnp.asarray(t_rows))
+                            scrubs.append(jnp.asarray(s_rows))
+                        if group_pid is not None:
+                            _, rec, kv = self._prefix_entry(
+                                group_pid, insert_window)
+                        else:
+                            rec, kv = self._null_entry(insert_window)
+                        ring = [kv[i] for i, role in enumerate(ctl.roles)
+                                if role == "copy"]
+                        fn = self._admit_step_paged(
+                            p_b, temperature, top_k, eos_id, ctl.roles)
+                        args = (self.params, state, jnp.asarray(tok_np),
+                                jnp.asarray(admit_np), jnp.asarray(plen_np),
+                                jnp.asarray(start_np),
+                                jnp.asarray(prefix_np), tables, scrubs,
+                                rec, ring, jnp.asarray(tokidx_np), lengths,
+                                counts, budgets, req_ids, active, cur,
+                                base_key)
                     state, lengths, counts, active, cur, tok0 = (
                         self._dispatch(
-                            "admit", fn,
-                            (self.params, state, jnp.asarray(tok_np),
-                             jnp.asarray(admit_np), jnp.asarray(plen_np),
-                             jnp.asarray(tokidx_np), lengths, counts,
-                             budgets, req_ids, active, cur, base_key),
+                            "admit", fn, args,
                             chaos=chaos, watchdog=watchdog,
                             straggler=straggler, stats=stats,
                             max_retries=max_dispatch_retries,
@@ -956,6 +1312,8 @@ class ServeEngine:
                             # Done at admission (budget 1 / instant EOS).
                             resolve(ri)
                             slot_req[slot] = -1
+                            if ctl is not None:
+                                ctl.free_slot(slot)
                     stats["admissions"] += 1
 
                 # ---- decode window ------------------------------------
@@ -995,6 +1353,8 @@ class ServeEngine:
                         recoveries[ri] += 1
                         recover_q.append(ri)
                         slot_req[slot] = -1
+                        if ctl is not None:
+                            ctl.free_slot(slot)
                     # Completions: active before, inactive after, and not
                     # quarantined.
                     for slot in np.nonzero(
@@ -1003,6 +1363,8 @@ class ServeEngine:
                         if ri >= 0:
                             resolve(ri)
                             slot_req[slot] = -1
+                            if ctl is not None:
+                                ctl.free_slot(slot)
                     if chaos is not None:
                         slot = chaos.maybe_drop_request(
                             active_np, stats["decode_dispatches"], slot_req)
@@ -1012,6 +1374,8 @@ class ServeEngine:
                             stats["req_drops"] += 1
                             active_np[slot] = False
                             slot_req[slot] = -1
+                            if ctl is not None:
+                                ctl.free_slot(slot)
                             active = jnp.asarray(active_np)
                     if (snapshot_every > 0 and snapshot_dir is not None
                             and stats["decode_dispatches"]
@@ -1021,6 +1385,16 @@ class ServeEngine:
                         chaos.check_preempt(stats["decode_dispatches"])
         finally:
             self.last_serve_stats = stats
+            if ctl is not None:
+                ctl.audit(state, active_np, slot_req)
+                self.last_paged_stats = {
+                    "page_size": ps,
+                    "shared_pages": ctl.shared_total,
+                    "pool_bytes": ctl.pool_bytes(),
+                    "dense_bytes": ctl.dense_bytes(),
+                    "peak_mapped_bytes": ctl.peak_mapped_bytes,
+                    "page_table_violations": len(ctl.violations),
+                }
 
         results = []
         for i in range(n):
@@ -1034,10 +1408,21 @@ class ServeEngine:
 
     # -- engine snapshot / restore ---------------------------------------
 
+    def _serve_meta(self, b, k_w, insert_window, n, seed, ctl):
+        """Snapshot compatibility vector: geometry + paging config.  A
+        restore must be a bit-identical re-run, so everything that shapes
+        the jits or the page pools is pinned here."""
+        return np.asarray(
+            [b, k_w, insert_window, n, seed, int(ctl is not None),
+             self.page_size,
+             -1 if self.pool_pages is None else int(self.pool_pages),
+             0 if ctl is None else ctl.shared_total],
+            np.int64)
+
     def _snapshot_serve(self, snapshot_dir, stats, state, cur, lengths,
                         counts, budgets, req_ids, active, slot_req, pending,
                         recover_q, outputs, outcomes, recoveries,
-                        b, k_w, insert_window, n, seed):
+                        b, k_w, insert_window, n, seed, ctl=None):
         """Checkpoint the whole serve loop as ONE atomic tree: device
         state + slot table + queues + per-request progress + stats.
 
@@ -1060,30 +1445,36 @@ class ServeEngine:
         codes = np.asarray(
             [-1 if oc is None else OUTCOMES.index(oc) for oc in outcomes],
             np.int32)
+        host = {
+            "slot_req": np.asarray(slot_req, np.int32),
+            "pending": np.asarray(list(pending), np.int32),
+            "recover_q": np.asarray(list(recover_q), np.int32),
+            "out_flat": out_flat,
+            "out_off": out_off,
+            "outcome_codes": codes,
+            "recoveries": np.asarray(recoveries, np.int64),
+            "stats": np.asarray(
+                [stats[k] for k in SERVE_STAT_KEYS], np.int64),
+        }
+        if ctl is not None:
+            # Page-pool bookkeeping rides the same atomic tree: owner
+            # arrays (page -> slot / FREE / SHARED) and the high-water
+            # mark — the device page tables themselves are in ``state``.
+            for key, val in ctl.snapshot_tree().items():
+                host["pg_" + key] = val
         tree = {
             "device": {
                 "state": state, "cur": cur, "lengths": lengths,
                 "counts": counts, "budgets": budgets, "req_ids": req_ids,
                 "active": active,
             },
-            "host": {
-                "slot_req": np.asarray(slot_req, np.int32),
-                "pending": np.asarray(list(pending), np.int32),
-                "recover_q": np.asarray(list(recover_q), np.int32),
-                "out_flat": out_flat,
-                "out_off": out_off,
-                "outcome_codes": codes,
-                "recoveries": np.asarray(recoveries, np.int64),
-                "stats": np.asarray(
-                    [stats[k] for k in SERVE_STAT_KEYS], np.int64),
-            },
-            "meta": np.asarray(
-                [b, k_w, insert_window, n, seed], np.int64),
+            "host": host,
+            "meta": self._serve_meta(b, k_w, insert_window, n, seed, ctl),
         }
         C.save(snapshot_dir, stats["decode_dispatches"], tree)
 
     def _restore_serve(self, restore_from, b, k_w, insert_window, n, seed,
-                       state_template):
+                       state_template, ctl=None):
         """Resume a snapshotted serve.  The caller must pass the same
         requests / slots / decode_window / seed the snapshot was taken
         under (validated against the snapshot's meta); device arrays come
@@ -1115,13 +1506,16 @@ class ServeEngine:
             meta = data["meta"]
             host = {k.split("/", 1)[1]: data[k] for k in data.files
                     if k.startswith("host/")}
-        want = np.asarray([b, k_w, insert_window, n, seed], np.int64)
+        want = self._serve_meta(b, k_w, insert_window, n, seed, ctl)
         if not np.array_equal(meta, want):
             raise ValueError(
                 f"snapshot meta {meta.tolist()} does not match this serve "
                 f"call {want.tolist()} — restore needs the same requests, "
-                "slots, decode_window, and seed"
+                "slots, decode_window, seed, and paging config"
             )
+        if ctl is not None:
+            ctl.restore({k[3:]: v for k, v in host.items()
+                         if k.startswith("pg_")})
         tree, _ = C.restore(restore_from, template, step=step)
         d = tree["device"]
         outputs = [

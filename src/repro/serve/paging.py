@@ -1,0 +1,443 @@
+"""Paged KV storage for the serve engine: page pools, per-slot page
+tables, and recurrent-state prefix sharing.
+
+The dense engine gives every slot a ``max_len`` KV ring per attention
+layer — slot count, not tokens in flight, caps concurrency, and a shared
+system prompt is re-prefilled per request.  This module replaces that
+static partitioning with pooled, dynamically-mapped storage (the paper's
+argument against staging values through a statically-partitioned
+scratchpad, applied to the serving layer):
+
+* :class:`PagedController` owns one page pool per KV state node
+  (physical pages of ``page_size`` tokens, a multiple of the 32-token
+  admit bucket) and hands out / reclaims pages on the admission/recycle
+  path of ``ServeEngine.serve()``.  A request's whole page need
+  (``prompt + budget`` positions) is reserved at admission — no
+  mid-window allocation, so decode windows never touch the allocator.
+* :func:`apply_admission` is the device-side dual, run inside the admit
+  jit right after ``_reset_slot_rows``: it installs the new page-table
+  rows, scrubs freshly-mapped private pages of non-finite garbage (the
+  paged rendering of the reset-path NaN scrub), and — for prefix
+  admissions — copies the registered prefix's recurrent state (WKV S /
+  RG-LRU h, conv tails) and local-ring content into the admitted rows:
+  the read-side dual of ``_reset_slot_rows``.
+* Full-view nodes (``s_view == max_len``: global attention, or a local
+  ring capped at ``max_len``) can never wrap, so pages below a slot's
+  start length are never written — those nodes *share* the prefix's
+  pages read-only across every admitted slot.  Wrapping rings are
+  written in place, so their prefix content is *copied* into the slot's
+  private pages instead.
+
+Freed pages never leak data into live streams: a freed page stays
+mapped at most in an inactive (quarantined) slot's table row, every
+position it could alias is rejected by the positional masks in
+``_decode_attention`` (exact-0 attention weights), and the page is
+scrubbed at its next admission before it becomes reachable again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.model.attention import NULL_PAGE, KVCache, PagedKVCache
+from repro.model.recurrent import RecState
+
+_STATE_NODES = (KVCache, PagedKVCache, RecState)
+
+#: ``owner`` codes below 0 (>= 0 is the owning slot index).
+FREE, NULL, SHARED = -1, -2, -3
+
+
+def _is_node(x) -> bool:
+    return isinstance(x, _STATE_NODES)
+
+
+def flatten_nodes(state):
+    """State as a flat list of typed nodes + treedef (one deterministic
+    walk shared by the host controller and the device admission op, so
+    per-node metadata can never misalign)."""
+    return jax.tree.flatten(state, is_leaf=_is_node)
+
+
+def split_entry(entry_state):
+    """Split a batch-1 *dense* decode state (a prefilled prefix) into the
+    admit-jit operand lists: recurrent nodes in walk order, and per-KV-
+    node ``(k, v)`` content pairs (the dense cache views)."""
+    nodes, _ = flatten_nodes(entry_state)
+    rec = [n for n in nodes if isinstance(n, RecState)]
+    kv = [(n.k, n.v) for n in nodes if isinstance(n, KVCache)]
+    return rec, kv
+
+
+# --------------------------------------------------------------------------
+# Host side: geometry + allocator
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NodeGeom:
+    """Static geometry of one paged KV node."""
+
+    layers: int          # stacked multiplicity (1 = unstacked)
+    s_view: int          # dense-equivalent sequence extent
+    page_size: int
+    nl: int              # logical pages per slot (ceil(s_view / page_size))
+    pool_pages: int      # physical pages (incl. null + shared)
+    role: str            # "share" (never wraps) | "copy" (wrapping ring)
+    page_bytes: int      # k+v bytes of ONE page across stacked layers
+
+
+class PagedController:
+    """Host-side page bookkeeping for one ``serve()`` call.
+
+    One ``owner`` array per KV node (page -> slot, or FREE / NULL /
+    SHARED): the single source of truth the page tables are built from,
+    what the snapshot saves, and what :meth:`audit` checks device tables
+    against.
+    """
+
+    def __init__(self, cfg, abstract_state, *, batch: int, max_len: int,
+                 shared_map: dict[int, tuple[int, int]] | None = None):
+        nodes, _ = flatten_nodes(abstract_state)
+        self.batch = int(batch)
+        self.max_len = int(max_len)
+        self.kv_index: list[int] = []
+        self.geoms: list[NodeGeom] = []
+        for i, node in enumerate(nodes):
+            if not isinstance(node, PagedKVCache):
+                continue
+            stacked = node.k.ndim == 5
+            layers = int(node.k.shape[0]) if stacked else 1
+            ps = int(node.page_size)
+            s = int(node.s_view)
+            hkv, dh = int(node.k.shape[-2]), int(node.k.shape[-1])
+            item = jnp.dtype(node.k.dtype).itemsize
+            self.kv_index.append(i)
+            self.geoms.append(NodeGeom(
+                layers=layers, s_view=s, page_size=ps, nl=-(-s // ps),
+                pool_pages=int(node.k.shape[-4]),
+                role="share" if s == self.max_len else "copy",
+                page_bytes=layers * ps * hkv * dh * item * 2,
+            ))
+        #: prefix id -> (first shared page id, page count); shared ids are
+        #: the same across every "share" node (their pools reserve the
+        #: same shared region), only the page *content* differs per node.
+        self.shared_map = dict(shared_map or {})
+        self.shared_total = sum(n for _, n in self.shared_map.values())
+        self.owners: list[np.ndarray] = []
+        self.free: list[list[int]] = []
+        for g in self.geoms:
+            owner = np.full(g.pool_pages, FREE, np.int32)
+            owner[NULL_PAGE] = NULL
+            if g.role == "share":
+                owner[1:1 + self.shared_total] = SHARED
+            self.owners.append(owner)
+            self.free.append(sorted(np.nonzero(owner == FREE)[0].tolist(),
+                                    reverse=True))
+        self.peak_mapped_bytes = self.mapped_bytes()
+        self.violations: list[str] = []
+
+    # -- byte accounting -------------------------------------------------
+
+    @property
+    def roles(self) -> tuple[str, ...]:
+        return tuple(g.role for g in self.geoms)
+
+    def pool_bytes(self) -> int:
+        """Physically allocated pool bytes (what the paged state holds)."""
+        return sum(g.page_bytes * g.pool_pages for g in self.geoms)
+
+    def dense_bytes(self) -> int:
+        """What the dense engine allocates for the same geometry:
+        ``slots × s_view`` positions per node."""
+        return sum(
+            g.page_bytes * self.batch * g.nl for g in self.geoms
+        )
+
+    def mapped_bytes(self) -> int:
+        """Bytes of pages currently mapped (tokens in flight + shared)."""
+        total = 0
+        for g, owner in zip(self.geoms, self.owners):
+            total += g.page_bytes * int(np.sum(owner >= 0))
+            if g.role == "share":
+                total += g.page_bytes * self.shared_total
+        return total
+
+    # -- allocation ------------------------------------------------------
+
+    def pages_needed(self, total_positions: int, start_len: int):
+        """Per-node (logical pages used, shared pages used, private pages
+        to allocate) for a request reaching ``total_positions``."""
+        out = []
+        for g in self.geoms:
+            used = -(-min(int(total_positions), g.s_view) // g.page_size)
+            sh = (min(start_len // g.page_size, used)
+                  if g.role == "share" else 0)
+            out.append((used, sh, used - sh))
+        return out
+
+    def fits_capacity(self, total_positions: int, start_len: int) -> bool:
+        """Whether the request could EVER be admitted (an empty pool has
+        enough private pages) — the shed-vs-wait admission decision."""
+        return all(
+            priv <= len(owner) - 1 - np.sum(owner == SHARED)
+            and priv <= np.sum(
+                (owner == FREE) | (owner >= 0))
+            for (_, _, priv), owner in zip(
+                self.pages_needed(total_positions, start_len), self.owners)
+        )
+
+    def try_admit(self, slot: int, total_positions: int, prefix_id,
+                  start_len: int):
+        """Reserve the request's full page need and build its per-node
+        table rows.  Returns ``(tables, scrubs)`` — per-node ``(nl,)``
+        int32 rows (-1 = unmapped; scrub rows exclude shared pages) — or
+        ``None`` (pool pressure: caller retries after a recycle)."""
+        need = self.pages_needed(total_positions, start_len)
+        grabbed: list[list[int]] = []
+        for (used, sh, priv), free in zip(need, self.free):
+            if priv > len(free):
+                for ids, fr in zip(grabbed, self.free):
+                    fr.extend(reversed(ids))
+                return None
+            grabbed.append([free.pop() for _ in range(priv)])
+        tables, scrubs = [], []
+        for g, owner, (used, sh, priv), ids in zip(
+                self.geoms, self.owners, need, grabbed):
+            row = np.full(g.nl, -1, np.int32)
+            if sh:
+                start, _ = self.shared_map[prefix_id]
+                row[:sh] = np.arange(start, start + sh, dtype=np.int32)
+            row[sh:used] = np.asarray(ids, np.int32)
+            for pid_ in ids:
+                owner[pid_] = slot
+            scrub = row.copy()
+            scrub[:sh] = -1
+            tables.append(row)
+            scrubs.append(scrub)
+        self.peak_mapped_bytes = max(self.peak_mapped_bytes,
+                                     self.mapped_bytes())
+        return tables, scrubs
+
+    def free_slot(self, slot: int):
+        """Return every page ``slot`` owns to the free lists (host
+        bookkeeping only — the device table row goes stale, which is
+        safe: the slot is inactive, and a page is scrubbed at its next
+        admission before any live query can reach it)."""
+        for owner, free in zip(self.owners, self.free):
+            mine = np.nonzero(owner == slot)[0]
+            owner[mine] = FREE
+            free.extend(int(p) for p in mine[::-1])
+
+    # -- audit + snapshot -------------------------------------------------
+
+    def audit(self, state, active: np.ndarray, slot_req) -> list[str]:
+        """Page-table well-formedness against the live device state:
+        no page double-mapped by two active slots, no freed/null page
+        reachable from an active slot's row, mapped rows owned
+        consistently, and every owned page's owner actually live.
+        Appends to (and returns) ``self.violations``."""
+        nodes, _ = flatten_nodes(state)
+        msgs = []
+        for gi, (ni, g, owner) in enumerate(
+                zip(self.kv_index, self.geoms, self.owners)):
+            node = nodes[ni]
+            tbl = np.asarray(node.page_table)
+            if tbl.ndim == 3:
+                tbl = tbl[0]
+            seen: dict[int, int] = {}
+            for slot in range(self.batch):
+                if not active[slot]:
+                    continue
+                for page in tbl[slot]:
+                    page = int(page)
+                    if page < 0:
+                        continue
+                    if page == NULL_PAGE:
+                        msgs.append(
+                            f"node{gi}: active slot {slot} maps the null "
+                            f"page")
+                        continue
+                    code = int(owner[page])
+                    if code == FREE:
+                        msgs.append(
+                            f"node{gi}: active slot {slot} reaches freed "
+                            f"page {page}")
+                    elif code >= 0 and code != slot:
+                        msgs.append(
+                            f"node{gi}: page {page} double-mapped by "
+                            f"active slots {code} and {slot}")
+                    if page in seen and seen[page] != slot and code != SHARED:
+                        msgs.append(
+                            f"node{gi}: page {page} appears in rows "
+                            f"{seen[page]} and {slot}")
+                    seen[page] = slot
+            for page in np.nonzero(owner >= 0)[0]:
+                s = int(owner[page])
+                if slot_req[s] < 0 and not active[s]:
+                    msgs.append(
+                        f"node{gi}: page {int(page)} leaked — owned by "
+                        f"slot {s}, which holds no request")
+        self.violations.extend(msgs)
+        return msgs
+
+    def snapshot_tree(self) -> dict[str, np.ndarray]:
+        return {f"owner{i}": o.copy() for i, o in enumerate(self.owners)} | {
+            "peak_mapped_bytes": np.int64(self.peak_mapped_bytes),
+        }
+
+    def restore(self, tree: dict[str, np.ndarray]):
+        for i in range(len(self.owners)):
+            self.owners[i] = np.asarray(tree[f"owner{i}"], np.int32).copy()
+            self.free[i] = sorted(
+                np.nonzero(self.owners[i] == FREE)[0].tolist(), reverse=True)
+        self.peak_mapped_bytes = int(tree["peak_mapped_bytes"])
+
+
+def upload_shared(state, controller: PagedController,
+                  entries: dict[int, tuple[list, list]]):
+    """Write each registered prefix's global-attention K/V into its
+    reserved shared pages — once per serve, before any admission.  Share
+    nodes have ``s_view == max_len`` (no wrap), so dense view position
+    ``p`` of the prefix entry is exactly ring slot ``p``."""
+    nodes, treedef = flatten_nodes(state)
+    for gi, (ni, g) in enumerate(
+            zip(controller.kv_index, controller.geoms)):
+        if g.role != "share":
+            continue
+        node = nodes[ni]
+        pool_k, pool_v = node.k, node.v
+        for pid, (start, nsh) in sorted(controller.shared_map.items()):
+            _, kv = entries[pid]
+            ck, cv = kv[gi]
+
+            def put(pool, content):
+                # content: (1, Hkv, S, Dh) or stacked (L, 1, Hkv, S, Dh);
+                # take the first nsh pages' worth of positions.
+                span = nsh * g.page_size
+                if content.ndim == 5:
+                    src = content[:, 0, :, :span, :].transpose(0, 2, 1, 3)
+                    src = src.reshape(content.shape[0], nsh, g.page_size,
+                                      content.shape[2], content.shape[4])
+                    return pool.at[:, start:start + nsh].set(
+                        src.astype(pool.dtype))
+                src = content[0, :, :span, :].transpose(1, 0, 2)
+                src = src.reshape(nsh, g.page_size, content.shape[1],
+                                  content.shape[3])
+                return pool.at[start:start + nsh].set(src.astype(pool.dtype))
+
+            pool_k, pool_v = put(pool_k, ck), put(pool_v, cv)
+        nodes[ni] = PagedKVCache(pool_k, pool_v, node.page_table,
+                                 node.length, node.s_view, node.page_size)
+    return treedef.unflatten(nodes)
+
+
+# --------------------------------------------------------------------------
+# Device side: the admit-jit state surgery
+# --------------------------------------------------------------------------
+
+
+def _admit_kv_one(node: PagedKVCache, admit_row, prefix_rows, start_len,
+                  table, scrub, content):
+    """Unstacked per-node admission: install the new table rows, scrub
+    freshly-mapped private pages of non-finite garbage, scatter prefix
+    ring content into prefix rows (copy nodes), and set prefix rows'
+    lengths to their start length."""
+    b, nl = node.page_table.shape
+    ps, s = node.page_size, node.s_view
+    hkv, dh = node.k.shape[-2], node.k.shape[-1]
+    new_table = jnp.where(admit_row[:, None], table, node.page_table)
+    length = jnp.where(admit_row & prefix_rows, start_len, node.length)
+
+    st = jnp.where(admit_row[:, None], scrub, -1)
+    offs = jnp.arange(ps, dtype=jnp.int32)
+    scrub_flat = jnp.where(
+        st[:, :, None] >= 0, st[:, :, None] * ps + offs[None, None, :], -1
+    ).reshape(-1)
+
+    if content is not None:
+        i = jnp.arange(s, dtype=jnp.int32)
+        pages = jnp.take(new_table, i // ps, axis=1)            # (B, S)
+        ok = (admit_row & prefix_rows)[:, None] & (pages >= 0)
+        content_flat = jnp.where(
+            ok, pages * ps + (i % ps)[None, :], -1).reshape(-1)
+
+    def fix(pool, src_view):
+        pf = pool.reshape(-1, hkv, dh)
+        vals = jnp.take(pf, jnp.clip(scrub_flat, 0), axis=0)
+        vals = jnp.where(jnp.isfinite(vals), vals,
+                         jnp.zeros((), pool.dtype))
+        pf = pf.at[scrub_flat].set(vals, mode="drop")
+        if src_view is not None:
+            src = jnp.broadcast_to(
+                src_view[0].swapaxes(0, 1)[None], (b, s, hkv, dh))
+            pf = pf.at[content_flat].set(
+                src.reshape(b * s, hkv, dh).astype(pool.dtype), mode="drop")
+        return pf.reshape(pool.shape)
+
+    k = fix(node.k, None if content is None else content[0])
+    v = fix(node.v, None if content is None else content[1])
+    return PagedKVCache(k, v, new_table, length, s, ps)
+
+
+def _admit_kv(node, admit_row, prefix_rows, start_len, table, scrub,
+              content):
+    if node.k.ndim == 4:
+        return _admit_kv_one(node, admit_row, prefix_rows, start_len,
+                             table, scrub, content)
+    # Stacked (L, ...) node: same table for every layer, per-layer pools
+    # and (for copy nodes) per-layer prefix content.
+    fn = jax.vmap(
+        lambda nd, ct: _admit_kv_one(nd, admit_row, prefix_rows, start_len,
+                                     table, scrub, ct),
+        in_axes=(0, None if content is None else 0),
+    )
+    return fn(node, content)
+
+
+def _copy_rec(node: RecState, entry: RecState, rows):
+    """Read-side dual of ``_reset_slot_rows``' recurrent zeroing: write
+    the prefix entry's batch-1 WKV S / RG-LRU h / conv tails into the
+    rows being admitted with a shared prefix (``jnp.where`` along batch —
+    neighbors bit-identical, donation-friendly)."""
+    extra = node.conv.ndim - 3
+
+    def mix(leaf, src):
+        m = rows.reshape((1,) * extra + (-1,) + (1,) * (leaf.ndim - extra - 1))
+        return jnp.where(m, src.astype(leaf.dtype), leaf)
+
+    return RecState(h=mix(node.h, entry.h), conv=mix(node.conv, entry.conv))
+
+
+def apply_admission(state, roles, admit_row, prefix_rows, start_len,
+                    tables, scrubs, rec_entries, ring_contents):
+    """Device-side admission surgery (inside the admit jit, right after
+    ``_reset_slot_rows``).  ``roles`` is the controller's static per-KV-
+    node role tuple; ``tables``/``scrubs`` are per-KV-node ``(B, NL)``
+    rows; ``rec_entries`` / ``ring_contents`` are the prefix entry's
+    recurrent nodes and copy-node ``(k, v)`` views (zero-filled when the
+    admission carries no prefix — ``prefix_rows`` gates every use)."""
+    nodes, treedef = flatten_nodes(state)
+    copy_rows = admit_row & prefix_rows
+    kv_i = rec_i = copy_i = 0
+    out = []
+    for node in nodes:
+        if isinstance(node, PagedKVCache):
+            content = None
+            if roles[kv_i] == "copy":
+                content = ring_contents[copy_i]
+                copy_i += 1
+            out.append(_admit_kv(node, admit_row, prefix_rows, start_len,
+                                 tables[kv_i], scrubs[kv_i], content))
+            kv_i += 1
+        elif isinstance(node, RecState):
+            out.append(_copy_rec(node, rec_entries[rec_i], copy_rows))
+            rec_i += 1
+        else:
+            out.append(node)
+    return treedef.unflatten(out)

@@ -5,11 +5,11 @@ Three layers:
 * **clean tree** — every pass, on every default arch family, produces
   findings and none of them are errors (the CLI-green property, asserted
   in-process so a failure points at the pass, not at an exit code);
-* **mutations** — five deliberate regressions (dropped donation, caller
+* **mutations** — six deliberate regressions (dropped donation, caller
   -side f32 upcast, slack-less ring, oversized VMEM scratch, unbucketed
-  admission shapes) each caught by exactly the pass that owns the
-  invariant, with the right severity and a location that points at the
-  contract;
+  admission shapes, a page-pool leak) each caught by exactly the pass
+  that owns the invariant, with the right severity and a location that
+  points at the contract;
 * **plumbing** — the Finding table/severity helpers and the per-scope
   chunk-adjustment warning fix (PR 7 satellite: ``resolve_chunk``'s
   warn-once set used to be a single module global shared across configs).
@@ -195,6 +195,28 @@ def test_mutation_unbucketed_admission_is_caught(monkeypatch):
         "bucketing" in e.message and e.metrics.get("admits", 0) > 2
         for e in errs
     ), F.format_table(errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 6: the engine stops releasing pages on slot recycle
+# --------------------------------------------------------------------------
+
+def test_mutation_leaked_page_is_caught(monkeypatch):
+    from repro.analysis import paging
+    from repro.serve.paging import PagedController
+
+    # free_slot becomes a no-op: every recycled slot's pages stay owned
+    # by a slot that no longer holds a request — the classic pool leak
+    # that only shows up as admission stalls hours into a serve.
+    monkeypatch.setattr(PagedController, "free_slot",
+                        lambda self, slot: None)
+    findings = paging.run(get_config("gemma3-1b"))
+    errs = F.errors(findings)
+    assert errs, "paging pass missed the leaked pages"
+    assert any(
+        "leaked" in e.message or "survived" in e.message for e in errs
+    ), F.format_table(errs)
+    assert all(e.location.endswith("PagedController") for e in errs)
 
 
 # --------------------------------------------------------------------------

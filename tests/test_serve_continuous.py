@@ -258,12 +258,25 @@ class TestEosAndAdmission:
         with pytest.raises(ValueError, match="max_new_tokens"):
             eng.serve([Request(tokens=np.zeros(4, np.int32),
                                max_new_tokens=0)])
-        with pytest.raises(ValueError, match="max_len"):
-            eng.serve([Request(tokens=np.zeros(10, np.int32),
-                               max_new_tokens=10)])
         with pytest.raises(ValueError, match="non-empty"):
             eng.serve([Request(tokens=np.zeros(0, np.int32),
                                max_new_tokens=4)])
+
+    def test_oversized_request_is_shed_not_fatal(self):
+        """A request that can't fit max_len is load to refuse (typed shed
+        outcome), not a ValueError that aborts every other request."""
+        cfg, params, _ = _setup("rwkv6-1.6b")
+        eng = ServeEngine(cfg, params, max_len=16, decode_window=2)
+        good = Request(tokens=np.arange(4, dtype=np.int32),
+                       max_new_tokens=4)
+        bad = Request(tokens=np.zeros(10, np.int32), max_new_tokens=10)
+        outs = eng.serve([good, bad, good], slots=2)
+        assert outs[1].outcome == "shed" and outs[1].size == 0
+        assert eng.last_serve_stats["shed"] == 1
+        solo = eng.serve([good], slots=1)
+        for i in (0, 2):
+            assert outs[i].outcome in ("ok", "eos")
+            np.testing.assert_array_equal(outs[i].tokens, solo[0].tokens)
 
 
 class TestRingSlackContract:
