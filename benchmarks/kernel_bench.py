@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import from_thread_or_const
 from repro.core.cost_model import (
     serve_batch_steps,
+    serve_fleet_drain,
     serve_prefix_admission,
     serve_recovery_steps,
     wkv_bwd_traffic,
@@ -414,6 +415,77 @@ def main(smoke: bool = False) -> list[dict]:
         f"modeled_recovery_steps_global_restart={m_glob} "
         "(NaN-in-state pinned at 5% of windows, quarantine + masked "
         "re-prefill; cost_model.serve_recovery_steps)",
+    ))
+
+    # serve_fleet: goodput under one replica kill vs a fault-free fleet —
+    # the same blast-radius argument one level up.  Three replicas share
+    # the queue through the fleet router; the victim is killed at a
+    # pinned ~5% point of its dispatch schedule, its live memory is
+    # discarded, and its in-flight requests resume on survivors from its
+    # last atomic snapshot — asserted bit-identical to the fault-free
+    # fleet run, so goodput degrades by the handoff replay only.  The
+    # modeled columns: serve_recovery_steps (one victim's isolated
+    # replay) and serve_fleet_drain (recovery-aware vs depth-blind
+    # routing of the remaining work over survivors carrying that debt).
+    import shutil
+    import tempfile
+
+    from repro.serve.fleet import FleetRouter
+
+    n_rep = 3
+    f_engines = [ServeEngine(s_cfg, s_params, max_len=96,
+                             decode_window=s_window)
+                 for _ in range(n_rep)]
+
+    def run_fleet(kill_at=()):
+        f_chaos = None
+        if kill_at:
+            f_chaos = [None] * n_rep
+            f_chaos[1] = ChaosInjector(seed=7, replica_kill_at=kill_at)
+        root = tempfile.mkdtemp(prefix="bench_fleet_")
+        try:
+            fl = FleetRouter(
+                f_engines, s_reqs, slots=slots, snapshot_every=1,
+                snapshot_root=root, checksum_every=2, chaos=f_chaos)
+            outs = fl.run()
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        assert sum(o.size for o in outs) == useful
+        return fl, outs
+
+    fl_ref, f_ref_outs = run_fleet()            # compile warm-up + reference
+    f_disp = sum(s["decode_dispatches"] for s in fl_ref.stats_by_replica())
+    f_kill = (max(1, round(0.05 * f_disp)),)
+    fl_kill, f_kill_outs = run_fleet(f_kill)
+    assert fl_kill.stats["replica_deaths"] == 1
+    for want, got in zip(f_ref_outs, f_kill_outs):   # handoff bit-identity
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    t_fref = t_fkill = float("inf")
+    for _ in range(max(1, r_i // 4)):
+        t0 = time.perf_counter()
+        run_fleet()
+        t_fref = min(t_fref, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_fleet(f_kill)
+        t_fkill = min(t_fkill, time.perf_counter() - t0)
+    f_goodput = t_fref / t_fkill
+    # Victim mid-flight at the kill: isolated replay of its accepted
+    # prefix, then the remaining work drained over two survivors, one of
+    # them carrying that replay as recovery debt.
+    f_iso, _ = serve_recovery_steps(
+        [pl for pl, _ in spec], [nn // 2 for _, nn in spec], 0, s_window)
+    f_aware, f_blind = serve_fleet_drain(
+        [pl + nn for pl, nn in spec], [0, f_iso], s_window)
+    rows.append((
+        "serve_fleet", t_fkill * 1e6,
+        f"goodput_vs_fault_free={f_goodput:.2f} replicas={n_rep} "
+        f"kill_at_dispatch={f_kill[0]}/{f_disp} "
+        f"handoffs={fl_kill.stats['handoffs']} "
+        f"modeled_recovery_steps_isolated={f_iso} "
+        f"modeled_drain_aware={f_aware} modeled_drain_blind={f_blind} "
+        "(one replica killed at ~5% of fleet dispatches, snapshot "
+        "handoff to survivors, streams bit-identical; "
+        "cost_model.serve_recovery_steps + serve_fleet_drain)",
     ))
 
     # serve_paged: pooled KV pages + recurrent-state prefix sharing — the

@@ -61,6 +61,23 @@ python -m repro.launch.serve --arch gemma3-1b --smoke --continuous --paged \
 # present in the committed benchmark results.
 grep -q '"name": "serve_paged"' BENCH_kernels.json
 
+echo "== tier-1 lane 3e: fleet chaos smoke (bitflip + replica kill) =="
+# Three engine replicas behind the fleet router.  The victim gets a
+# silent bit flip at its first decode window (invisible to isfinite;
+# the uint32 checksum chain must catch it within the 2-window spot
+# cadence) and is then killed outright at dispatch 3.  The launcher
+# exits nonzero unless the corruption is detected, the kill fires, the
+# victim's in-flight requests resume on survivors from its last atomic
+# snapshot, and every stream is bit-identical to a fault-free
+# single-engine run.
+python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
+    --replicas 3 --requests 6 --slots 2 --prompt-len 10 --new-tokens 16 \
+    --max-len 96 --decode-window 4 --snapshot-every 1 --checksum-every 2 \
+    --chaos-bitflip-at 1 --chaos-replica-kill-at 3
+# The fleet bench row (goodput under replica kill + modeled drain) must
+# be present in the committed benchmark results.
+grep -q '"name": "serve_fleet"' BENCH_kernels.json
+
 echo "== tier-1 lane 4: static audit (repro.analysis, strict) =="
 # Every analysis pass over every default arch family — collectives,
 # donation, dtype flow, VMEM budgets, ring slack, retrace sentinel —

@@ -34,17 +34,33 @@ class JitEntry:
     fn: Any                   # the jax.jit-wrapped callable
     args: tuple               # ShapeDtypeStruct pytrees (or None leaves)
     location: str             # repo-path-like location of the jit
-    donated: str = "state"    # human label for what must alias
+    #: Human label for what must alias — or ``None`` for a *read-only*
+    #: entrypoint that must NOT alias (e.g. the serve shadow checksum,
+    #: which would destroy the live decode state if it donated it).
+    donated: str | None = "state"
 
 
 def check_entry(entry: JitEntry) -> list[Finding]:
-    """Lower + compile ``entry`` abstractly; require input_output_alias."""
+    """Lower + compile ``entry`` abstractly; require input_output_alias
+    (or, for ``donated=None`` read-only entries, require its absence)."""
     try:
         hlo = entry.fn.lower(*entry.args).compile().as_text()
     except Exception as e:  # noqa: BLE001 — a broken lowering IS a finding
         return [error(
             PASS, entry.location,
             f"{entry.name}: failed to lower/compile for audit: {e!r}",
+        )]
+    if entry.donated is None:
+        if "input_output_alias" in hlo:
+            return [error(
+                PASS, entry.location,
+                f"{entry.name}: read-only entrypoint aliases its input — "
+                "a donated argument here would consume live state the "
+                "serve loop still owns",
+            )]
+        return [info(
+            PASS, entry.location,
+            f"{entry.name}: read-only (no aliasing), state survives",
         )]
     if "input_output_alias" not in hlo:
         return [error(

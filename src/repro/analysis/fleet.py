@@ -1,0 +1,126 @@
+"""Fleet-readiness audit: the static contracts snapshot handoff rests on.
+
+A replica fleet (:mod:`repro.serve.fleet`) only delivers its guarantee —
+kill a replica mid-decode, every in-flight stream finishes bit-identical
+on survivors — if three engine-side contracts hold.  Each is checkable
+by tracing, without running a fleet:
+
+* **Replica entrypoints are donation-audited.**  Every jit a replica
+  dispatches must be registered with the donation pass (a fleet
+  multiplies any per-dispatch copy by N replicas), and the shadow
+  checksum entry must be registered *read-only* (``donated=None``): it
+  recomputes checksums over live state the serve loop still owns, so an
+  aliased lowering there would consume the replica's decode state
+  mid-session.
+* **Checksum emission is present in the window and admit jits.**  The
+  silent-corruption chain (exit(n) == entry(n+1)) only exists if every
+  state-mutating dispatch emits per-slot entry/exit checksums as its
+  trailing outputs — (B,) ``uint32`` each, the exact-equality integer
+  wraparound sums.  A refactor that drops them reverts detection to
+  ``isfinite``-only without failing any dispatch.
+* **Handoff meta is well-formed.**  A router hands off from a dead
+  replica's snapshot after validating its ``meta`` vector; the engine's
+  :meth:`~repro.serve.engine.ServeEngine._serve_meta` layout and the
+  fleet's :data:`~repro.serve.fleet.META_LEN` parser must agree on
+  length and field positions (request count at index 3 is what stops a
+  fleet resuming the wrong serve's streams).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, error, info
+
+PASS = "fleet"
+LOCATION = "src/repro/serve/fleet.py:FleetRouter"
+
+#: Entries whose trailing two outputs must be the (B,) uint32 entry/exit
+#: checksum pair.
+CHECKSUM_ENTRIES = ("serve.serve_window", "serve.admit",
+                    "serve.paged_window", "serve.paged_admit")
+
+
+def run(cfg) -> list[Finding]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.model import model as M
+    from repro.serve import engine as E
+    from repro.serve import fleet as F
+
+    rcfg = cfg.reduced()
+    if rcfg.frontend or rcfg.is_enc_dec:
+        return [info(
+            PASS, LOCATION,
+            f"{cfg.name}: frontend/enc-dec engines are not fleet-served "
+            f"(token-only replicas)",
+        )]
+
+    findings: list[Finding] = []
+    batch = 2
+    entries = {e.name: e for e in E.audit_jit_entrypoints(rcfg, batch=batch)}
+
+    shadow = entries.get("serve.shadow_checksum")
+    if shadow is None:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: shadow-checksum jit is not registered for the "
+            f"donation audit — the spot-check path is un-audited",
+        ))
+    elif shadow.donated is not None:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: shadow-checksum entry registered as donating "
+            f"{shadow.donated!r} — it must be read-only (donated=None) or "
+            f"the spot check consumes the live decode state",
+        ))
+
+    for name in CHECKSUM_ENTRIES:
+        e = entries.get(name)
+        if e is None:
+            findings.append(error(
+                PASS, LOCATION,
+                f"{cfg.name}: {name} is not registered — replica "
+                f"entrypoint missing from the donation audit",
+            ))
+            continue
+        out = jax.eval_shape(e.fn, *e.args)
+        tail = out[-2:] if isinstance(out, tuple) and len(out) >= 2 else ()
+        bad = [t for t in tail
+               if getattr(t, "shape", None) != (batch,)
+               or getattr(t, "dtype", None) != jnp.uint32]
+        if len(tail) != 2 or bad:
+            findings.append(error(
+                PASS, LOCATION,
+                f"{cfg.name}: {name} does not emit the trailing (B,) "
+                f"uint32 entry/exit checksum pair — silent-corruption "
+                f"chaining is broken for this dispatch",
+            ))
+
+    eng = E.ServeEngine(rcfg, params=M.abstract_params(rcfg))
+    meta = eng._serve_meta(batch, 4, 32, 7, 0, None)
+    if meta.shape != (F.META_LEN,) or meta.dtype != np.int64:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: snapshot meta is {meta.dtype}{meta.shape}, the "
+            f"fleet handoff parser expects int64 ({F.META_LEN},) — "
+            f"read_snapshot_host would reject every snapshot",
+        ))
+    elif [int(m) for m in meta[:5]] != [batch, 4, 32, 7, 0]:
+        findings.append(error(
+            PASS, LOCATION,
+            f"{cfg.name}: snapshot meta field order changed "
+            f"({meta.tolist()[:5]} for b=2 k=4 iw=32 n=7 seed=0) — the "
+            f"handoff validator reads the request count at index 3 and "
+            f"would trust the wrong field",
+        ))
+
+    if not findings:
+        findings.append(info(
+            PASS, LOCATION,
+            f"{cfg.name}: {len(CHECKSUM_ENTRIES)} replica dispatch jits "
+            f"emit checksum pairs, shadow checksum is read-only, handoff "
+            f"meta layout matches the fleet parser",
+            checksum_entries=len(CHECKSUM_ENTRIES),
+        ))
+    return findings

@@ -29,6 +29,7 @@ PASS_MODULES = {
     "dtype_flow": "repro.analysis.dtype_flow",
     "collectives": "repro.analysis.collectives",
     "donation": "repro.analysis.donation",
+    "fleet": "repro.analysis.fleet",
     "retrace": "repro.analysis.retrace",
 }
 

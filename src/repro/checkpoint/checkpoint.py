@@ -84,19 +84,38 @@ def save(directory: str | os.PathLike, step: int, tree: Any, *, mesh_shape=None)
     return final
 
 
+class AsyncSaverError(RuntimeError):
+    """A background checkpoint write failed (surfaced on the next
+    :meth:`AsyncSaver.save_async` / :meth:`AsyncSaver.wait`)."""
+
+
 class AsyncSaver:
-    """Background-thread checkpoint writer (one in flight at a time)."""
+    """Background-thread checkpoint writer (one in flight at a time).
+
+    A failed background write is *not* silently dropped: the exception is
+    captured and re-raised (wrapped in :class:`AsyncSaverError`) from the
+    next ``save_async`` or ``wait`` call.  A consumer that restores from
+    "the last snapshot" must find out that the last snapshot never landed
+    — a recovery source that failed silently is worse than none.
+    """
 
     def __init__(self):
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def _write(self, directory, step, host_tree, mesh_shape):
+        try:
+            save(directory, step, host_tree, mesh_shape=mesh_shape)
+        except BaseException as e:  # noqa: BLE001 — re-raised at next drain
+            self._error = e
 
     def save_async(self, directory, step, tree, *, mesh_shape=None):
         self.wait()
         # Snapshot to host synchronously (cheap vs. step time), write async.
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self._thread = threading.Thread(
-            target=save, args=(directory, step, host_tree),
-            kwargs={"mesh_shape": mesh_shape}, daemon=True,
+            target=self._write, args=(directory, step, host_tree, mesh_shape),
+            daemon=True,
         )
         self._thread.start()
 
@@ -104,6 +123,9 @@ class AsyncSaver:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise AsyncSaverError("background checkpoint save failed") from err
 
 
 def latest_step(directory) -> int | None:

@@ -436,6 +436,42 @@ def serve_recovery_steps(prompt_lens, accepted, victim: int,
     return isolated, global_
 
 
+def serve_fleet_drain(work, depths, window: int = 1):
+    """Makespan model for routing a burst of requests across a replica
+    fleet: recovery-aware least-loaded placement vs depth-blind
+    round-robin (the scheduling dual of
+    :func:`serve_recovery_steps` — a replica digesting handoff
+    re-prefills is *behind*, and a router that ignores that debt piles
+    new work onto the busiest replica).
+
+    ``work``: per-request modeled slot-steps (prompt + budget, the same
+    unit :func:`serve_batch_steps` counts); ``depths``: per-replica
+    pre-existing debt in slot-steps (queued work plus the
+    :func:`serve_recovery_steps`-isolated cost of any pending handoff
+    re-prefills); ``window``: tokens per decode dispatch — each
+    placement is rounded up to whole dispatches.
+
+    Returns ``(aware_steps, blind_steps)``: the drain makespan (max
+    per-replica total) under greedy least-loaded placement seeded with
+    ``depths``, and under round-robin placement that ignores them.
+    ``blind / aware >= 1`` is the modeled win of recovery-aware routing.
+    """
+    work = [int(w) for w in work]
+    depths = [int(d) for d in depths]
+    if not depths:
+        raise ValueError("need at least one replica depth")
+    if window < 1 or any(w < 1 for w in work) or any(d < 0 for d in depths):
+        raise ValueError("window < 1, empty work item, or negative depth")
+    quant = [-(-w // window) * window for w in work]
+    aware = list(depths)
+    for w in quant:
+        aware[aware.index(min(aware))] += w
+    blind = list(depths)
+    for i, w in enumerate(quant):
+        blind[i % len(blind)] += w
+    return max(aware), max(blind)
+
+
 def serve_paged_pool(prompt_lens, new_tokens, slots: int, page_size: int,
                      window: int = 1):
     """Pages-in-flight accounting for a ragged serve workload: the paged

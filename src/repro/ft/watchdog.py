@@ -61,6 +61,12 @@ class StepWatchdog:
         self._lock = threading.Lock()
         self.stale_discarded = 0
         self.timeouts = 0
+        # Heartbeat: every completed run() bumps ``beats`` and stamps
+        # ``last_beat`` — the liveness signal a replica health monitor
+        # reads (a replica whose watchdog stops beating while its queue
+        # is non-empty is wedged, not idle).
+        self.beats = 0
+        self.last_beat: float | None = None
         # Re-bound at each run(); True once that run has been abandoned.
         self.cancelled: Callable[[], bool] = lambda: False
 
@@ -103,6 +109,8 @@ class StepWatchdog:
         ok, value = outcome[0]
         if not ok:
             raise value
+        self.beats += 1
+        self.last_beat = time.monotonic()
         return value
 
 

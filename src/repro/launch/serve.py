@@ -33,6 +33,19 @@ admits every request through it (recurrent-state prefix sharing):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
       --continuous --paged --requests 5 --slots 2 --max-len 128 \
       --prefix-len 40 --pool-pages 4
+
+``--replicas N`` (with ``--continuous``) serves the same queue through a
+health-checked replica fleet (:mod:`repro.serve.fleet`) instead of one
+engine, and runs the fleet drill: ``--chaos-replica-kill-at K`` kills
+one replica at its K-th decode dispatch (``--chaos-bitflip-at`` flips a
+state bit for the ``--checksum-every`` corruption detector), and the
+drill exits nonzero unless every request completes on the survivors
+with outcome ok/eos/recovered and every stream is bit-identical to a
+fault-free single-engine run:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+      --continuous --replicas 3 --requests 6 --slots 2 \
+      --snapshot-every 1 --checksum-every 2 --chaos-replica-kill-at 2
 """
 
 from __future__ import annotations
@@ -109,6 +122,21 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="[--paged] register one shared prefix of this "
                          "many tokens and admit every request through it")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[--continuous] serve through a replica fleet "
+                         "(drill mode: exits nonzero unless all requests "
+                         "complete bit-identically on survivors)")
+    ap.add_argument("--checksum-every", type=int, default=0,
+                    help="[--continuous] arm silent-corruption checksums; "
+                         "shadow spot check every N windows")
+    ap.add_argument("--chaos-bitflip-at", type=int, nargs="*", default=(),
+                    help="pin silent state bit flips to decode-dispatch "
+                         "indices (needs --checksum-every to detect)")
+    ap.add_argument("--chaos-replica-kill-at", type=int, nargs="*",
+                    default=(),
+                    help="[--replicas] kill one replica at these decode-"
+                         "dispatch indices (fires once; needs "
+                         "--snapshot-every for handoff)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -119,6 +147,13 @@ def main():
 
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.replicas > 1 and not args.continuous:
+        raise SystemExit("--replicas requires --continuous")
+    if args.chaos_bitflip_at and not args.checksum_every:
+        raise SystemExit("--chaos-bitflip-at needs --checksum-every to "
+                         "be detectable")
 
     print(f"initializing {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
     params = M.init_params(cfg, jax.random.key(args.seed))
@@ -160,6 +195,8 @@ def main():
                         max_new_tokens=r.max_new_tokens, prefix_id=pid)
                 for r in reqs
             ]
+        if args.replicas > 1:
+            return _fleet_drill(args, cfg, params, reqs)
         paged_ref = None
         if args.paged:
             # Dense reference on the same weights/requests: the paged
@@ -184,6 +221,7 @@ def main():
                 nan_at=tuple(args.chaos_nan_at),
                 drop_at=tuple(args.chaos_drop_at),
                 hang_at=tuple(args.chaos_hang_at),
+                bitflip_at=tuple(args.chaos_bitflip_at),
             )
             # Fault-free reference for the isolation invariant: every
             # request's stream under chaos must match this bit-for-bit.
@@ -199,7 +237,8 @@ def main():
                             watchdog_timeout_s=args.watchdog_timeout,
                             snapshot_every=args.snapshot_every,
                             snapshot_dir=args.snapshot_dir,
-                            restore_from=args.restore_from, chaos=chaos)
+                            restore_from=args.restore_from, chaos=chaos,
+                            checksum_every=args.checksum_every)
         dt = time.perf_counter() - t0
         emitted = sum(o.size for o in outs)
         st = engine.last_serve_stats
@@ -229,6 +268,9 @@ def main():
             if chaos.counters["nan"] and not st["recoveries"]:
                 raise SystemExit("chaos drill: NaN faults injected but "
                                  "none recovered")
+            if chaos.counters["bitflip"] and not st["corruptions"]:
+                raise SystemExit("chaos drill: bit flips injected but the "
+                                 "checksum chain detected none")
             bad = [r for r in outs
                    if r.outcome not in ("ok", "eos", "recovered")]
             if bad:
@@ -283,6 +325,94 @@ def main():
           f"{engine.last_decode_dispatches} decode dispatches at "
           f"K={args.decode_window})")
     print("first sequence:", np.asarray(out[0]).tolist())
+
+
+def _fleet_drill(args, cfg, params, reqs):
+    """Serve ``reqs`` through a replica fleet and hold it to the
+    single-engine bar: every request completes on the survivors with a
+    clean outcome, bit-identical to a fault-free single-engine run."""
+    import tempfile
+
+    from repro.serve.chaos import ChaosInjector
+    from repro.serve.fleet import FleetRouter
+
+    kill_at = tuple(args.chaos_replica_kill_at)
+    bitflip_at = tuple(args.chaos_bitflip_at)
+    if kill_at and not args.snapshot_every:
+        raise SystemExit("--chaos-replica-kill-at needs --snapshot-every "
+                         "(handoff resumes from the victim's snapshot)")
+
+    def build():
+        return ServeEngine(cfg, params, max_len=args.max_len,
+                           decode_window=args.decode_window,
+                           paged=args.paged, page_size=args.page_size,
+                           pool_pages=args.pool_pages)
+
+    # Fault-free single-engine reference (recoverable=True so the ring
+    # sizing — and with it every stream — matches the fleet's sessions).
+    baseline = build().serve(
+        reqs, slots=args.slots, temperature=args.temperature,
+        top_k=args.top_k, eos_id=args.eos_id, seed=args.seed,
+        recoverable=True)
+
+    engines = [build() for _ in range(args.replicas)]
+    victim = 1 if args.replicas > 1 else 0
+    chaos = None
+    if kill_at or bitflip_at or args.chaos_seed is not None:
+        chaos = [None] * args.replicas
+        chaos[victim] = ChaosInjector(
+            seed=args.chaos_seed or 0, nan_rate=args.chaos_nan_rate,
+            nan_at=tuple(args.chaos_nan_at), bitflip_at=bitflip_at,
+            replica_kill_at=kill_at)
+    snap_root = args.snapshot_dir or (
+        tempfile.mkdtemp(prefix="fleet_snap_") if args.snapshot_every
+        else None)
+    t0 = time.perf_counter()
+    fleet = FleetRouter(
+        engines, reqs, slots=args.slots, temperature=args.temperature,
+        top_k=args.top_k, eos_id=args.eos_id, seed=args.seed,
+        deadline_ms=args.deadline_ms, max_queue=args.max_queue,
+        watchdog_timeout_s=args.watchdog_timeout,
+        snapshot_every=args.snapshot_every, snapshot_root=snap_root,
+        checksum_every=args.checksum_every, chaos=chaos)
+    outs = fleet.run()
+    dt = time.perf_counter() - t0
+    emitted = sum(o.size for o in outs)
+    st = fleet.stats
+    print(f"fleet served {len(reqs)} requests over {args.replicas} "
+          f"replicas ({emitted} tokens) in {dt:.2f}s "
+          f"({emitted/dt:.1f} tok/s; {st['rounds']} rounds, "
+          f"{st['assignments']} assignments, {st['replica_deaths']} "
+          f"deaths, {st['handoffs']} handoffs)")
+    per = fleet.stats_by_replica()
+    print("per-replica dispatches:",
+          [s["decode_dispatches"] for s in per],
+          "states:", [m.state for m in fleet.monitors])
+    counts: dict[str, int] = {}
+    for o in outs:
+        counts[o.outcome] = counts.get(o.outcome, 0) + 1
+    print("outcomes:", " ".join(
+        f"{k}={v}" for k, v in sorted(counts.items())))
+    if kill_at:
+        if not st["replica_deaths"]:
+            raise SystemExit("fleet drill: pinned replica kill never fired")
+        if not (st["handoffs"] or st["handoff_requeued_fresh"]):
+            raise SystemExit("fleet drill: replica died but nothing was "
+                             "handed off or re-queued")
+    if bitflip_at and not sum(s["corruptions"] for s in per):
+        raise SystemExit("fleet drill: bit flips injected but the "
+                         "checksum chain detected none")
+    bad = [o.outcome for o in outs
+           if o.outcome not in ("ok", "eos", "recovered")]
+    if bad:
+        raise SystemExit(f"fleet drill: unclean outcomes {bad}")
+    for i, (want, got) in enumerate(zip(baseline, outs)):
+        if not np.array_equal(np.asarray(want), np.asarray(got)):
+            raise SystemExit(
+                f"fleet drill: request {i} diverged from the fault-free "
+                "single-engine run — handoff broke bit-identity")
+    print("fleet drill: all requests completed on survivors, every "
+          "stream bit-identical to the fault-free single-engine run")
 
 
 if __name__ == "__main__":

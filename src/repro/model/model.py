@@ -340,6 +340,106 @@ def decode_state_finite(state) -> jax.Array:
     return functools.reduce(jnp.logical_and, flags)
 
 
+def _checksum_words(leaf, batch_axis: int) -> jax.Array:
+    """Per-slot uint32 wraparound sum of ``leaf``'s raw bit patterns.
+
+    Bitcast (never value-convert) to unsigned words first: the sum is then
+    an exact, order-independent function of the stored bits — modular
+    integer addition is associative/commutative, so XLA may reduce in any
+    order without changing the result, which a float-valued checksum could
+    not guarantee.  A single flipped bit changes one word by a power of
+    two, so the slot sum always moves.
+    """
+    nbytes = jnp.dtype(leaf.dtype).itemsize
+    if nbytes >= 4:
+        words = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
+    else:
+        uint = jnp.uint8 if nbytes == 1 else jnp.uint16
+        words = jax.lax.bitcast_convert_type(leaf, uint).astype(jnp.uint32)
+    axes = tuple(a for a in range(words.ndim) if a != batch_axis)
+    return jnp.sum(words, axis=axes, dtype=jnp.uint32)
+
+
+def decode_state_checksum(state) -> jax.Array:
+    """(B,) uint32 — per-slot wraparound checksum of the decode state.
+
+    The silent-corruption complement to :func:`decode_state_finite`: a
+    bit flip that leaves a value finite-but-wrong never trips the
+    ``isfinite`` quarantine, but it always moves this sum.  Covers every
+    per-slot leaf: recurrent states (WKV S / RG-LRU h, conv tails), dense
+    KV caches (contents + lengths), and paged KV nodes (each slot's
+    *mapped* pool pages gathered through its page table, plus the table
+    and length words themselves — so a corrupted mapping is caught even
+    when the pool bytes are intact).
+
+    Cost: one O(state bytes) integer reduction per call — a serving
+    window computes it twice per K-token dispatch (entry + exit), which
+    is small against K forward passes.  Shared prefix pages are included
+    in every sharing slot's sum; that keeps the sum a pure function of
+    (state, slot) and stays deterministic.
+    """
+    sums = []
+    batch = None
+
+    def paged_sum(pool, tbl):
+        # pool (P, ps, Hkv, Dh), tbl (B, nl) -> (B,) uint32 over mapped
+        # pages only (unmapped entries are -1; their gather is masked out).
+        pages = jnp.take(pool, jnp.clip(tbl, 0), axis=0)
+        nbytes = jnp.dtype(pages.dtype).itemsize
+        if nbytes >= 4:
+            words = jax.lax.bitcast_convert_type(pages, jnp.uint32)
+        else:
+            uint = jnp.uint8 if nbytes == 1 else jnp.uint16
+            words = jax.lax.bitcast_convert_type(pages, uint).astype(
+                jnp.uint32)
+        per_page = jnp.sum(
+            words, axis=tuple(range(2, words.ndim)), dtype=jnp.uint32)
+        return jnp.sum(jnp.where(tbl >= 0, per_page, 0), axis=1,
+                       dtype=jnp.uint32)
+
+    def visit(node):
+        nonlocal batch
+        if isinstance(node, KVCache):
+            stacked = node.k.ndim - 4
+            if batch is None:
+                batch = node.length.shape[-1]
+            for leaf in (node.k, node.v):
+                sums.append(_checksum_words(leaf, stacked))
+            sums.append(_checksum_words(node.length, node.length.ndim - 1))
+            return
+        if isinstance(node, PagedKVCache):
+            stacked = node.k.ndim - 4
+            if batch is None:
+                batch = node.length.shape[-1]
+            fn = paged_sum
+            for _ in range(stacked):
+                fn = jax.vmap(fn)
+            for pool in (node.k, node.v):
+                s = fn(pool, node.page_table)
+                if stacked:
+                    s = jnp.sum(s, axis=tuple(range(stacked)),
+                                dtype=jnp.uint32)
+                sums.append(s)
+            sums.append(_checksum_words(node.page_table,
+                                        node.page_table.ndim - 2))
+            sums.append(_checksum_words(node.length, node.length.ndim - 1))
+            return
+        if not isinstance(node, RecState):
+            raise TypeError(type(node))
+        stacked = node.conv.ndim - 3
+        if batch is None:
+            batch = node.conv.shape[stacked]
+        for leaf in (node.h, node.conv):
+            sums.append(_checksum_words(leaf, stacked))
+
+    jax.tree.map(visit, state,
+                 is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache,
+                                                  RecState)))
+    if not sums:
+        return jnp.zeros((batch,), jnp.uint32)
+    return functools.reduce(jnp.add, sums)
+
+
 # --------------------------------------------------------------------------
 # Decode step
 # --------------------------------------------------------------------------

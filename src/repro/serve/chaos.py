@@ -52,6 +52,15 @@ class EnginePreempted(RuntimeError):
     """Injected host preemption: the serve loop dies mid-run."""
 
 
+class ReplicaKilled(RuntimeError):
+    """Injected replica death: the whole engine replica is lost mid-serve.
+
+    Unlike :class:`EnginePreempted` (a preemption the *same* engine later
+    resumes from via ``restore_from``), a killed replica never comes
+    back — a fleet router must hand its in-flight requests to survivors
+    from the victim's last snapshot."""
+
+
 def poison_slot_state(state, slot: int):
     """Return ``state`` with ``slot``'s row made non-finite.
 
@@ -108,6 +117,74 @@ def poison_slot_state(state, slot: int):
     )
 
 
+def bitflip_slot_state(state, slot: int):
+    """Return ``state`` with one bit of ``slot``'s row flipped.
+
+    The silent-corruption injector: flipping the lowest mantissa bit of a
+    finite float leaves it finite-but-wrong, so the ``isfinite``
+    quarantine of PR 6 never fires — only the state checksum
+    (:func:`repro.model.model.decode_state_checksum`) can catch it.  Same
+    site preference as :func:`poison_slot_state`: a recurrent ``h``
+    element when the arch has recurrent state, else a KV element of the
+    slot's own row/page.  Neighbors' rows are untouched.
+    """
+    import jax
+    import jax.lax as lax
+
+    has_rec = any(isinstance(n, RecState) for n in _nodes(state))
+
+    def flip_elt(arr, idx):
+        elt = arr[idx]
+        nbytes = jnp.dtype(elt.dtype).itemsize
+        uint = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32,
+                8: jnp.uint64}[nbytes]
+        bits = lax.bitcast_convert_type(elt, uint)
+        flipped = lax.bitcast_convert_type(bits ^ uint(1), elt.dtype)
+        return arr.at[idx].set(flipped)
+
+    done = False
+
+    def fix(node):
+        nonlocal done
+        if done:
+            return node
+        if isinstance(node, RecState):
+            stacked = node.conv.ndim - 3
+            idx = (0,) * stacked + (slot,) + (0,) * (
+                node.h.ndim - stacked - 1)
+            done = True
+            return RecState(h=flip_elt(node.h, idx), conv=node.conv)
+        if isinstance(node, KVCache) and not has_rec:
+            stacked = node.k.ndim - 4
+            idx = (0,) * stacked + (slot, 0, 0, 0)
+            done = True
+            return KVCache(k=flip_elt(node.k, idx), v=node.v,
+                           length=node.length)
+        if isinstance(node, PagedKVCache) and not has_rec:
+            stacked = node.k.ndim - 4
+            tbl = np.asarray(node.page_table)
+            ln = np.asarray(node.length)
+            while tbl.ndim > 2:
+                tbl, ln = tbl[0], ln[0]
+            pos = max(int(ln[slot]) - 1, 0) % node.s_view
+            page = int(tbl[slot, pos // node.page_size])
+            if page < 0:
+                return node
+            idx = (0,) * stacked + (page, pos % node.page_size, 0, 0)
+            done = True
+            return PagedKVCache(
+                k=flip_elt(node.k, idx), v=node.v,
+                page_table=node.page_table, length=node.length,
+                s_view=node.s_view, page_size=node.page_size,
+            )
+        return node
+
+    return jax.tree.map(
+        fix, state,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, RecState)),
+    )
+
+
 def _nodes(state):
     import jax
 
@@ -134,10 +211,17 @@ class ChaosInjector:
     drop_rate: float = 0.0
     hang_rate: float = 0.0
     req_drop_rate: float = 0.0
+    bitflip_rate: float = 0.0
     nan_at: tuple = ()
     drop_at: tuple = ()
     hang_at: tuple = ()
     req_drop_at: tuple = ()
+    #: Silent corruption: flip one state bit of an active slot (finite-
+    #: but-wrong — only the checksum path can detect it).
+    bitflip_at: tuple = ()
+    #: Replica death: raise :class:`ReplicaKilled` once the replica's
+    #: decode-dispatch count reaches the pinned index (fleet drills).
+    replica_kill_at: tuple = ()
     preempt_after: int | None = None
     hang_poll_s: float = 0.005
     # Safety valve: an un-watched hang (no watchdog) ends here and turns
@@ -149,6 +233,7 @@ class ChaosInjector:
         self.events: list[tuple[str, int, Any]] = []
         self.counters = {
             "nan": 0, "drop": 0, "hang": 0, "req_drop": 0, "preempt": 0,
+            "bitflip": 0, "replica_kill": 0,
         }
         self._fired: set[tuple[str, int]] = set()
 
@@ -207,6 +292,22 @@ class ChaosInjector:
             return poison_slot_state(state, slot), slot
         return state, None
 
+    def maybe_bitflip(self, state, active: np.ndarray, index: int,
+                      slot_req: list[int]):
+        """Possibly flip one state bit of an active slot (silent
+        corruption).  Returns (state, slot|None).  Same pinned
+        ``bitflip_at`` fire-exactly-once contract as every other
+        injector: a retried dispatch keeps its index, so the flip lands
+        once and the retry converges."""
+        if not active.any():
+            return state, None
+        if self._hit("bitflip", index, self.bitflip_rate):
+            slot = int(self._rng.choice(np.nonzero(active)[0]))
+            self.counters["bitflip"] += 1
+            self.events.append(("bitflip", index, slot_req[slot]))
+            return bitflip_slot_state(state, slot), slot
+        return state, None
+
     def maybe_drop_request(self, active: np.ndarray, index: int,
                            slot_req: list[int]):
         """Possibly drop one in-flight request.  Returns slot|None."""
@@ -226,4 +327,19 @@ class ChaosInjector:
             self.events.append(("preempt", decode_dispatches, None))
             raise EnginePreempted(
                 f"injected preemption after {decode_dispatches} dispatches"
+            )
+
+    def check_replica_kill(self, decode_dispatches: int):
+        """Raise :class:`ReplicaKilled` at a pinned decode-dispatch count.
+
+        Pinned ``replica_kill_at`` indices fire exactly once (via the
+        shared ``_fired`` guard): a fleet that retries or hands off work
+        never re-kills the same point, so drills converge."""
+        if (decode_dispatches in self.replica_kill_at
+                and ("replica_kill", decode_dispatches) not in self._fired):
+            self._fired.add(("replica_kill", decode_dispatches))
+            self.counters["replica_kill"] += 1
+            self.events.append(("replica_kill", decode_dispatches, None))
+            raise ReplicaKilled(
+                f"injected replica kill at dispatch {decode_dispatches}"
             )

@@ -265,6 +265,10 @@ def audit_jit_entrypoints(cfg, *, batch: int = 2, max_len: int = 64,
              sds((b, 1), i32), key),
             f"{here}._admit_step",
         ),
+        JitEntry(
+            "serve.shadow_checksum", eng._shadow_csum, (state,),
+            f"{here}.__post_init__", donated=None,
+        ),
     ] + _paged_jit_entrypoints(cfg, batch=batch, max_len=max_len,
                                decode_window=decode_window, prompt=prompt)
 
@@ -339,7 +343,10 @@ class Request:
 #:   shed      — rejected at admission: the bounded queue was full
 #:   dropped   — chaos/client drop mid-flight (tokens are partial)
 #:   recovered — completed (budget or EOS) after >= 1 quarantine+re-prefill
-OUTCOMES = ("ok", "eos", "deadline", "shed", "dropped", "recovered")
+#:   corrupt   — checksum-detected silent corruption recurred past the
+#:               recovery cap (tokens are the last verified prefix)
+OUTCOMES = ("ok", "eos", "deadline", "shed", "dropped", "recovered",
+            "corrupt")
 
 #: ``last_serve_stats`` keys, in the (fixed) order they are packed into
 #: the snapshot stats vector — append only, never reorder.
@@ -348,7 +355,14 @@ SERVE_STAT_KEYS = (
     "recoveries", "dispatch_retries", "dispatch_drops",
     "watchdog_timeouts", "stragglers", "deadline_hits", "shed",
     "req_drops", "snapshots", "page_waits", "prefix_admissions",
+    "corruptions", "checksum_spot_checks",
 )
+
+#: A request whose checksum-detected corruption recurs past this many
+#: recovery attempts ends with the terminal ``corrupt`` outcome instead
+#: of cycling forever (a persistently corrupting slot is a hardware
+#: problem, not a retry problem).
+MAX_CORRUPTION_RECOVERIES = 3
 
 
 @dataclasses.dataclass
@@ -542,6 +556,11 @@ class ServeEngine:
         self._prefill = make_cache_prefill_step(
             cfg, self.mesh, last_only=True, max_len=self.max_len
         )
+        # Shadow checksum: the host-side spot check recomputes the state
+        # checksum out-of-band and compares it to the last emitted one.
+        # Read-only by construction — donating here would consume the
+        # live decode state the serve loop still owns.
+        self._shadow_csum = jax.jit(M.decode_state_checksum)
         self._windows = {}
         self._admits = {}
         self._admits_paged = {}
@@ -629,6 +648,11 @@ class ServeEngine:
             def admit(params, state, tokens, admit_row, plen, tok_idx,
                       lengths, counts, budgets, req_ids, active, cur,
                       base_key):
+                # Entry checksum: the state as handed to this dispatch,
+                # *before* any mutation — the host chains it against the
+                # previous dispatch's exit checksum to catch silent
+                # corruption of non-admitted rows between dispatches.
+                csum_in = M.decode_state_checksum(state)
                 state = _reset_slot_rows(state, admit_row)
                 mask = admit_row[:, None] & (
                     jnp.arange(p, dtype=jnp.int32)[None, :] < plen[:, None]
@@ -648,7 +672,9 @@ class ServeEngine:
                     done |= tok0 == eos_id
                 active = jnp.where(admit_row, ~done, active)
                 cur = jnp.where(admit_row[:, None], tok0[:, None], cur)
-                return state, lengths, counts, active, cur, tok0
+                csum_out = M.decode_state_checksum(state)
+                return (state, lengths, counts, active, cur, tok0,
+                        csum_in, csum_out)
 
             fn = jax.jit(admit, donate_argnums=(1,))
             if self.mesh is not None:
@@ -756,6 +782,7 @@ class ServeEngine:
                       prefix_rows, tables, scrubs, rec_entries,
                       ring_contents, tok_idx, lengths, counts, budgets,
                       req_ids, active, cur, base_key):
+                csum_in = M.decode_state_checksum(state)
                 state = _reset_slot_rows(state, admit_row)
                 state = paging.apply_admission(
                     state, roles, admit_row, prefix_rows, start_len,
@@ -779,7 +806,9 @@ class ServeEngine:
                     done |= tok0 == eos_id
                 active = jnp.where(admit_row, ~done, active)
                 cur = jnp.where(admit_row[:, None], tok0[:, None], cur)
-                return state, lengths, counts, active, cur, tok0
+                csum_out = M.decode_state_checksum(state)
+                return (state, lengths, counts, active, cur, tok0,
+                        csum_in, csum_out)
 
             fn = jax.jit(admit, donate_argnums=(1,))
             self._admits_paged[key] = fn
@@ -810,7 +839,18 @@ class ServeEngine:
         stay bit-identical.  The quarantine mask (B,) comes back to the
         host, which re-prefills the victim from its accepted prefix.
 
-        Emits (tokens (k, B), emit-mask (k, B), quarantined (B,)).
+        Silent-corruption detection rides the same dispatch: the window
+        emits a per-slot state checksum at *entry* (the state exactly as
+        received) and at *exit*
+        (:func:`repro.model.model.decode_state_checksum` — integer
+        wraparound sums of the raw state bits, so the comparison is exact
+        and reduction-order-free).  The host chains exit(n) == entry(n+1):
+        anything that flips state bits between dispatches — a finite-but-
+        wrong bit flip the ``isfinite`` quarantine can never see — breaks
+        the chain at the very next window.
+
+        Emits (tokens (k, B), emit-mask (k, B), quarantined (B,),
+        entry/exit checksums (B,) uint32).
         """
         key = (k, temperature, top_k, eos_id)
         fn = self._serve_windows.get(key)
@@ -819,6 +859,7 @@ class ServeEngine:
 
             def win(params, state, cur, lengths, counts, budgets, active,
                     req_ids, base_key):
+                csum_in = M.decode_state_checksum(state)
                 quar0 = jnp.zeros_like(active)
 
                 def body(carry, _):
@@ -858,7 +899,9 @@ class ServeEngine:
                         length=k,
                     )
                 )
-                return state, cur, lengths, counts, active, quar, toks, emits
+                csum_out = M.decode_state_checksum(state)
+                return (state, cur, lengths, counts, active, quar, toks,
+                        emits, csum_in, csum_out)
 
             fn = jax.jit(win, donate_argnums=(1,))
             self._serve_windows[key] = fn
@@ -922,7 +965,8 @@ class ServeEngine:
               snapshot_dir: str | None = None,
               restore_from: str | None = None,
               chaos: Any = None,
-              recoverable: bool | None = None):
+              recoverable: bool | None = None,
+              checksum_every: int = 0):
         """Continuous-batching scheduler: decode ``requests`` through a
         fixed pool of ``slots`` batch slots with per-request progress —
         and with the blast radius of any failure confined to one slot.
@@ -966,7 +1010,17 @@ class ServeEngine:
           table, queues, per-request progress, device state — to
           ``snapshot_dir`` every N decode dispatches
           (:mod:`repro.checkpoint.checkpoint`); ``restore_from`` resumes
-          a preempted serve bit-identically (same requests/args/seed).
+          a preempted serve bit-identically (same requests/args/seed);
+        * ``checksum_every`` > 0 arms silent-corruption detection: every
+          dispatch emits per-slot entry/exit state checksums which the
+          host chains (exit(n) must equal entry(n+1) — a finite-but-
+          wrong bit flip breaks the chain at the next window even though
+          ``isfinite`` never fires), plus a shadow recompute spot check
+          every M windows; a mismatched slot is quarantined, its
+          unverified window tokens are rolled back, and the request is
+          re-admitted from its last verified prefix (outcome
+          ``recovered``; ``corrupt`` once corruption recurs past
+          :data:`MAX_CORRUPTION_RECOVERIES`).
 
         ``chaos`` accepts a :class:`repro.serve.chaos.ChaosInjector` to
         drill all of the above deterministically.  ``recoverable`` sizes
@@ -987,424 +1041,21 @@ class ServeEngine:
         (ok / eos / deadline / shed / dropped / recovered) and the
         per-request recovery count.  Stats land in ``last_serve_stats``.
         """
-        reqs = [
-            r if hasattr(r, "tokens") else Request(tokens=r)
-            for r in requests
-        ]
-        n = len(reqs)
-        if n == 0:
-            self.last_serve_stats = {k: 0 for k in SERVE_STAT_KEYS}
-            return []
-        b = max(1, min(int(slots), n))
-        k_w = max(1, int(self.decode_window))
-        prompts_np = [np.asarray(r.tokens, np.int32).reshape(-1)
-                      for r in reqs]
-        p_lens = [int(a.size) for a in prompts_np]
-        outputs: list[list[int]] = [[] for _ in range(n)]
-        outcomes: list[str | None] = [None] * n
-        recoveries = [0] * n
-        stats = {k: 0 for k in SERVE_STAT_KEYS}
-        ps = int(self.page_size)
-        pid_of: list[int | None] = [None] * n
-        start_of = [0] * n
-        for i, (r, pl) in enumerate(zip(reqs, p_lens)):
-            if pl < 1:
-                raise ValueError("request prompt must be non-empty")
-            if int(r.max_new_tokens) < 1:
-                raise ValueError("max_new_tokens must be >= 1")
-            pid = getattr(r, "prefix_id", None)
-            if pid is not None:
-                if not self.paged:
-                    raise ValueError(
-                        "Request.prefix_id requires a paged engine")
-                pre = self._prefixes.get(pid)
-                if pre is None:
-                    raise ValueError(f"unknown prefix id {pid}")
-                if (pl < pre.size
-                        or not np.array_equal(prompts_np[i][:pre.size],
-                                              pre)):
-                    raise ValueError(
-                        f"request {i}: prompt does not extend registered "
-                        f"prefix {pid}")
-                start = (pre.size // ps) * ps
-                if pl > start:
-                    pid_of[i], start_of[i] = pid, start
-                # else the prompt IS the page-aligned prefix: the entry
-                # leaves no suffix token to prefill from — admit cold.
-            if pl + int(r.max_new_tokens) > self.max_len:
-                # A request that cannot fit the engine's position limit is
-                # load to refuse, not a caller bug that should abort every
-                # other request in the batch: typed shed outcome.
-                outcomes[i] = "shed"
-                stats["shed"] += 1
-        live = [i for i in range(n) if outcomes[i] is None]
-        if recoverable is None:
-            recoverable = (chaos is not None or restore_from is not None
-                           or snapshot_every > 0)
-        # Recovery re-prefills replay prompt + accepted tokens in one
-        # window: size the local-attention ring slack for the worst case
-        # (a request quarantined on its last token) when recovery is in
-        # play.  Off the recovery paths, keep the original sizing — ring
-        # shapes feed attention reductions, so changing them for free
-        # would perturb fault-free bit-parity with older baselines.
-        worst = max(
-            (p_lens[i] + int(reqs[i].max_new_tokens) if recoverable
-             else p_lens[i])
-            for i in live
-        ) if live else 1
-        insert_window = max(k_w, _bucket32(worst))
-        ctl = None
-        if self.paged:
-            # One shared-page region per registered prefix in use this
-            # serve: prefill each prefix's aligned head once (cached),
-            # reserve its pages in every full-view pool, and upload the
-            # K/V content before any admission.
-            used_pids = sorted({pid_of[i] for i in live
-                                if pid_of[i] is not None})
-            shared_map, entries, nxt = {}, {}, 1
-            for pid in used_pids:
-                start, rec, kv = self._prefix_entry(pid, insert_window)
-                shared_map[pid] = (nxt, start // ps)
-                nxt += start // ps
-                entries[pid] = (rec, kv)
-            spec = M.PageSpec(page_size=ps, private_pages=self.pool_pages,
-                              shared_pages=nxt - 1)
-            state = M.init_decode_state(
-                self.cfg, batch=b, max_len=self.max_len,
-                insert_window=insert_window, paged=spec,
-            )
-            ctl = paging.PagedController(
-                self.cfg, state, batch=b, max_len=self.max_len,
-                shared_map=shared_map,
-            )
-            if entries:
-                state = paging.upload_shared(state, ctl, entries)
-            for i in live:
-                if not ctl.fits_capacity(
-                        p_lens[i] + int(reqs[i].max_new_tokens),
-                        start_of[i]):
-                    # Needs more private pages than the pool ever has:
-                    # waiting can never help — shed, don't deadlock.
-                    outcomes[i] = "shed"
-                    stats["shed"] += 1
-        else:
-            state = M.init_decode_state(
-                self.cfg, batch=b, max_len=self.max_len,
-                insert_window=insert_window,
-            )
-        lengths = jnp.zeros((b,), jnp.int32)
-        counts = jnp.zeros((b,), jnp.int32)
-        budgets = jnp.zeros((b,), jnp.int32)
-        req_ids = jnp.zeros((b,), jnp.int32)
-        active = jnp.zeros((b,), bool)
-        cur = jnp.zeros((b, 1), jnp.int32)
-        base_key = jax.random.PRNGKey(seed)
-
-        pending = collections.deque(
-            i for i in range(n) if outcomes[i] is None)
-        recover_q: collections.deque[int] = collections.deque()
-        slot_req = [-1] * b
-        active_np = np.zeros(b, bool)
-
-        watchdog = (StepWatchdog(watchdog_timeout_s)
-                    if watchdog_timeout_s is not None else None)
-        straggler = StragglerDetector(warmup=1)
-        t_start = time.monotonic()
-        any_deadline = (deadline_ms is not None
-                        or any(getattr(r, "deadline_ms", None) is not None
-                               for r in reqs))
-
-        def req_deadline(ri):
-            d = getattr(reqs[ri], "deadline_ms", None)
-            return deadline_ms if d is None else d
-
-        def resolve(ri):
-            if recoveries[ri] > 0:
-                outcomes[ri] = "recovered"
-            elif (eos_id is not None and outputs[ri]
-                    and outputs[ri][-1] == eos_id):
-                outcomes[ri] = "eos"
-            else:
-                outcomes[ri] = "ok"
-
-        if restore_from is not None:
-            (state, cur, lengths, counts, budgets, req_ids, active,
-             slot_req, pending, recover_q, outputs, outcomes, recoveries,
-             stats) = self._restore_serve(
-                restore_from, b, k_w, insert_window, n, seed, state, ctl)
-            active_np = np.array(active)
-        elif max_queue is not None:
-            # Bounded admission queue: b requests admit immediately, at
-            # most max_queue wait; shed the later arrivals (typed
-            # outcome), never queue unboundedly.
-            cap = b + max(0, int(max_queue))
-            while len(pending) > cap:
-                ri = pending.pop()
-                outcomes[ri] = "shed"
-                stats["shed"] += 1
-
-        def snapshot_now():
-            self._snapshot_serve(
-                snapshot_dir, stats, state, cur, lengths, counts, budgets,
-                req_ids, active, slot_req, pending, recover_q, outputs,
-                outcomes, recoveries, b, k_w, insert_window, n, seed, ctl)
-            stats["snapshots"] += 1
-
+        session = ServeSession(
+            self, requests, slots=slots, temperature=temperature,
+            top_k=top_k, eos_id=eos_id, seed=seed, deadline_ms=deadline_ms,
+            max_queue=max_queue, watchdog_timeout_s=watchdog_timeout_s,
+            max_dispatch_retries=max_dispatch_retries,
+            retry_backoff_s=retry_backoff_s, snapshot_every=snapshot_every,
+            snapshot_dir=snapshot_dir, restore_from=restore_from,
+            chaos=chaos, recoverable=recoverable,
+            checksum_every=checksum_every)
         try:
-            while pending or recover_q or active_np.any():
-                # ---- deadlines: in-flight and queued ------------------
-                if any_deadline:
-                    now_ms = (time.monotonic() - t_start) * 1e3
-                    killed = False
-                    for slot in np.nonzero(active_np)[0]:
-                        ri = slot_req[slot]
-                        dl = req_deadline(ri)
-                        if dl is not None and now_ms > dl:
-                            outcomes[ri] = "deadline"
-                            stats["deadline_hits"] += 1
-                            active_np[slot] = False
-                            slot_req[slot] = -1
-                            if ctl is not None:
-                                ctl.free_slot(slot)
-                            killed = True
-                    if killed:
-                        active = jnp.asarray(active_np)
-                    for q in (recover_q, pending):
-                        for _ in range(len(q)):
-                            ri = q.popleft()
-                            dl = req_deadline(ri)
-                            if dl is not None and now_ms > dl:
-                                outcomes[ri] = "deadline"
-                                stats["deadline_hits"] += 1
-                            else:
-                                q.append(ri)
-
-                # ---- admission: recoveries first, then fresh ----------
-                free = [i for i in range(b) if not active_np[i]]
-                take: list[int] = []
-                slot_alloc: dict[int, tuple] = {}
-                group_pid: int | None = None
-                while len(take) < len(free) and (recover_q or pending):
-                    q = recover_q if recover_q else pending
-                    ri = q[0]
-                    if ctl is not None:
-                        pid = pid_of[ri]
-                        if pid is not None:
-                            if group_pid is None:
-                                group_pid = pid
-                            elif pid != group_pid:
-                                # One prefix entry per admission dispatch:
-                                # a second prefix waits for the next round.
-                                break
-                        alloc = ctl.try_admit(
-                            free[len(take)],
-                            p_lens[ri] + int(reqs[ri].max_new_tokens),
-                            pid, start_of[ri])
-                        if alloc is None:
-                            # Pool pressure: the head-of-line request
-                            # waits for pages freed by completions — it
-                            # is never skipped (no starvation reorder).
-                            stats["page_waits"] += 1
-                            break
-                        slot_alloc[free[len(take)]] = alloc
-                    q.popleft()
-                    take.append(ri)
-                if take:
-                    # A recovery's "prompt" is the original prompt plus
-                    # its accepted tokens; fresh requests have none.
-                    used = free[: len(take)]
-                    admit_np = np.zeros(b, bool)
-                    plen_np = np.zeros(b, np.int32)
-                    tokidx_np = np.zeros(b, np.int32)
-                    bud_np = np.array(budgets)
-                    rid_np = np.array(req_ids)
-                    full = {
-                        ri: np.concatenate([
-                            prompts_np[ri],
-                            np.asarray(outputs[ri], np.int32),
-                        ])
-                        for ri in take
-                    }
-                    if ctl is None:
-                        p_b = _bucket32(max(full[ri].size for ri in take))
-                        tok_np = np.zeros((b, p_b), np.int32)
-                        for slot, ri in zip(used, take):
-                            t_arr = full[ri]
-                            tok_np[slot, : t_arr.size] = t_arr
-                            admit_np[slot] = True
-                            plen_np[slot] = t_arr.size
-                            tokidx_np[slot] = len(outputs[ri])
-                            bud_np[slot] = int(reqs[ri].max_new_tokens)
-                            rid_np[slot] = ri
-                            slot_req[slot] = ri
-                        budgets = jnp.asarray(bud_np)
-                        req_ids = jnp.asarray(rid_np)
-                        fn = self._admit_step(
-                            p_b, temperature, top_k, eos_id)
-                        args = (self.params, state, jnp.asarray(tok_np),
-                                jnp.asarray(admit_np), jnp.asarray(plen_np),
-                                jnp.asarray(tokidx_np), lengths, counts,
-                                budgets, req_ids, active, cur, base_key)
-                    else:
-                        # Paged: only the suffix past each request's
-                        # shared-prefix start is prefilled; the prefix
-                        # rides in as copied state / shared pages.
-                        p_b = _bucket32(max(
-                            full[ri].size - start_of[ri] for ri in take))
-                        tok_np = np.zeros((b, p_b), np.int32)
-                        start_np = np.zeros(b, np.int32)
-                        prefix_np = np.zeros(b, bool)
-                        for slot, ri in zip(used, take):
-                            t_arr = full[ri][start_of[ri]:]
-                            tok_np[slot, : t_arr.size] = t_arr
-                            admit_np[slot] = True
-                            plen_np[slot] = t_arr.size
-                            start_np[slot] = start_of[ri]
-                            prefix_np[slot] = start_of[ri] > 0
-                            tokidx_np[slot] = len(outputs[ri])
-                            bud_np[slot] = int(reqs[ri].max_new_tokens)
-                            rid_np[slot] = ri
-                            slot_req[slot] = ri
-                            if start_of[ri] > 0:
-                                stats["prefix_admissions"] += 1
-                        budgets = jnp.asarray(bud_np)
-                        req_ids = jnp.asarray(rid_np)
-                        tables, scrubs = [], []
-                        for i_node, g in enumerate(ctl.geoms):
-                            t_rows = np.full((b, g.nl), -1, np.int32)
-                            s_rows = np.full((b, g.nl), -1, np.int32)
-                            for slot in used:
-                                t_rows[slot] = slot_alloc[slot][0][i_node]
-                                s_rows[slot] = slot_alloc[slot][1][i_node]
-                            tables.append(jnp.asarray(t_rows))
-                            scrubs.append(jnp.asarray(s_rows))
-                        if group_pid is not None:
-                            _, rec, kv = self._prefix_entry(
-                                group_pid, insert_window)
-                        else:
-                            rec, kv = self._null_entry(insert_window)
-                        ring = [kv[i] for i, role in enumerate(ctl.roles)
-                                if role == "copy"]
-                        fn = self._admit_step_paged(
-                            p_b, temperature, top_k, eos_id, ctl.roles)
-                        args = (self.params, state, jnp.asarray(tok_np),
-                                jnp.asarray(admit_np), jnp.asarray(plen_np),
-                                jnp.asarray(start_np),
-                                jnp.asarray(prefix_np), tables, scrubs,
-                                rec, ring, jnp.asarray(tokidx_np), lengths,
-                                counts, budgets, req_ids, active, cur,
-                                base_key)
-                    state, lengths, counts, active, cur, tok0 = (
-                        self._dispatch(
-                            "admit", fn, args,
-                            chaos=chaos, watchdog=watchdog,
-                            straggler=straggler, stats=stats,
-                            max_retries=max_dispatch_retries,
-                            backoff_s=retry_backoff_s,
-                            index=stats["decode_dispatches"],
-                        )
-                    )
-                    tok0_np = np.asarray(tok0)
-                    active_np = np.array(active)
-                    for slot, ri in zip(used, take):
-                        outputs[ri].append(int(tok0_np[slot]))
-                        if not active_np[slot]:
-                            # Done at admission (budget 1 / instant EOS).
-                            resolve(ri)
-                            slot_req[slot] = -1
-                            if ctl is not None:
-                                ctl.free_slot(slot)
-                    stats["admissions"] += 1
-
-                # ---- decode window ------------------------------------
-                if active_np.any():
-                    if chaos is not None:
-                        state, _ = chaos.maybe_poison(
-                            state, active_np, stats["decode_dispatches"],
-                            slot_req)
-                    fn = self._serve_window(k_w, temperature, top_k, eos_id)
-                    (state, cur, lengths, counts, active, quar, toks,
-                     emits) = self._dispatch(
-                        "window", fn,
-                        (self.params, state, cur, lengths, counts, budgets,
-                         active, req_ids, base_key),
-                        chaos=chaos, watchdog=watchdog, straggler=straggler,
-                        stats=stats, max_retries=max_dispatch_retries,
-                        backoff_s=retry_backoff_s,
-                        index=stats["decode_dispatches"],
-                    )
-                    toks_np = np.asarray(toks)
-                    emits_np = np.asarray(emits)
-                    for step in range(k_w):
-                        for slot in np.nonzero(emits_np[step])[0]:
-                            outputs[slot_req[slot]].append(
-                                int(toks_np[step, slot]))
-                    prev_active = active_np
-                    active_np = np.array(active)
-                    quar_np = np.asarray(quar)
-                    stats["decode_dispatches"] += 1
-                    stats["slot_steps"] += k_w * b
-                    # Quarantined slots: queue the victim for re-prefill
-                    # recovery from its accepted prefix.
-                    for slot in np.nonzero(quar_np)[0]:
-                        ri = slot_req[slot]
-                        stats["quarantines"] += 1
-                        stats["recoveries"] += 1
-                        recoveries[ri] += 1
-                        recover_q.append(ri)
-                        slot_req[slot] = -1
-                        if ctl is not None:
-                            ctl.free_slot(slot)
-                    # Completions: active before, inactive after, and not
-                    # quarantined.
-                    for slot in np.nonzero(
-                            prev_active & ~active_np & ~quar_np)[0]:
-                        ri = slot_req[slot]
-                        if ri >= 0:
-                            resolve(ri)
-                            slot_req[slot] = -1
-                            if ctl is not None:
-                                ctl.free_slot(slot)
-                    if chaos is not None:
-                        slot = chaos.maybe_drop_request(
-                            active_np, stats["decode_dispatches"], slot_req)
-                        if slot is not None:
-                            ri = slot_req[slot]
-                            outcomes[ri] = "dropped"
-                            stats["req_drops"] += 1
-                            active_np[slot] = False
-                            slot_req[slot] = -1
-                            if ctl is not None:
-                                ctl.free_slot(slot)
-                            active = jnp.asarray(active_np)
-                    if (snapshot_every > 0 and snapshot_dir is not None
-                            and stats["decode_dispatches"]
-                            % snapshot_every == 0):
-                        snapshot_now()
-                    if chaos is not None:
-                        chaos.check_preempt(stats["decode_dispatches"])
+            while session.busy:
+                session.step()
         finally:
-            self.last_serve_stats = stats
-            if ctl is not None:
-                ctl.audit(state, active_np, slot_req)
-                self.last_paged_stats = {
-                    "page_size": ps,
-                    "shared_pages": ctl.shared_total,
-                    "pool_bytes": ctl.pool_bytes(),
-                    "dense_bytes": ctl.dense_bytes(),
-                    "peak_mapped_bytes": ctl.peak_mapped_bytes,
-                    "page_table_violations": len(ctl.violations),
-                }
-
-        results = []
-        for i in range(n):
-            if outcomes[i] is None:      # defensive: loop exit ⇒ terminal
-                resolve(i)
-            results.append(RequestResult(
-                tokens=np.asarray(outputs[i], np.int32),
-                outcome=outcomes[i], recoveries=recoveries[i],
-            ))
-        return results
+            session.close()
+        return session.results()
 
     # -- engine snapshot / restore ---------------------------------------
 
@@ -1422,7 +1073,8 @@ class ServeEngine:
     def _snapshot_serve(self, snapshot_dir, stats, state, cur, lengths,
                         counts, budgets, req_ids, active, slot_req, pending,
                         recover_q, outputs, outcomes, recoveries,
-                        b, k_w, insert_window, n, seed, ctl=None):
+                        b, k_w, insert_window, n, seed, ctl=None,
+                        corruptions=None, saver=None):
         """Checkpoint the whole serve loop as ONE atomic tree: device
         state + slot table + queues + per-request progress + stats.
 
@@ -1453,6 +1105,9 @@ class ServeEngine:
             "out_off": out_off,
             "outcome_codes": codes,
             "recoveries": np.asarray(recoveries, np.int64),
+            "corruptions": np.asarray(
+                corruptions if corruptions is not None else [0] * n,
+                np.int64),
             "stats": np.asarray(
                 [stats[k] for k in SERVE_STAT_KEYS], np.int64),
         }
@@ -1471,7 +1126,14 @@ class ServeEngine:
             "host": host,
             "meta": self._serve_meta(b, k_w, insert_window, n, seed, ctl),
         }
-        C.save(snapshot_dir, stats["decode_dispatches"], tree)
+        if saver is not None:
+            # Fleet replicas snapshot through an AsyncSaver: the host copy
+            # is taken synchronously (so the tree is still one atomic
+            # moment) and the write overlaps the next windows.  A failed
+            # background write surfaces here on the next snapshot.
+            saver.save_async(snapshot_dir, stats["decode_dispatches"], tree)
+        else:
+            C.save(snapshot_dir, stats["decode_dispatches"], tree)
 
     def _restore_serve(self, restore_from, b, k_w, insert_window, n, seed,
                        state_template, ctl=None):
@@ -1529,13 +1191,15 @@ class ServeEngine:
         ]
         stats = {k: int(v)
                  for k, v in zip(SERVE_STAT_KEYS, host["stats"])}
+        corruptions = host.get("corruptions", np.zeros(n, np.int64))
         return (d["state"], d["cur"], d["lengths"], d["counts"],
                 d["budgets"], d["req_ids"], d["active"],
                 [int(s) for s in host["slot_req"]],
                 collections.deque(int(i) for i in host["pending"]),
                 collections.deque(int(i) for i in host["recover_q"]),
                 outputs, outcomes,
-                [int(r) for r in host["recoveries"]], stats)
+                [int(r) for r in host["recoveries"]],
+                [int(c) for c in corruptions], stats)
 
     def generate(self, prompts: jax.Array, num_new_tokens: int,
                  prompt_lengths=None) -> jax.Array:
@@ -1581,3 +1245,687 @@ class ServeEngine:
             out.append(toks)
             left -= k
         return jnp.concatenate(out, axis=1)
+
+class ServeSession:
+    """One resumable continuous-batching serve loop — the engine-side half
+    of a fleet replica.
+
+    :meth:`ServeEngine.serve` is this object driven to completion.  A
+    :class:`repro.serve.fleet.FleetRouter` instead constructs one session
+    per replica engine and *interleaves* :meth:`step` calls across them:
+    each ``step()`` is exactly one scheduler iteration (deadline sweep,
+    admission, one decode window), so N sessions in one process make
+    independent progress the same way lane 2's fake devices simulate a
+    mesh.
+
+    ``external=True`` starts the local queue empty: the session still
+    sees the FULL request list — slot shapes, request ids, the
+    insert-window bucket and the snapshot meta are then identical on
+    every replica, which is the precondition for bit-identical streams
+    under rescheduling and for snapshot handoff — but requests only
+    enter via :meth:`enqueue` (router assignment) or
+    :meth:`enqueue_handoff` (resume from a dead replica's snapshot).
+
+    ``clock_origin`` anchors deadline arithmetic: a router passes one
+    shared origin so ``deadline_ms`` counts the time a request spent
+    waiting in the shared fleet queue, not just post-assignment decode
+    time.  ``saver`` (a :class:`repro.checkpoint.checkpoint.AsyncSaver`)
+    moves snapshot writes off the dispatch path.
+    """
+
+    def __init__(self, engine, requests, *, slots: int = 4,
+                 temperature: float = 0.0, top_k: int = 0,
+                 eos_id: int | None = None, seed: int = 0,
+                 deadline_ms: float | None = None,
+                 max_queue: int | None = None,
+                 watchdog_timeout_s: float | None = None,
+                 max_dispatch_retries: int = 3,
+                 retry_backoff_s: float = 0.02,
+                 snapshot_every: int = 0,
+                 snapshot_dir: str | None = None,
+                 restore_from: str | None = None,
+                 chaos: Any = None,
+                 recoverable: bool | None = None,
+                 checksum_every: int = 0,
+                 clock=time.monotonic,
+                 clock_origin: float | None = None,
+                 external: bool = False,
+                 saver: Any = None):
+        eng = engine
+        self.eng = eng
+        self.temperature = temperature
+        self.top_k = top_k
+        self.eos_id = eos_id
+        self.seed = seed
+        self.deadline_ms = deadline_ms
+        self.max_retries = max_dispatch_retries
+        self.backoff_s = retry_backoff_s
+        self.snapshot_every = snapshot_every
+        self.snapshot_dir = snapshot_dir
+        self.chaos = chaos
+        self.checksum_every = int(checksum_every)
+        self.saver = saver
+        self.external = external
+        self._clock = clock
+        self.closed = False
+
+        reqs = [
+            r if hasattr(r, "tokens") else Request(tokens=r)
+            for r in requests
+        ]
+        self.reqs = reqs
+        n = len(reqs)
+        self.n = n
+        b = max(1, min(int(slots), n)) if n else 1
+        self.b = b
+        k_w = max(1, int(eng.decode_window))
+        self.k_w = k_w
+        self.prompts_np = [np.asarray(r.tokens, np.int32).reshape(-1)
+                           for r in reqs]
+        self.p_lens = [int(a.size) for a in self.prompts_np]
+        self.outputs: list[list[int]] = [[] for _ in range(n)]
+        self.outcomes: list[str | None] = [None] * n
+        self.recoveries = [0] * n
+        self.corruptions = [0] * n
+        self.stats = {k: 0 for k in SERVE_STAT_KEYS}
+        #: Requests that reached a terminal outcome in THIS session, in
+        #: completion order — a fleet router drains these after every
+        #: step, so results delivered before a replica dies are never
+        #: re-run.
+        self.newly_done: collections.deque[int] = collections.deque()
+        ps = int(eng.page_size)
+        self.pid_of: list[int | None] = [None] * n
+        self.start_of = [0] * n
+        for i, (r, pl) in enumerate(zip(reqs, self.p_lens)):
+            if pl < 1:
+                raise ValueError("request prompt must be non-empty")
+            if int(r.max_new_tokens) < 1:
+                raise ValueError("max_new_tokens must be >= 1")
+            pid = getattr(r, "prefix_id", None)
+            if pid is not None:
+                if not eng.paged:
+                    raise ValueError(
+                        "Request.prefix_id requires a paged engine")
+                pre = eng._prefixes.get(pid)
+                if pre is None:
+                    raise ValueError(f"unknown prefix id {pid}")
+                if (pl < pre.size
+                        or not np.array_equal(self.prompts_np[i][:pre.size],
+                                              pre)):
+                    raise ValueError(
+                        f"request {i}: prompt does not extend registered "
+                        f"prefix {pid}")
+                start = (pre.size // ps) * ps
+                if pl > start:
+                    self.pid_of[i], self.start_of[i] = pid, start
+                # else the prompt IS the page-aligned prefix: the entry
+                # leaves no suffix token to prefill from — admit cold.
+            if pl + int(r.max_new_tokens) > eng.max_len:
+                # A request that cannot fit the engine's position limit is
+                # load to refuse, not a caller bug that should abort every
+                # other request in the batch: typed shed outcome.
+                self.outcomes[i] = "shed"
+                self.stats["shed"] += 1
+                self.newly_done.append(i)
+        live = [i for i in range(n) if self.outcomes[i] is None]
+        if recoverable is None:
+            recoverable = (chaos is not None or restore_from is not None
+                           or snapshot_every > 0 or external)
+        # Recovery re-prefills replay prompt + accepted tokens in one
+        # window: size the local-attention ring slack for the worst case
+        # (a request quarantined on its last token) when recovery is in
+        # play.  Off the recovery paths, keep the original sizing — ring
+        # shapes feed attention reductions, so changing them for free
+        # would perturb fault-free bit-parity with older baselines.
+        worst = max(
+            (self.p_lens[i] + int(reqs[i].max_new_tokens) if recoverable
+             else self.p_lens[i])
+            for i in live
+        ) if live else 1
+        insert_window = max(k_w, _bucket32(worst))
+        self.insert_window = insert_window
+        ctl = None
+        if eng.paged:
+            # One shared-page region per registered prefix in use this
+            # serve: prefill each prefix's aligned head once (cached),
+            # reserve its pages in every full-view pool, and upload the
+            # K/V content before any admission.
+            used_pids = sorted({self.pid_of[i] for i in live
+                                if self.pid_of[i] is not None})
+            shared_map, entries, nxt = {}, {}, 1
+            for pid in used_pids:
+                start, rec, kv = eng._prefix_entry(pid, insert_window)
+                shared_map[pid] = (nxt, start // ps)
+                nxt += start // ps
+                entries[pid] = (rec, kv)
+            spec = M.PageSpec(page_size=ps, private_pages=eng.pool_pages,
+                              shared_pages=nxt - 1)
+            state = M.init_decode_state(
+                eng.cfg, batch=b, max_len=eng.max_len,
+                insert_window=insert_window, paged=spec,
+            )
+            ctl = paging.PagedController(
+                eng.cfg, state, batch=b, max_len=eng.max_len,
+                shared_map=shared_map,
+            )
+            if entries:
+                state = paging.upload_shared(state, ctl, entries)
+            for i in live:
+                if not ctl.fits_capacity(
+                        self.p_lens[i] + int(reqs[i].max_new_tokens),
+                        self.start_of[i]):
+                    # Needs more private pages than the pool ever has:
+                    # waiting can never help — shed, don't deadlock.
+                    self.outcomes[i] = "shed"
+                    self.stats["shed"] += 1
+                    self.newly_done.append(i)
+        else:
+            state = M.init_decode_state(
+                eng.cfg, batch=b, max_len=eng.max_len,
+                insert_window=insert_window,
+            )
+        self.ctl = ctl
+        self.state = state
+        self.lengths = jnp.zeros((b,), jnp.int32)
+        self.counts = jnp.zeros((b,), jnp.int32)
+        self.budgets = jnp.zeros((b,), jnp.int32)
+        self.req_ids = jnp.zeros((b,), jnp.int32)
+        self.active = jnp.zeros((b,), bool)
+        self.cur = jnp.zeros((b, 1), jnp.int32)
+        self.base_key = jax.random.PRNGKey(seed)
+
+        if external:
+            self.pending: collections.deque[int] = collections.deque()
+        else:
+            self.pending = collections.deque(
+                i for i in range(n) if self.outcomes[i] is None)
+        self.recover_q: collections.deque[int] = collections.deque()
+        self.slot_req = [-1] * b
+        self.active_np = np.zeros(b, bool)
+
+        self.watchdog = (StepWatchdog(watchdog_timeout_s)
+                         if watchdog_timeout_s is not None else None)
+        self.straggler = StragglerDetector(warmup=1)
+        self.t_origin = clock_origin if clock_origin is not None else clock()
+        self.any_deadline = (
+            deadline_ms is not None
+            or any(getattr(r, "deadline_ms", None) is not None
+                   for r in reqs))
+
+        # Checksum chain state: after any dispatch, _csum_base holds the
+        # per-slot exit checksums the next dispatch's entry must match.
+        self._csum_base = np.zeros(b, np.uint32)
+        self._csum_have = False
+        self._since_spot = 0
+
+        if restore_from is not None:
+            (self.state, self.cur, self.lengths, self.counts, self.budgets,
+             self.req_ids, self.active, self.slot_req, self.pending,
+             self.recover_q, self.outputs, self.outcomes, self.recoveries,
+             self.corruptions, self.stats) = eng._restore_serve(
+                restore_from, b, k_w, insert_window, n, seed, state, ctl)
+            self.active_np = np.array(self.active)
+        elif max_queue is not None and not external:
+            # Bounded admission queue: b requests admit immediately, at
+            # most max_queue wait; shed the later arrivals (typed
+            # outcome), never queue unboundedly.
+            cap = b + max(0, int(max_queue))
+            while len(self.pending) > cap:
+                ri = self.pending.pop()
+                self.outcomes[ri] = "shed"
+                self.stats["shed"] += 1
+                self.newly_done.append(ri)
+
+    # -- queue interface (router-facing) --------------------------------
+
+    @property
+    def busy(self) -> bool:
+        """True while this session has local work (queued or in-flight)."""
+        return bool(self.pending or self.recover_q or self.active_np.any())
+
+    def enqueue(self, ri: int):
+        """Assign request ``ri`` (an index into the full request list) to
+        this session's local queue."""
+        if self.outcomes[ri] is not None:
+            raise ValueError(f"request {ri} already terminal "
+                             f"({self.outcomes[ri]})")
+        self.pending.append(ri)
+
+    def enqueue_handoff(self, ri: int, accepted) -> None:
+        """Resume request ``ri`` from another replica's snapshot: seed its
+        output with the ``accepted`` token prefix and queue it through the
+        recovery path (re-prefill of prompt + accepted tokens).  The
+        per-(request, token-index) sampling keys make the continuation
+        bit-identical to the stream the dead replica was producing."""
+        self.outputs[ri] = [int(t) for t in accepted]
+        self.outcomes[ri] = None
+        self.recoveries[ri] += 1
+        self.stats["recoveries"] += 1
+        self.recover_q.append(ri)
+
+    def queue_depth(self) -> int:
+        """Queued + in-flight request count (router load signal)."""
+        return (len(self.pending) + len(self.recover_q)
+                + int(self.active_np.sum()))
+
+    def recovery_debt_steps(self, window: int = 1) -> int:
+        """Modeled decode steps this session must spend on re-prefills
+        before its recovery queue is clean (router placement bias — see
+        :func:`repro.core.cost_model.serve_recovery_steps`)."""
+        from repro.core import cost_model
+
+        total = 0
+        for ri in self.recover_q:
+            isolated, _ = cost_model.serve_recovery_steps(
+                [self.p_lens[ri]], [len(self.outputs[ri])], 0,
+                window=window)
+            total += isolated
+        return total
+
+    def drain_done(self) -> list[int]:
+        """Pop and return requests that reached a terminal outcome since
+        the last drain."""
+        out = []
+        while self.newly_done:
+            out.append(self.newly_done.popleft())
+        return out
+
+    # -- outcome helpers -------------------------------------------------
+
+    def _req_deadline(self, ri):
+        d = getattr(self.reqs[ri], "deadline_ms", None)
+        return self.deadline_ms if d is None else d
+
+    def _resolve(self, ri):
+        if self.recoveries[ri] > 0:
+            self.outcomes[ri] = "recovered"
+        elif (self.eos_id is not None and self.outputs[ri]
+                and self.outputs[ri][-1] == self.eos_id):
+            self.outcomes[ri] = "eos"
+        else:
+            self.outcomes[ri] = "ok"
+        self.newly_done.append(ri)
+
+    def _free_slot(self, slot):
+        self.slot_req[slot] = -1
+        if self.ctl is not None:
+            self.ctl.free_slot(slot)
+
+    # -- the scheduler iteration ----------------------------------------
+
+    def step(self):
+        """One scheduler iteration: deadline sweep, admission (recoveries
+        first), one decode window with quarantine / checksum / chaos
+        bookkeeping.  Exactly the loop body :meth:`ServeEngine.serve`
+        always ran — extracted so a fleet can interleave replicas."""
+        self._sweep_deadlines()
+        self._admit()
+        self._decode_window()
+
+    def _sweep_deadlines(self):
+        if not self.any_deadline:
+            return
+        now_ms = (self._clock() - self.t_origin) * 1e3
+        killed = False
+        for slot in np.nonzero(self.active_np)[0]:
+            ri = self.slot_req[slot]
+            dl = self._req_deadline(ri)
+            if dl is not None and now_ms > dl:
+                self.outcomes[ri] = "deadline"
+                self.stats["deadline_hits"] += 1
+                self.newly_done.append(ri)
+                self.active_np[slot] = False
+                self._free_slot(slot)
+                killed = True
+        if killed:
+            self.active = jnp.asarray(self.active_np)
+        for q in (self.recover_q, self.pending):
+            for _ in range(len(q)):
+                ri = q.popleft()
+                dl = self._req_deadline(ri)
+                if dl is not None and now_ms > dl:
+                    self.outcomes[ri] = "deadline"
+                    self.stats["deadline_hits"] += 1
+                    self.newly_done.append(ri)
+                else:
+                    q.append(ri)
+
+    def _admit(self):
+        eng, b = self.eng, self.b
+        ctl = self.ctl
+        free = [i for i in range(b) if not self.active_np[i]]
+        take: list[int] = []
+        slot_alloc: dict[int, tuple] = {}
+        group_pid: int | None = None
+        while len(take) < len(free) and (self.recover_q or self.pending):
+            q = self.recover_q if self.recover_q else self.pending
+            ri = q[0]
+            if ctl is not None:
+                pid = self.pid_of[ri]
+                if pid is not None:
+                    if group_pid is None:
+                        group_pid = pid
+                    elif pid != group_pid:
+                        # One prefix entry per admission dispatch: a
+                        # second prefix waits for the next round.
+                        break
+                alloc = ctl.try_admit(
+                    free[len(take)],
+                    self.p_lens[ri] + int(self.reqs[ri].max_new_tokens),
+                    pid, self.start_of[ri])
+                if alloc is None:
+                    # Pool pressure: the head-of-line request waits for
+                    # pages freed by completions — it is never skipped
+                    # (no starvation reorder).
+                    self.stats["page_waits"] += 1
+                    break
+                slot_alloc[free[len(take)]] = alloc
+            q.popleft()
+            take.append(ri)
+        if not take:
+            return
+        # A recovery's "prompt" is the original prompt plus its accepted
+        # tokens; fresh requests have none.
+        used = free[: len(take)]
+        admit_np = np.zeros(b, bool)
+        plen_np = np.zeros(b, np.int32)
+        tokidx_np = np.zeros(b, np.int32)
+        bud_np = np.array(self.budgets)
+        rid_np = np.array(self.req_ids)
+        full = {
+            ri: np.concatenate([
+                self.prompts_np[ri],
+                np.asarray(self.outputs[ri], np.int32),
+            ])
+            for ri in take
+        }
+        if ctl is None:
+            p_b = _bucket32(max(full[ri].size for ri in take))
+            tok_np = np.zeros((b, p_b), np.int32)
+            for slot, ri in zip(used, take):
+                t_arr = full[ri]
+                tok_np[slot, : t_arr.size] = t_arr
+                admit_np[slot] = True
+                plen_np[slot] = t_arr.size
+                tokidx_np[slot] = len(self.outputs[ri])
+                bud_np[slot] = int(self.reqs[ri].max_new_tokens)
+                rid_np[slot] = ri
+                self.slot_req[slot] = ri
+            self.budgets = jnp.asarray(bud_np)
+            self.req_ids = jnp.asarray(rid_np)
+            fn = eng._admit_step(
+                p_b, self.temperature, self.top_k, self.eos_id)
+            args = (eng.params, self.state, jnp.asarray(tok_np),
+                    jnp.asarray(admit_np), jnp.asarray(plen_np),
+                    jnp.asarray(tokidx_np), self.lengths, self.counts,
+                    self.budgets, self.req_ids, self.active, self.cur,
+                    self.base_key)
+        else:
+            # Paged: only the suffix past each request's shared-prefix
+            # start is prefilled; the prefix rides in as copied state /
+            # shared pages.
+            p_b = _bucket32(max(
+                full[ri].size - self.start_of[ri] for ri in take))
+            tok_np = np.zeros((b, p_b), np.int32)
+            start_np = np.zeros(b, np.int32)
+            prefix_np = np.zeros(b, bool)
+            for slot, ri in zip(used, take):
+                t_arr = full[ri][self.start_of[ri]:]
+                tok_np[slot, : t_arr.size] = t_arr
+                admit_np[slot] = True
+                plen_np[slot] = t_arr.size
+                start_np[slot] = self.start_of[ri]
+                prefix_np[slot] = self.start_of[ri] > 0
+                tokidx_np[slot] = len(self.outputs[ri])
+                bud_np[slot] = int(self.reqs[ri].max_new_tokens)
+                rid_np[slot] = ri
+                self.slot_req[slot] = ri
+                if self.start_of[ri] > 0:
+                    self.stats["prefix_admissions"] += 1
+            self.budgets = jnp.asarray(bud_np)
+            self.req_ids = jnp.asarray(rid_np)
+            tables, scrubs = [], []
+            for i_node, g in enumerate(ctl.geoms):
+                t_rows = np.full((b, g.nl), -1, np.int32)
+                s_rows = np.full((b, g.nl), -1, np.int32)
+                for slot in used:
+                    t_rows[slot] = slot_alloc[slot][0][i_node]
+                    s_rows[slot] = slot_alloc[slot][1][i_node]
+                tables.append(jnp.asarray(t_rows))
+                scrubs.append(jnp.asarray(s_rows))
+            if group_pid is not None:
+                _, rec, kv = eng._prefix_entry(
+                    group_pid, self.insert_window)
+            else:
+                rec, kv = eng._null_entry(self.insert_window)
+            ring = [kv[i] for i, role in enumerate(ctl.roles)
+                    if role == "copy"]
+            fn = eng._admit_step_paged(
+                p_b, self.temperature, self.top_k, self.eos_id, ctl.roles)
+            args = (eng.params, self.state, jnp.asarray(tok_np),
+                    jnp.asarray(admit_np), jnp.asarray(plen_np),
+                    jnp.asarray(start_np), jnp.asarray(prefix_np),
+                    tables, scrubs, rec, ring, jnp.asarray(tokidx_np),
+                    self.lengths, self.counts, self.budgets, self.req_ids,
+                    self.active, self.cur, self.base_key)
+        (self.state, self.lengths, self.counts, self.active, self.cur,
+         tok0, entry_csum, exit_csum) = eng._dispatch(
+            "admit", fn, args,
+            chaos=self.chaos, watchdog=self.watchdog,
+            straggler=self.straggler, stats=self.stats,
+            max_retries=self.max_retries, backoff_s=self.backoff_s,
+            index=self.stats["decode_dispatches"],
+        )
+        tok0_np = np.asarray(tok0)
+        self.active_np = np.array(self.active)
+        if self.checksum_every > 0:
+            # Chain check for the rows this admission did NOT touch: their
+            # state is frozen through the jit, so a mismatch means the
+            # bits changed between dispatches.
+            self._chain_check(np.asarray(entry_csum), skip=admit_np,
+                              emits_np=None)
+            self._csum_base = np.asarray(exit_csum).copy()
+            self._csum_have = True
+        for slot, ri in zip(used, take):
+            self.outputs[ri].append(int(tok0_np[slot]))
+            if not self.active_np[slot]:
+                # Done at admission (budget 1 / instant EOS).
+                self._resolve(ri)
+                self._free_slot(slot)
+        self.stats["admissions"] += 1
+
+    def _decode_window(self):
+        if not self.active_np.any():
+            return
+        eng = self.eng
+        if self.chaos is not None:
+            self.state, _ = self.chaos.maybe_poison(
+                self.state, self.active_np, self.stats["decode_dispatches"],
+                self.slot_req)
+            self.state, _ = self.chaos.maybe_bitflip(
+                self.state, self.active_np, self.stats["decode_dispatches"],
+                self.slot_req)
+        fn = eng._serve_window(self.k_w, self.temperature, self.top_k,
+                               self.eos_id)
+        (self.state, self.cur, self.lengths, self.counts, self.active,
+         quar, toks, emits, entry_csum, exit_csum) = eng._dispatch(
+            "window", fn,
+            (eng.params, self.state, self.cur, self.lengths, self.counts,
+             self.budgets, self.active, self.req_ids, self.base_key),
+            chaos=self.chaos, watchdog=self.watchdog,
+            straggler=self.straggler, stats=self.stats,
+            max_retries=self.max_retries, backoff_s=self.backoff_s,
+            index=self.stats["decode_dispatches"],
+        )
+        toks_np = np.asarray(toks)
+        emits_np = np.asarray(emits)
+        for step_i in range(self.k_w):
+            for slot in np.nonzero(emits_np[step_i])[0]:
+                self.outputs[self.slot_req[slot]].append(
+                    int(toks_np[step_i, slot]))
+        prev_active = self.active_np
+        self.active_np = np.array(self.active)
+        quar_np = np.asarray(quar)
+        self.stats["decode_dispatches"] += 1
+        self.stats["slot_steps"] += self.k_w * self.b
+        corrupt_np = np.zeros(self.b, bool)
+        if self.checksum_every > 0:
+            # Checksum chain: this window's entry checksum must equal the
+            # last dispatch's exit checksum.  In-jit quarantined slots are
+            # skipped here — the NaN path already recovers them.
+            corrupt_np = self._chain_check(
+                np.asarray(entry_csum), skip=quar_np, emits_np=emits_np)
+            self._csum_base = np.asarray(exit_csum).copy()
+            self._csum_have = True
+        # Quarantined slots: queue the victim for re-prefill recovery
+        # from its accepted prefix.
+        for slot in np.nonzero(quar_np)[0]:
+            ri = self.slot_req[slot]
+            self.stats["quarantines"] += 1
+            self.stats["recoveries"] += 1
+            self.recoveries[ri] += 1
+            self.recover_q.append(ri)
+            self._free_slot(slot)
+        # Completions: active before, inactive after, not quarantined and
+        # not checksum-corrupt (a corrupt slot's "completion" was computed
+        # from bad bits — it re-queues instead).
+        for slot in np.nonzero(
+                prev_active & ~self.active_np & ~quar_np & ~corrupt_np)[0]:
+            ri = self.slot_req[slot]
+            if ri >= 0:
+                self._resolve(ri)
+                self._free_slot(slot)
+        if self.chaos is not None:
+            slot = self.chaos.maybe_drop_request(
+                self.active_np, self.stats["decode_dispatches"],
+                self.slot_req)
+            if slot is not None:
+                ri = self.slot_req[slot]
+                self.outcomes[ri] = "dropped"
+                self.stats["req_drops"] += 1
+                self.newly_done.append(ri)
+                self.active_np[slot] = False
+                self._free_slot(slot)
+                self.active = jnp.asarray(self.active_np)
+        if self.checksum_every > 0:
+            self._since_spot += 1
+            if self._since_spot >= self.checksum_every:
+                self._spot_check()
+        if (self.snapshot_every > 0 and self.snapshot_dir is not None
+                and self.stats["decode_dispatches"]
+                % self.snapshot_every == 0):
+            self.snapshot_now()
+        if self.chaos is not None:
+            self.chaos.check_preempt(self.stats["decode_dispatches"])
+            self.chaos.check_replica_kill(self.stats["decode_dispatches"])
+
+    # -- silent-corruption detection -------------------------------------
+
+    def _chain_check(self, entry_np, *, skip, emits_np):
+        """Compare a dispatch's entry checksums against the previous
+        dispatch's exit checksums.  Slots in ``skip`` (admitted rows,
+        in-jit quarantined rows) are excluded.  For window dispatches,
+        ``emits_np`` lets the detector roll back the tokens the corrupted
+        window emitted — they were computed from bad bits, and the
+        re-admission regenerates them from the last verified prefix.
+        Returns the (B,) bool mask of corrupt slots."""
+        corrupt = np.zeros(self.b, bool)
+        if not self._csum_have:
+            return corrupt
+        for slot in range(self.b):
+            if skip[slot] or self.slot_req[slot] < 0:
+                continue
+            if entry_np[slot] == self._csum_base[slot]:
+                continue
+            corrupt[slot] = True
+            rollback = (int(emits_np[:, slot].sum())
+                        if emits_np is not None else 0)
+            self._corrupted(slot, rollback)
+        if corrupt.any():
+            self.active = jnp.asarray(self.active_np)
+        return corrupt
+
+    def _corrupted(self, slot: int, rollback: int):
+        ri = self.slot_req[slot]
+        self.stats["corruptions"] += 1
+        self.stats["quarantines"] += 1
+        self.corruptions[ri] += 1
+        if rollback:
+            del self.outputs[ri][len(self.outputs[ri]) - rollback:]
+        self.active_np[slot] = False
+        self._free_slot(slot)
+        if self.corruptions[ri] > MAX_CORRUPTION_RECOVERIES:
+            # Persistent corruption is a hardware problem, not a retry
+            # problem: terminal typed outcome, last verified prefix kept.
+            self.outcomes[ri] = "corrupt"
+            self.newly_done.append(ri)
+        else:
+            self.stats["recoveries"] += 1
+            self.recoveries[ri] += 1
+            self.recover_q.append(ri)
+
+    def _spot_check(self):
+        """Shadow recompute: re-checksum the live state out-of-band and
+        compare against the last emitted exit checksums.  The chain
+        catches anything that flips bits *between* dispatches; this
+        catches corruption after the most recent emission (and would
+        catch an emission path that lies)."""
+        self._since_spot = 0
+        if not self._csum_have:
+            return
+        self.stats["checksum_spot_checks"] += 1
+        shadow = np.asarray(self.eng._shadow_csum(self.state))
+        bad = False
+        for slot in range(self.b):
+            if self.slot_req[slot] < 0:
+                continue
+            if shadow[slot] != self._csum_base[slot]:
+                self._corrupted(slot, rollback=0)
+                bad = True
+        if bad:
+            self.active = jnp.asarray(self.active_np)
+        self._csum_base = shadow.copy()
+
+    # -- snapshot / teardown ---------------------------------------------
+
+    def snapshot_now(self):
+        self.eng._snapshot_serve(
+            self.snapshot_dir, self.stats, self.state, self.cur,
+            self.lengths, self.counts, self.budgets, self.req_ids,
+            self.active, self.slot_req, self.pending, self.recover_q,
+            self.outputs, self.outcomes, self.recoveries,
+            self.b, self.k_w, self.insert_window, self.n, self.seed,
+            self.ctl, corruptions=self.corruptions, saver=self.saver)
+        self.stats["snapshots"] += 1
+
+    def close(self):
+        """Finalize stats and run the paged audit.  Idempotent; runs in
+        ``finally`` position so preemption/kill exceptions still leave
+        ``last_serve_stats`` and the audit behind."""
+        if self.closed:
+            return
+        self.closed = True
+        if self.saver is not None:
+            self.saver.wait()
+        self.eng.last_serve_stats = self.stats
+        if self.ctl is not None:
+            self.ctl.audit(self.state, self.active_np, self.slot_req)
+            self.eng.last_paged_stats = {
+                "page_size": int(self.eng.page_size),
+                "shared_pages": self.ctl.shared_total,
+                "pool_bytes": self.ctl.pool_bytes(),
+                "dense_bytes": self.ctl.dense_bytes(),
+                "peak_mapped_bytes": self.ctl.peak_mapped_bytes,
+                "page_table_violations": len(self.ctl.violations),
+            }
+
+    def results(self) -> list[RequestResult]:
+        out = []
+        for i in range(self.n):
+            if self.outcomes[i] is None:   # defensive: loop exit ⇒ terminal
+                self._resolve(i)
+            out.append(RequestResult(
+                tokens=np.asarray(self.outputs[i], np.int32),
+                outcome=self.outcomes[i], recoveries=self.recoveries[i],
+            ))
+        return out

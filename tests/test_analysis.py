@@ -5,11 +5,11 @@ Three layers:
 * **clean tree** — every pass, on every default arch family, produces
   findings and none of them are errors (the CLI-green property, asserted
   in-process so a failure points at the pass, not at an exit code);
-* **mutations** — six deliberate regressions (dropped donation, caller
+* **mutations** — seven deliberate regressions (dropped donation, caller
   -side f32 upcast, slack-less ring, oversized VMEM scratch, unbucketed
-  admission shapes, a page-pool leak) each caught by exactly the pass
-  that owns the invariant, with the right severity and a location that
-  points at the contract;
+  admission shapes, a page-pool leak, snapshot-meta field drift) each
+  caught by exactly the pass that owns the invariant, with the right
+  severity and a location that points at the contract;
 * **plumbing** — the Finding table/severity helpers and the per-scope
   chunk-adjustment warning fix (PR 7 satellite: ``resolve_chunk``'s
   warn-once set used to be a single module global shared across configs).
@@ -217,6 +217,32 @@ def test_mutation_leaked_page_is_caught(monkeypatch):
         "leaked" in e.message or "survived" in e.message for e in errs
     ), F.format_table(errs)
     assert all(e.location.endswith("PagedController") for e in errs)
+
+
+# --------------------------------------------------------------------------
+# Mutation 7: snapshot-meta field drift breaks the fleet handoff parser
+# --------------------------------------------------------------------------
+
+def test_mutation_fleet_meta_drift_is_caught(monkeypatch):
+    from repro.analysis import fleet as fleet_pass
+    from repro.serve.engine import ServeEngine
+
+    orig = ServeEngine._serve_meta
+
+    def swapped(self, b, k_w, insert_window, n, seed, ctl):
+        # Request count and seed trade places: every individual field is
+        # still present, so only a layout-aware audit catches it before
+        # a handoff trusts meta[3] as the request count.
+        m = orig(self, b, k_w, insert_window, n, seed, ctl).copy()
+        m[3], m[4] = m[4], m[3]
+        return m
+
+    monkeypatch.setattr(ServeEngine, "_serve_meta", swapped)
+    findings = fleet_pass.run(get_config("rwkv6-1.6b"))
+    errs = F.errors(findings)
+    assert errs, "fleet pass missed the meta field drift"
+    assert any("field order" in e.message for e in errs), F.format_table(errs)
+    assert all(e.location.endswith("FleetRouter") for e in errs)
 
 
 # --------------------------------------------------------------------------

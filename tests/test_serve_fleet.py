@@ -1,0 +1,493 @@
+"""Replica-fleet drills: snapshot handoff after a replica kill (greedy
+and sampled, dense and paged) asserting every in-flight stream finishes
+on survivors bit-identical to a fault-free single-engine run; silent
+bitflip corruption detected by the checksum chain within the spot-check
+cadence with a ``recovered`` outcome; shared-fleet-queue wait counted
+against ``deadline_ms``; the AsyncSaver background-failure surface; the
+bitflip / replica-kill pinned fire-exactly-once injector contract; the
+ReplicaMonitor escalation policy; the ``serve_fleet_drain`` cost model;
+and ``read_snapshot_host`` handoff validation."""
+
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as C
+from repro.configs.registry import get_config
+from repro.core.cost_model import serve_fleet_drain
+from repro.model import model as M
+from repro.serve import health as H
+from repro.model.recurrent import RecState
+from repro.serve.chaos import ChaosInjector, ReplicaKilled, bitflip_slot_state
+from repro.serve.engine import OUTCOMES, Request, ServeEngine
+from repro.serve.fleet import FleetRouter, read_snapshot_host
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = [(5, 9), (12, 3), (7, 14), (3, 6), (9, 11)]
+
+
+def _setup(arch, seed=0):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params, np.random.default_rng(seed)
+
+
+def _requests(rng, cfg, spec=SPEC):
+    return [
+        Request(
+            tokens=rng.integers(0, cfg.vocab_size, (pl,)).astype(np.int32),
+            max_new_tokens=nn,
+        )
+        for pl, nn in spec
+    ]
+
+
+def _engine(cfg, params, paged=False):
+    return ServeEngine(cfg, params, max_len=96, decode_window=4, paged=paged)
+
+
+def _assert_streams_equal(base, outs):
+    assert len(base) == len(outs)
+    for i, (b, o) in enumerate(zip(base, outs)):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(o),
+            err_msg=f"request {i} diverged from the fault-free run")
+
+
+def _run_fleet(cfg, params, reqs, *, paged=False, chaos=None, n_rep=3,
+               snapshot_every=1, checksum_every=2, **kw):
+    engines = [_engine(cfg, params, paged=paged) for _ in range(n_rep)]
+    root = tempfile.mkdtemp(prefix="fleet_test_")
+    try:
+        fl = FleetRouter(
+            engines, reqs, slots=2, snapshot_every=snapshot_every,
+            snapshot_root=root, checksum_every=checksum_every,
+            chaos=chaos, **kw)
+        outs = fl.run()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return fl, outs
+
+
+class TestSnapshotHandoffParity:
+    """Acceptance drill: 3 replicas, one killed mid-decode, its live
+    memory discarded — every in-flight request finishes on the survivors
+    bit-identical to a fault-free single-engine run, greedy and sampled,
+    dense and paged."""
+
+    @pytest.mark.parametrize("temperature,top_k", [(0.0, 0), (0.8, 16)])
+    def test_replica_kill_dense(self, temperature, top_k):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        base = _engine(cfg, params).serve(
+            reqs, slots=2, seed=0, temperature=temperature, top_k=top_k,
+            recoverable=True)
+        chaos = [None, ChaosInjector(seed=7, replica_kill_at=(1,)), None]
+        fl, outs = _run_fleet(cfg, params, reqs, chaos=chaos, seed=0,
+                              temperature=temperature, top_k=top_k)
+        assert fl.stats["replica_deaths"] == 1
+        assert (fl.stats["handoffs"]
+                + fl.stats["handoff_requeued_fresh"]) >= 1
+        assert fl.monitors[1].state == H.DEAD
+        assert all(o.outcome in ("ok", "eos", "recovered") for o in outs)
+        _assert_streams_equal(base, outs)
+
+    def test_replica_kill_paged(self):
+        cfg, params, rng = _setup("gemma3-1b")
+        reqs = _requests(rng, cfg)
+        base = _engine(cfg, params, paged=True).serve(
+            reqs, slots=2, seed=0, recoverable=True)
+        chaos = [None, ChaosInjector(seed=7, replica_kill_at=(1,)), None]
+        fl, outs = _run_fleet(cfg, params, reqs, paged=True, chaos=chaos,
+                              seed=0)
+        assert fl.stats["replica_deaths"] == 1
+        assert all(o.outcome in ("ok", "eos", "recovered") for o in outs)
+        _assert_streams_equal(base, outs)
+
+    def test_handoff_resumes_accepted_prefix(self):
+        """A killed replica's snapshot prefix is charged as a recovery:
+        at least one orphan resumes mid-stream (outcome ``recovered``)
+        rather than re-running from scratch."""
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        chaos = [None, ChaosInjector(seed=7, replica_kill_at=(2,)), None]
+        fl, outs = _run_fleet(cfg, params, reqs, chaos=chaos, seed=0)
+        assert fl.stats["replica_deaths"] == 1
+        if fl.stats["handoffs"]:
+            rec = [o for o in outs if o.outcome == "recovered"]
+            assert rec and all(o.recoveries >= 1 for o in rec)
+
+    def test_fault_free_fleet_matches_single_engine(self):
+        """Routing itself must be invisible: with no chaos the fleet's
+        streams equal the single recoverable engine's, replica by
+        request."""
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        base = _engine(cfg, params).serve(reqs, slots=2, seed=0,
+                                          recoverable=True)
+        fl, outs = _run_fleet(cfg, params, reqs, seed=0)
+        assert fl.stats["replica_deaths"] == 0
+        assert fl.stats["handoffs"] == 0
+        assert fl.stats["assignments"] == len(reqs)
+        _assert_streams_equal(base, outs)
+
+
+class TestBitflipDetection:
+    """Silent corruption: one flipped state bit is invisible to the
+    ``isfinite`` quarantine but breaks the uint32 checksum chain — it
+    must be detected within the spot-check cadence, rolled back, and
+    recovered bit-identical."""
+
+    def test_bitflip_detected_and_recovered(self):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        base = _engine(cfg, params).serve(reqs, slots=2, seed=0,
+                                          recoverable=True)
+        inj = ChaosInjector(seed=7, bitflip_at=(1,))
+        fl, outs = _run_fleet(cfg, params, reqs, chaos=[inj, None, None],
+                              checksum_every=2, seed=0)
+        assert inj.counters["bitflip"] == 1
+        per_rep = fl.stats_by_replica()
+        assert sum(s["corruptions"] for s in per_rep) >= 1
+        assert any(o.outcome == "recovered" for o in outs)
+        assert all(o.outcome in ("ok", "eos", "recovered") for o in outs)
+        _assert_streams_equal(base, outs)
+
+
+class TestSharedQueueDeadline:
+    """``deadline_ms`` counts from arrival at the FLEET, not from
+    replica admission: a request that ages out while still in the shared
+    queue dies there with the same typed ``deadline`` outcome the engine
+    uses — no replica ever sees it."""
+
+    def test_expiry_in_shared_queue(self):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        box = [0.0]
+        eng = _engine(cfg, params)
+        fl = FleetRouter([eng], reqs, slots=2, deadline_ms=100.0,
+                         clock=lambda: box[0])
+        box[0] = 0.2                       # 200 ms in the shared queue
+        fl.step_round()
+        outs = fl.run()
+        assert "deadline" in OUTCOMES
+        assert all(o.outcome == "deadline" for o in outs)
+        assert all(o.size == 0 for o in outs)
+        assert fl.stats["shared_deadline_hits"] == len(reqs)
+        # No replica ever dispatched for them.
+        assert fl.stats_by_replica()[0]["decode_dispatches"] == 0
+
+    def test_per_request_deadline_only_kills_the_expired(self):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg, spec=SPEC[:4])
+        # One slot pair, 4-deep local cap: the 5th request waits in the
+        # shared queue, where its (tiny) per-request deadline expires
+        # while the others decode on their own clocks (no deadline).
+        late = Request(
+            tokens=rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32),
+            max_new_tokens=8, deadline_ms=1.0)
+        box = [0.0]
+        eng = _engine(cfg, params)
+        fl = FleetRouter([eng], reqs + [late], slots=2,
+                         clock=lambda: box[0])
+        fl.step_round()                    # assigns the first 4, decodes
+        box[0] = 0.05                      # 50 ms: only `late` is expired
+        outs = fl.run()
+        assert outs[-1].outcome == "deadline"
+        assert all(o.outcome in ("ok", "eos") for o in outs[:-1])
+        assert fl.stats["shared_deadline_hits"] == 1
+
+
+class TestAsyncSaverFailure:
+    """A failed background snapshot write must surface on the next
+    ``save_async``/``wait`` — a handoff source that failed silently is
+    worse than none."""
+
+    def test_background_failure_surfaces(self, tmp_path, monkeypatch):
+        def boom(directory, step, tree, mesh_shape=None):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(C, "save", boom)
+        saver = C.AsyncSaver()
+        saver.save_async(tmp_path, 0, {"x": np.zeros(2)})
+        with pytest.raises(C.AsyncSaverError):
+            saver.wait()
+        # The error is delivered once; the saver is reusable after.
+        saver.wait()
+
+    def test_failure_surfaces_on_next_save(self, tmp_path, monkeypatch):
+        calls = []
+
+        def boom(directory, step, tree, mesh_shape=None):
+            calls.append(step)
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(C, "save", boom)
+        saver = C.AsyncSaver()
+        saver.save_async(tmp_path, 0, {"x": np.zeros(2)})
+        with pytest.raises(C.AsyncSaverError):
+            saver.save_async(tmp_path, 1, {"x": np.zeros(2)})
+        assert calls == [0]
+
+
+class TestInjectorContracts:
+    """Pinned ``bitflip_at`` / ``replica_kill_at`` fire exactly once
+    (a retried dispatch keeps its index and must converge), and the
+    schedule replays under a fixed seed."""
+
+    @staticmethod
+    def _state(b=2):
+        # The injector flips bits in typed state nodes (RecState h here);
+        # plain arrays are passed through untouched.
+        return {"layer0": RecState(h=jnp.ones((b, 4, 4), jnp.float32),
+                                   conv=jnp.zeros((b, 2, 4), jnp.float32))}
+
+    def test_pinned_bitflip_fires_exactly_once(self):
+        inj = ChaosInjector(seed=0, bitflip_at=(3,))
+        state = self._state()
+        active = np.array([True, True])
+        same, slot = inj.maybe_bitflip(state, active, 2, [0, 1])
+        assert slot is None and same is state
+        flipped, slot = inj.maybe_bitflip(state, active, 3, [0, 1])
+        assert slot is not None
+        assert not np.array_equal(np.asarray(flipped["layer0"].h),
+                                  np.asarray(state["layer0"].h))
+        again, slot2 = inj.maybe_bitflip(state, active, 3, [0, 1])
+        assert slot2 is None and again is state
+        assert inj.counters["bitflip"] == 1
+
+    def test_pinned_replica_kill_fires_exactly_once(self):
+        inj = ChaosInjector(seed=0, replica_kill_at=(5,))
+        inj.check_replica_kill(4)
+        with pytest.raises(ReplicaKilled):
+            inj.check_replica_kill(5)
+        inj.check_replica_kill(5)          # retry at the same index: no-op
+        assert inj.counters["replica_kill"] == 1
+        assert inj.events == [("replica_kill", 5, None)]
+
+    def test_bitflip_schedule_replays_under_fixed_seed(self):
+        state = self._state()
+        active = np.array([True, True])
+
+        def schedule(seed):
+            inj = ChaosInjector(seed=seed, bitflip_rate=0.4)
+            out = []
+            for i in range(20):
+                flipped, slot = inj.maybe_bitflip(state, active, i, [0, 1])
+                out.append((i, slot,
+                            None if slot is None
+                            else np.asarray(flipped["layer0"].h).tobytes()))
+            return out
+
+        a, b = schedule(11), schedule(11)
+        assert a == b
+        assert any(slot is not None for _, slot, _ in a)
+
+    def test_bitflip_slot_state_is_deterministic_and_local(self):
+        state = self._state(b=3)
+        f1 = bitflip_slot_state(state, 1)
+        f2 = bitflip_slot_state(state, 1)
+        h0, h1, h2 = (np.asarray(s["layer0"].h) for s in (state, f1, f2))
+        np.testing.assert_array_equal(h1, h2)
+        # Rows other than the flipped slot are untouched; the flip is a
+        # single low mantissa bit, so the value stays finite-but-wrong.
+        np.testing.assert_array_equal(h1[[0, 2]], h0[[0, 2]])
+        assert not np.array_equal(h1[1], h0[1])
+        assert np.isfinite(h1).all()
+        np.testing.assert_array_equal(np.asarray(f1["layer0"].conv),
+                                      np.asarray(state["layer0"].conv))
+
+
+class TestReplicaMonitor:
+    """The escalation policy is deterministic and clock-free: every
+    transition is drivable from observation deltas alone."""
+
+    def test_fault_rate_degrades_then_heals(self):
+        mon = H.ReplicaMonitor(window=4)
+        assert mon.state == H.HEALTHY and mon.routable
+        assert mon.observe(faults=1) == H.DEGRADED
+        assert not mon.routable
+        assert "fault rate" in mon.reason
+        # Clean observations dilute the windowed rate below the limit.
+        mon.observe()
+        assert mon.observe() == H.HEALTHY
+        assert mon.routable
+        assert mon.transitions[-1] == (H.HEALTHY, "clean observation window")
+
+    def test_consecutive_stragglers_degrade(self):
+        mon = H.ReplicaMonitor(straggler_limit=3)
+        assert mon.observe(straggler=True) == H.HEALTHY
+        assert mon.observe(straggler=True) == H.HEALTHY
+        assert mon.observe(straggler=True) == H.DEGRADED
+        assert "stragglers" in mon.reason
+        # A non-straggler dispatch breaks the run and heals.
+        assert mon.observe() == H.HEALTHY
+
+    def test_watchdog_timeout_ages_out_of_window(self):
+        mon = H.ReplicaMonitor(window=3, dead_after_degraded=10)
+        assert mon.observe(watchdog_timeout=True) == H.DEGRADED
+        assert mon.observe() == H.DEGRADED      # still in the window
+        assert mon.observe() == H.DEGRADED
+        assert mon.observe() == H.HEALTHY       # timeout aged out
+
+    def test_persistent_degradation_dies(self):
+        mon = H.ReplicaMonitor(window=2, dead_after_degraded=3)
+        assert mon.observe(faults=1) == H.DEGRADED
+        assert mon.observe(faults=1) == H.DEGRADED
+        assert mon.observe(faults=1) == H.DEAD
+        assert "consecutive observations" in mon.reason
+        # Dead is terminal: clean observations change nothing.
+        assert mon.observe() == H.DEAD
+        assert not mon.routable
+
+    def test_mark_dead_is_idempotent_and_terminal(self):
+        mon = H.ReplicaMonitor()
+        mon.mark_dead("injected kill")
+        mon.mark_dead("second call")
+        assert mon.state == H.DEAD
+        assert mon.reason == "injected kill"
+        assert mon.transitions == [(H.DEAD, "injected kill")]
+        assert mon.observe(faults=5) == H.DEAD
+
+    def test_window_validation(self):
+        with pytest.raises(ValueError):
+            H.ReplicaMonitor(window=0)
+
+
+class TestFleetDrainModel:
+    """serve_fleet_drain: recovery-aware least-loaded placement vs a
+    depth-blind round-robin over survivors carrying recovery debt."""
+
+    def test_aware_routes_around_recovery_debt(self):
+        # Two survivors, one carrying 8 slot-steps of replay debt:
+        # aware placement fills the idle survivor first.
+        aware, blind = serve_fleet_drain([4, 4, 4, 4], [0, 8], window=4)
+        assert aware == 12
+        assert blind == 16
+        assert aware <= blind
+
+    def test_window_quantization(self):
+        aware, blind = serve_fleet_drain([1], [0], window=4)
+        assert aware == blind == 4
+
+    def test_aware_never_worse_on_uniform_work(self):
+        # With uniform work items (the window-quantized decode regime),
+        # placing on the current minimum is exchange-argument optimal,
+        # so aware <= blind for any survivor depths.  (Heterogeneous
+        # work admits classic list-scheduling counterexamples; the
+        # model's claim is about the quantized drain.)
+        rng = np.random.default_rng(3)
+        for _ in range(20):
+            w = int(rng.integers(1, 12))
+            work = [w] * int(rng.integers(1, 9))
+            depths = rng.integers(0, 30, rng.integers(1, 4)).tolist()
+            aware, blind = serve_fleet_drain(work, depths, window=4)
+            assert aware <= blind
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            serve_fleet_drain([4], [], window=4)
+        with pytest.raises(ValueError):
+            serve_fleet_drain([4], [0], window=0)
+        with pytest.raises(ValueError):
+            serve_fleet_drain([0], [0], window=4)
+        with pytest.raises(ValueError):
+            serve_fleet_drain([4], [-1], window=4)
+
+
+class TestReadSnapshotHost:
+    """Handoff-source validation: a missing snapshot is a None (fresh
+    re-run), a mismatched or corrupt one is a loud error — silently
+    resuming the wrong streams is the one unacceptable outcome."""
+
+    def _snapshot(self, tmp_path):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg, spec=SPEC[:3])
+        eng = _engine(cfg, params)
+        outs = eng.serve(reqs, slots=2, snapshot_every=1,
+                         snapshot_dir=str(tmp_path), recoverable=True)
+        return outs, len(reqs)
+
+    def test_no_snapshot_returns_none(self, tmp_path):
+        assert read_snapshot_host(tmp_path, 5) is None
+
+    def test_roundtrip_prefixes(self, tmp_path):
+        outs, n = self._snapshot(tmp_path)
+        snap = read_snapshot_host(tmp_path, n)
+        assert snap is not None
+        assert int(snap["meta"][3]) == n
+        for i, o in enumerate(outs):
+            got = snap["outputs"][i]
+            np.testing.assert_array_equal(
+                np.asarray(o)[: len(got)], np.asarray(got, np.int32),
+                err_msg=f"snapshot output {i} is not an accepted prefix")
+            assert snap["outcomes"][i] in (None,) + OUTCOMES
+
+    def test_rejects_wrong_request_count(self, tmp_path):
+        _, n = self._snapshot(tmp_path)
+        with pytest.raises(ValueError, match="refusing"):
+            read_snapshot_host(tmp_path, n + 1)
+
+    def _tamper(self, tmp_path, mutate):
+        step = C.latest_step(tmp_path)
+        npz = Path(tmp_path) / f"step_{step}" / "arrays.npz"
+        with np.load(npz) as data:
+            arrays = {k: data[k] for k in data.files}
+        mutate(arrays)
+        np.savez(npz, **arrays)
+
+    def test_rejects_malformed_meta(self, tmp_path):
+        _, n = self._snapshot(tmp_path)
+        self._tamper(tmp_path, lambda a: a.update(meta=a["meta"][:5]))
+        with pytest.raises(ValueError, match="shape"):
+            read_snapshot_host(tmp_path, n)
+
+    def test_rejects_missing_meta(self, tmp_path):
+        _, n = self._snapshot(tmp_path)
+        self._tamper(tmp_path, lambda a: a.pop("meta"))
+        with pytest.raises(ValueError, match="meta"):
+            read_snapshot_host(tmp_path, n)
+
+    def test_rejects_inconsistent_offsets(self, tmp_path):
+        _, n = self._snapshot(tmp_path)
+
+        def bump(a):
+            off = a["host/out_off"].copy()
+            off[-1] += 1
+            a["host/out_off"] = off
+
+        self._tamper(tmp_path, bump)
+        with pytest.raises(ValueError, match="inconsistent"):
+            read_snapshot_host(tmp_path, n)
+
+
+class TestFleetRouterValidation:
+    def test_constructor_validation(self):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg, spec=SPEC[:2])
+        eng = _engine(cfg, params)
+        with pytest.raises(ValueError, match="at least one"):
+            FleetRouter([], reqs)
+        with pytest.raises(ValueError, match="snapshot_root"):
+            FleetRouter([eng], reqs, snapshot_every=1)
+        with pytest.raises(ValueError, match="per engine"):
+            FleetRouter([eng], reqs, chaos=[None, None])
+
+    def test_shared_queue_shed_beyond_capacity(self):
+        cfg, params, rng = _setup("rwkv6-1.6b")
+        reqs = _requests(rng, cfg)
+        eng = _engine(cfg, params)
+        fl = FleetRouter([eng], reqs, slots=2, max_queue=1)
+        # 2 slots admit immediately + 1 may wait: the rest shed, latest
+        # arrivals first (same policy as the single-engine queue bound).
+        outs = fl.run()
+        shed = [o for o in outs if o.outcome == "shed"]
+        assert len(shed) == len(reqs) - 3
+        assert fl.stats["shared_shed"] == len(shed)
+        assert all(o.outcome in ("ok", "eos") for o in outs[:3])
