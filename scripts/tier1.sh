@@ -18,6 +18,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
 
+echo "== tier-1 lane 0: host-tier safety audit (jax-free, strict) =="
+# Pure-AST pass over the host code: donated-buffer lifetimes at every
+# jit call site + lock discipline across the watchdog/saver/monitor
+# threads.  Runs before any lane that imports jax — a use-after-donate
+# or a lock-order cycle fails the build before anything compiles.
+python -m repro.analysis --passes hostsafety --strict
+
 echo "== tier-1 lane 1: full suite (single device) =="
 python -m pytest -x -q "$@"
 
@@ -77,6 +84,14 @@ python -m repro.launch.serve --arch rwkv6-1.6b --smoke --continuous \
 # The fleet bench row (goodput under replica kill + modeled drain) must
 # be present in the committed benchmark results.
 grep -q '"name": "serve_fleet"' BENCH_kernels.json
+
+echo "== tier-1 lane 3f: forced-interleaving drill (8 seeded schedules) =="
+# The dynamic complement to lane 0's static audit: a seeded scheduler
+# forces preemption windows at every lock acquire/release and jit
+# dispatch boundary while a 2-replica fleet serves a chaos workload
+# (pinned NaN + dispatch drop).  Exits nonzero unless every schedule's
+# streams are bit-identical to the fault-free single-engine baseline.
+python -m repro.serve.interleave --arch rwkv6-1.6b --seeds 8
 
 echo "== tier-1 lane 4: static audit (repro.analysis, strict) =="
 # Every analysis pass over every default arch family — collectives,

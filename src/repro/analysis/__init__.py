@@ -2,6 +2,10 @@
 
 Passes (each ``repro.analysis.<name>.run(cfg) -> list[Finding]``):
 
+* ``hostsafety``  — jax-free AST audit of the host tier: donated-buffer
+  lifetimes at every jit call site, and lock discipline across the
+  watchdog/saver/monitor threads (``JAX_FREE = True`` — runs before
+  anything imports jax, let alone compiles);
 * ``resources``   — Pallas VMEM footprints vs the per-core budget (pure
   shape math over declared kernel geometry);
 * ``ringslack``   — local-attention ring slack for windowed decode;
@@ -13,7 +17,8 @@ Passes (each ``repro.analysis.<name>.run(cfg) -> list[Finding]``):
   ``input_output_alias`` in its compiled HLO;
 * ``retrace``     — serve-loop jits compile once per shape bucket.
 
-CLI: ``python -m repro.analysis --arch rwkv6-1.6b [--strict]``.
+CLI: ``python -m repro.analysis --arch rwkv6-1.6b [--strict] [--json]``;
+``--passes hostsafety --strict`` is the jax-free tier-1 lane 0.
 
 This module imports lazily (no jax at import time) so the CLI can
 configure fake devices before jax initializes.

@@ -2,19 +2,56 @@
 
   PYTHONPATH=src python -m repro.analysis --arch rwkv6-1.6b --strict
   PYTHONPATH=src python -m repro.analysis --fake-devices 8   # all archs
+  PYTHONPATH=src python -m repro.analysis --passes hostsafety --strict
 
 Exit status: nonzero iff any ERROR finding (``--strict``: WARN too).
+``--json`` emits the findings as a machine-readable JSON array instead
+of tables (same exit-status contract).
+
 ``--fake-devices N`` forces N XLA host-platform devices so the
 collective audit sees a real multi-device mesh on this CPU container —
 it must be applied before jax initializes, which is why this module
 imports jax only after parsing arguments.
+
+When every selected pass declares ``JAX_FREE = True`` (currently just
+``hostsafety``), the CLI never imports jax or the config registry at
+all and runs each pass exactly once — archs are irrelevant to an AST
+audit of host code, and tier-1's lane 0 leans on this to fail fast
+before anything compiles.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+
+
+def _emit(findings_by_label, as_json: bool, n_dev) -> None:
+    if as_json:
+        rows = [
+            {
+                "arch": label,
+                "pass": f.pass_name,
+                "severity": f.severity.name,
+                "location": f.location,
+                "message": f.message,
+                "metrics": dict(f.metrics),
+            }
+            for label, findings in findings_by_label
+            for f in findings
+        ]
+        json.dump(rows, sys.stdout, indent=2)
+        print()
+        return
+    from repro.analysis.findings import format_table
+
+    for label, findings in findings_by_label:
+        dev = "" if n_dev is None else f" on {n_dev} device(s)"
+        print(format_table(
+            findings, title=f"{label} — {len(findings)} findings{dev}"))
+        print()
 
 
 def main(argv=None) -> int:
@@ -26,6 +63,8 @@ def main(argv=None) -> int:
                     help="comma-separated subset of passes to run")
     ap.add_argument("--strict", action="store_true",
                     help="treat WARN findings as failures too")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array instead of tables")
     ap.add_argument("--fake-devices", type=int, default=None,
                     help="force N XLA host-platform (CPU) devices")
     args = ap.parse_args(argv)
@@ -43,28 +82,40 @@ def main(argv=None) -> int:
         ).strip()
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-    from repro.analysis.findings import Severity, format_table, worst
-    from repro.analysis.registry import DEFAULT_ARCHS, run_passes
+    from repro.analysis.findings import Severity, worst
+    from repro.analysis.registry import DEFAULT_ARCHS, get_pass, run_passes
+
+    passes = args.passes.split(",") if args.passes else None
+
+    # Jax-free fast path: an AST audit of host source doesn't vary by
+    # arch and must not pay (or risk) a jax import to run.
+    if passes is not None and all(
+            getattr(get_pass(p), "JAX_FREE", False) for p in passes):
+        findings = []
+        for p in passes:
+            findings += get_pass(p).run(None)
+        _emit([("host", findings)], args.json, None)
+        top = worst(findings)
+        bad = top >= Severity.ERROR or (args.strict and top >= Severity.WARN)
+        return 1 if bad else 0
+
     from repro.configs.registry import get_config
 
     archs = args.arch or list(DEFAULT_ARCHS)
-    passes = args.passes.split(",") if args.passes else None
 
     import jax
 
     n_dev = len(jax.devices())
     failed = False
+    results = []
     for arch in archs:
         cfg = get_config(arch)
         findings = run_passes(cfg, passes)
-        print(format_table(
-            findings,
-            title=f"{arch} — {len(findings)} findings on {n_dev} device(s)",
-        ))
-        print()
+        results.append((arch, findings))
         top = worst(findings)
         if top >= Severity.ERROR or (args.strict and top >= Severity.WARN):
             failed = True
+    _emit(results, args.json, n_dev)
     return 1 if failed else 0
 
 

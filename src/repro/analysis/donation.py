@@ -38,6 +38,15 @@ class JitEntry:
     #: entrypoint that must NOT alias (e.g. the serve shadow checksum,
     #: which would destroy the live decode state if it donated it).
     donated: str | None = "state"
+    #: The declared ``donate_argnums`` — the *positions* the host-tier
+    #: lifetime audit (``repro.analysis.hostsafety``) treats as consumed
+    #: at every call site.  ``None`` for read-only entrypoints.
+    donate_argnums: tuple[int, ...] | None = (1,)
+    #: Source symbol whose AST-derived donor entry must agree (the jit
+    #: attribute or the factory that builds it); cross-checked by
+    #: ``tests/test_hostsafety.py`` so the static registry and the live
+    #: declarations cannot drift apart.
+    donor: str | None = None
 
 
 def check_entry(entry: JitEntry) -> list[Finding]:

@@ -1,0 +1,1239 @@
+"""Host-tier safety audit: donation lifetime + lock discipline, pure AST.
+
+The device tier is already statically audited (collectives in the jaxpr,
+``input_output_alias`` in the HLO, VMEM geometry) — but the two worst
+bugs of this repo's history lived in the *host* code that drives those
+jits: a stale watchdog thread writing an abandoned step's result past
+the generation fence (PR 6), and a fleet no-progress guard sampling
+``busy`` before the round it was guarding (PR 9).  Both were invisible
+to tier-1 because donation is a no-op on CPU and thread interleavings
+are nondeterministic.  This pass walks the host source as an AST —
+no jax import, nothing compiles — and checks two families of invariant:
+
+**(a) donation lifetime.**  A ``jax.jit(..., donate_argnums=...)``
+consumes the donated operand's buffers at call time; on TPU any later
+read is silent garbage.  The pass derives a donation registry from the
+source itself (attribute-bound jits, jit *factories* and attributes
+bound to factory results, resolved across modules), then dataflow-walks
+every function: a donated pytree that is read, or passed to a second
+donating call, before being re-bound is an error.  Loops are walked
+twice so loop-carried re-passes (the retry path, ``generate()``'s window
+loop) are seen.  Calls routed through the engine's ``_dispatch`` wrapper
+are understood: the donated key is the corresponding element of the
+``args`` tuple, and inside ``_dispatch`` itself ``fn(*args)`` donates
+``args``.  Intentional reads carry a ``# hostsafety: ok(<reason>)``
+waiver on (or one line above) the flagged line; waived findings are
+listed in the table as INFO.
+
+**(b) lock discipline.**  Inventories ``threading.Lock``/``Thread`` use,
+builds the lock-acquisition-order graph (a cycle is a deadlock finding),
+and flags: writes to shared state (self attributes, closure names)
+inside a thread target but outside any lock; attributes written both by
+a thread target and, un-locked, by other methods; result writes in an
+*abandonable* thread (its launcher joins with a timeout) whose lock
+region has no generation fence (the PR 6 class); and loop guards that
+``raise`` on a mix of state sampled before and after the loop's mutating
+call (the PR 9 class).
+
+The dynamic complement — the runtime witness for what this pass claims
+statically — is :mod:`repro.serve.interleave`, which forces preemption
+at exactly the boundaries audited here.
+
+API for mutation tests: :func:`run_on_sources` takes a mapping of
+repo-path labels to source text, so fixture copies with reintroduced
+bugs audit under their real locations without touching the tree.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.analysis.findings import Finding, Severity, error, info, warn
+
+PASS = "hostsafety"
+
+#: This pass is pure AST: the CLI runs it before jax is ever imported
+#: (tier-1 lane 0), so it must stay importable and runnable jax-free.
+JAX_FREE = True
+
+_REPO = Path(__file__).resolve().parents[3]
+
+#: Host modules under audit, repo-relative.  Order is display order.
+HOST_MODULES = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/fleet.py",
+    "src/repro/serve/health.py",
+    "src/repro/serve/chaos.py",
+    "src/repro/serve/paging.py",
+    "src/repro/serve/interleave.py",
+    "src/repro/ft/watchdog.py",
+    "src/repro/checkpoint/checkpoint.py",
+    "src/repro/train/step.py",
+    "src/repro/launch/dryrun.py",
+    "src/repro/launch/serve.py",
+    "src/repro/launch/train.py",
+)
+
+WAIVER_RE = re.compile(r"#\s*hostsafety:\s*ok\(([^)]*)\)")
+
+#: Dispatch wrappers: calling ``<obj>.<name>(kind, fn, args, ...)``
+#: invokes ``fn(*args)`` — if ``fn`` donates, the donated key is the
+#: matching element of the ``args`` tuple.  Inside the wrapper itself,
+#: ``<fn_param>(*<args_param>)`` donates ``<args_param>``.
+DISPATCH_WRAPPERS = {
+    "_dispatch": {"fn_arg": 1, "args_arg": 2,
+                  "fn_param": "fn", "args_param": "args"},
+}
+
+#: Method names that mutate their receiver in place (shared-write rule).
+_MUTATORS = frozenset({
+    "append", "appendleft", "extend", "add", "update", "insert", "pop",
+    "popleft", "remove", "discard", "clear", "setdefault", "put",
+})
+
+#: Receiver constructors recognized as locks.
+_LOCK_CTORS = frozenset({"Lock", "RLock", "make_lock"})
+
+
+# --------------------------------------------------------------------------
+# small AST helpers
+# --------------------------------------------------------------------------
+
+def _key_of(node) -> str | None:
+    """Canonical dotted key for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _key_of(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _own_walk(fn):
+    """Walk ``fn``'s body without descending into nested function/lambda
+    scopes (their statements belong to the nested scope)."""
+    stack = list(fn.body)
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _int_constants(node) -> tuple[int, ...]:
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                and not isinstance(n.value, bool):
+            out.add(n.value)
+    return tuple(sorted(out))
+
+
+def _is_jax_jit(call) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Attribute) and f.attr == "jit"
+            and isinstance(f.value, ast.Name) and f.value.id == "jax")
+
+
+def _donating_argnums(node) -> tuple[int, ...] | None:
+    """donate_argnums of a ``jax.jit(...)`` call node, else None.
+
+    Handles tuple literals and conditional forms like
+    ``(0,) if donate else ()`` (the union of ints found).
+    """
+    if not isinstance(node, ast.Call) or not _is_jax_jit(node):
+        return None
+    for kw in node.keywords:
+        if kw.arg == "donate_argnums":
+            nums = _int_constants(kw.value)
+            return nums or None
+    return None
+
+
+def _lock_ctor_name(node) -> bool:
+    """True if ``node`` is a call to a recognized lock constructor."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    return name in _LOCK_CTORS
+
+
+# --------------------------------------------------------------------------
+# donation registry (derived from the source, cross-module)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Donor:
+    name: str                  # attribute or function name
+    kind: str                  # "attr" | "factory"
+    argnums: tuple[int, ...]
+    module: str                # repo-relative path
+    line: int
+
+
+@dataclass
+class DonationRegistry:
+    """What donates, derived from the AST: attributes bound to donating
+    jits (directly or via a factory) and factories whose result donates."""
+
+    attr_donors: dict[str, Donor] = field(default_factory=dict)
+    factories: dict[str, Donor] = field(default_factory=dict)
+
+
+def collect_registry(sources: dict[str, str]) -> DonationRegistry:
+    reg = DonationRegistry()
+    trees = {}
+    for rel, src in sources.items():
+        try:
+            trees[rel] = ast.parse(src)
+        except SyntaxError:
+            continue  # surfaced as a finding by the module audit
+
+    # Phase 1: jit-literal attribute donors + factories.
+    for rel, tree in trees.items():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                nums = _donating_argnums(node.value)
+                if nums and isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self":
+                    reg.attr_donors[t.attr] = Donor(
+                        t.attr, "attr", nums, rel, node.lineno)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                nums: set[int] = set()
+                returns_callable = False
+                for n in _own_walk(node):
+                    got = _donating_argnums(n)
+                    if got:
+                        nums.update(got)
+                    if isinstance(n, ast.Return) and n.value is not None:
+                        if isinstance(n.value, ast.Name) \
+                                or _donating_argnums(n.value):
+                            returns_callable = True
+                if nums and returns_callable:
+                    reg.factories[node.name] = Donor(
+                        node.name, "factory", tuple(sorted(nums)), rel,
+                        node.lineno)
+
+    # Phase 2: attributes bound to a factory's result
+    # (``self._prefill = make_cache_prefill_step(...)``), including
+    # factories imported from another audited module.
+    for rel, tree in trees.items():
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            t, v = node.targets[0], node.value
+            if not (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    and isinstance(v, ast.Call)):
+                continue
+            fname = v.func.attr if isinstance(v.func, ast.Attribute) else (
+                v.func.id if isinstance(v.func, ast.Name) else None)
+            if fname in reg.factories:
+                reg.attr_donors[t.attr] = Donor(
+                    t.attr, "attr", reg.factories[fname].argnums, rel,
+                    node.lineno)
+    return reg
+
+
+# --------------------------------------------------------------------------
+# per-module audit context
+# --------------------------------------------------------------------------
+
+class _ModuleCtx:
+    """Shared per-module facts: source lines (for waivers), path label."""
+
+    def __init__(self, path: str, src: str, registry: DonationRegistry):
+        self.path = path
+        self.lines = src.splitlines()
+        self.registry = registry
+
+    def waiver(self, line: int) -> str | None:
+        """Waiver reason if ``# hostsafety: ok(<reason>)`` sits on
+        ``line`` or anywhere in the contiguous comment block directly
+        above it (comments are invisible to the AST, so this reads the
+        raw source)."""
+        if not 1 <= line <= len(self.lines):
+            return None
+        m = WAIVER_RE.search(self.lines[line - 1])
+        if m:
+            return m.group(1).strip()
+        ln = line - 1
+        while ln >= 1 and self.lines[ln - 1].lstrip().startswith("#"):
+            m = WAIVER_RE.search(self.lines[ln - 1])
+            if m:
+                return m.group(1).strip()
+            ln -= 1
+        return None
+
+
+class _Reporter:
+    """Finding sink with waiver handling and per-(rule, line) dedup."""
+
+    def __init__(self, ctx: _ModuleCtx, qual: str, out: list[Finding],
+                 waived: list[str]):
+        self.ctx = ctx
+        self.qual = qual
+        self.out = out
+        self.waived = waived
+        self._seen: set[tuple] = set()
+
+    def flag(self, rule: str, node, message: str,
+             severity: Severity = Severity.ERROR):
+        line = getattr(node, "lineno", 0)
+        dkey = (rule, line, self.qual)
+        if dkey in self._seen:
+            return
+        self._seen.add(dkey)
+        loc = f"{self.ctx.path}:{self.qual}"
+        reason = self.ctx.waiver(line)
+        if reason is not None:
+            self.waived.append(f"{loc} line {line} [{rule}]: {reason}")
+            self.out.append(info(
+                PASS, loc,
+                f"[{rule}] line {line}: waived — {reason}", line=line))
+            return
+        mk = error if severity >= Severity.ERROR else warn
+        self.out.append(mk(PASS, loc, f"[{rule}] line {line}: {message}",
+                           line=line))
+
+
+# --------------------------------------------------------------------------
+# pass (a): donation lifetime dataflow
+# --------------------------------------------------------------------------
+
+class _DonationWalk:
+    """Abstract interpreter over one function body tracking which dotted
+    keys currently name donated (consumed) pytrees."""
+
+    def __init__(self, ctx: _ModuleCtx, fn, qual: str, rep: _Reporter,
+                 summary_mode: bool = False, dispatch_spec=None):
+        self.ctx = ctx
+        self.fn = fn
+        self.qual = qual
+        self.rep = rep
+        self.summary_mode = summary_mode
+        # Inside a dispatch wrapper (or a closure nested in one),
+        # ``fn(*args)`` donates ``args``.
+        self.dispatch_spec = dispatch_spec
+        self.donors: dict[str, tuple[int, ...]] = {}
+        self.tuples: dict[str, list] = {}
+        self.donated: dict[str, int] = {}
+        self.nested: dict[str, set[str]] = {}
+        self.local: set[str] = set()
+        self.effects: set[str] = set()     # summary mode: donated free keys
+        self.sites = 0                     # donating calls walked
+
+    # -- entry ------------------------------------------------------------
+
+    def run(self):
+        args = self.fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            self.local.add(a.arg)
+        if args.vararg:
+            self.local.add(args.vararg.arg)
+        if args.kwarg:
+            self.local.add(args.kwarg.arg)
+        self.exec_block(self.fn.body)
+
+    # -- state save/restore for branches ----------------------------------
+
+    def _snap(self):
+        return (dict(self.donors), dict(self.tuples), dict(self.donated))
+
+    def _restore(self, snap):
+        self.donors, self.tuples, self.donated = (
+            dict(snap[0]), dict(snap[1]), dict(snap[2]))
+
+    def _merge(self, a, b):
+        self.donors = {**a[0], **b[0]}
+        self.tuples = {**a[1], **b[1]}
+        self.donated = {**a[2], **b[2]}
+
+    # -- statements -------------------------------------------------------
+
+    def exec_block(self, stmts):
+        for st in stmts:
+            self.exec_stmt(st)
+
+    def exec_stmt(self, st):
+        if isinstance(st, ast.Assign):
+            self.read(st.value)
+            for t in st.targets:
+                self.assign_target(t, st.value)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self.read(st.value)
+            self.assign_target(st.target, st.value)
+        elif isinstance(st, ast.AugAssign):
+            self.read(st.value)
+            self.read(st.target)
+            self.assign_target(st.target, None)
+        elif isinstance(st, ast.Expr):
+            self.read(st.value)
+        elif isinstance(st, ast.Return):
+            if st.value is not None:
+                self.read(st.value)
+        elif isinstance(st, ast.If):
+            self.read(st.test)
+            self._branch(st.body, st.orelse)
+        elif isinstance(st, ast.While):
+            self.read(st.test)
+            self._loop(st.body)
+            self.read(st.test)
+            self.exec_block(st.orelse)
+        elif isinstance(st, ast.For):
+            self.read(st.iter)
+            self.assign_target(st.target, None)
+            self._loop(st.body)
+            self.exec_block(st.orelse)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                self.read(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign_target(item.optional_vars, None)
+            self.exec_block(st.body)
+        elif isinstance(st, ast.Try):
+            self.exec_block(st.body)
+            post = self._snap()
+            merged = post
+            for h in st.handlers:
+                self._restore(post)
+                if h.name:
+                    self.local.add(h.name)
+                self.exec_block(h.body)
+                got = self._snap()
+                merged = ({**merged[0], **got[0]}, {**merged[1], **got[1]},
+                          {**merged[2], **got[2]})
+            self._restore(merged)
+            self.exec_block(st.orelse)
+            self.exec_block(st.finalbody)
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.local.add(st.name)
+            sub = _DonationWalk(self.ctx, st, f"{self.qual}.{st.name}",
+                                self.rep, summary_mode=True,
+                                dispatch_spec=self.dispatch_spec)
+            # Nested closures see the enclosing donation registry state.
+            sub.donors = dict(self.donors)
+            sub.tuples = dict(self.tuples)
+            sub.run()
+            self.nested[st.name] = sub.effects
+            self.sites += sub.sites
+        elif isinstance(st, ast.Raise):
+            if st.exc is not None:
+                self.read(st.exc)
+            if st.cause is not None:
+                self.read(st.cause)
+        elif isinstance(st, ast.Assert):
+            self.read(st.test)
+            if st.msg is not None:
+                self.read(st.msg)
+        elif isinstance(st, ast.Delete):
+            for t in st.targets:
+                self.assign_target(t, None)
+        elif isinstance(st, (ast.ClassDef,)):
+            pass  # nested classes: out of scope
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to track.
+
+    def _branch(self, body, orelse):
+        pre = self._snap()
+        self.exec_block(body)
+        a = self._snap()
+        self._restore(pre)
+        self.exec_block(orelse)
+        b = self._snap()
+        self._merge(a, b)
+
+    def _loop(self, body):
+        # Two passes: the second sees the first iteration's donations, so
+        # loop-carried use-after-donate (the PR-retry shape) surfaces.
+        # The reporter dedups by (rule, line).
+        self.exec_block(body)
+        self.exec_block(body)
+
+    # -- donation core ----------------------------------------------------
+
+    def _donated_hit(self, key: str) -> int | None:
+        for d, line in self.donated.items():
+            if key == d or key.startswith(d + "."):
+                return line
+        return None
+
+    def check_read(self, key: str, node):
+        line = self._donated_hit(key)
+        if line is not None:
+            self.rep.flag(
+                "use-after-donate", node,
+                f"'{key}' read after its buffers were donated at line "
+                f"{line} — on TPU this is silent garbage; re-bind the key "
+                "from the jit's result (or waive an intentional read)")
+
+    def donate_key(self, key: str | None, node):
+        self.sites += 1
+        if key is None:
+            return
+        if key in self.donated:
+            self.rep.flag(
+                "use-after-donate", node,
+                f"'{key}' passed to a donating jit again after being "
+                f"donated at line {self.donated[key]} — the second call "
+                "consumes already-freed buffers")
+        self.donated[key] = getattr(node, "lineno", 0)
+        root = key.split(".", 1)[0]
+        if self.summary_mode and root not in self.local:
+            self.effects.add(key)
+
+    def donate_expr(self, e, call):
+        key = _key_of(e)
+        if key is None:
+            self.read(e)
+        else:
+            self.check_read(key, e)   # reading a donated key to re-donate
+            self.donate_key(key, call)
+
+    def _apply_effects(self, name: str, node):
+        for key in sorted(self.nested.get(name, ())):
+            self.donate_key(key, node)
+
+    def clear_key(self, key: str):
+        for d in [d for d in self.donated
+                  if d == key or d.startswith(key + ".")]:
+            del self.donated[d]
+
+    # -- assignment -------------------------------------------------------
+
+    def assign_target(self, t, value):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self.assign_target(e, None)
+            return
+        if isinstance(t, ast.Starred):
+            self.assign_target(t.value, None)
+            return
+        key = _key_of(t)
+        if key is None:
+            # Subscript etc: evaluate the receiver as a read.
+            for child in ast.iter_child_nodes(t):
+                self.read(child)
+            return
+        self.clear_key(key)
+        if isinstance(t, ast.Name):
+            self.local.add(key)
+            self.donors.pop(key, None)
+            self.tuples.pop(key, None)
+            if value is not None:
+                nums = self._callee_argnums(value)
+                if nums:
+                    self.donors[key] = nums
+                elif isinstance(value, ast.Name) and value.id in self.donors:
+                    self.donors[key] = self.donors[value.id]
+                elif isinstance(value, ast.Tuple):
+                    self.tuples[key] = [_key_of(e) for e in value.elts]
+
+    def _callee_argnums(self, value) -> tuple[int, ...] | None:
+        """If evaluating ``value`` yields a donating callable (a donating
+        ``jax.jit`` literal or a factory call), its argnums."""
+        nums = _donating_argnums(value)
+        if nums:
+            return nums
+        if isinstance(value, ast.Call):
+            f = value.func
+            fname = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None)
+            donor = self.ctx.registry.factories.get(fname or "")
+            if donor is not None:
+                return donor.argnums
+        return None
+
+    # -- expressions ------------------------------------------------------
+
+    def read(self, e):
+        if e is None:
+            return
+        if isinstance(e, ast.Name):
+            self.check_read(e.id, e)
+        elif isinstance(e, ast.Attribute):
+            key = _key_of(e)
+            if key is not None:
+                self.check_read(key, e)
+            else:
+                self.read(e.value)
+        elif isinstance(e, ast.Call):
+            self.handle_call(e)
+        elif isinstance(e, ast.IfExp):
+            self.read(e.test)
+            pre = self._snap()
+            self.read(e.body)
+            a = self._snap()
+            self._restore(pre)
+            self.read(e.orelse)
+            b = self._snap()
+            self._merge(a, b)
+        elif isinstance(e, ast.Lambda):
+            pass  # separate scope; donation-irrelevant in this codebase
+        else:
+            for child in ast.iter_child_nodes(e):
+                if isinstance(child, (ast.expr, ast.comprehension,
+                                      ast.keyword)):
+                    if isinstance(child, ast.comprehension):
+                        self.read(child.iter)
+                        for cond in child.ifs:
+                            self.read(cond)
+                    elif isinstance(child, ast.keyword):
+                        self.read(child.value)
+                    else:
+                        self.read(child)
+
+    # -- calls ------------------------------------------------------------
+
+    def _resolve_callee(self, f) -> tuple[int, ...] | None:
+        if isinstance(f, ast.Name):
+            return self.donors.get(f.id)
+        if isinstance(f, ast.Attribute):
+            donor = self.ctx.registry.attr_donors.get(f.attr)
+            if donor is not None:
+                return donor.argnums
+            return None
+        if isinstance(f, ast.Call):
+            # ``self._window_step(k)(...)``: the factory result, invoked.
+            return self._callee_argnums(f)
+        return None
+
+    def handle_call(self, call):
+        f = call.func
+        # Dispatch wrapper call sites: ``<obj>._dispatch(kind, fn, args)``.
+        if isinstance(f, ast.Attribute) and f.attr in DISPATCH_WRAPPERS:
+            self._handle_dispatch_call(call, DISPATCH_WRAPPERS[f.attr])
+            return
+        # Inside a wrapper: ``fn(*args)`` donates the args tuple.
+        spec = self.dispatch_spec
+        if (spec is not None and isinstance(f, ast.Name)
+                and f.id == spec["fn_param"]
+                and any(isinstance(a, ast.Starred)
+                        and isinstance(a.value, ast.Name)
+                        and a.value.id == spec["args_param"]
+                        for a in call.args)):
+            self.donate_key(spec["args_param"], call)
+            for a in call.args:
+                if not isinstance(a, ast.Starred):
+                    self.read(a)
+            for kw in call.keywords:
+                self.read(kw.value)
+            return
+
+        argnums = self._resolve_callee(f)
+        if isinstance(f, ast.Attribute):
+            self.read(f.value)
+        elif isinstance(f, ast.Call):
+            for child in ast.iter_child_nodes(f):
+                if isinstance(child, ast.expr) and child is not f.func:
+                    self.read(child)
+        if argnums:
+            self.sites += 1
+        for i, a in enumerate(call.args):
+            if isinstance(a, ast.Starred):
+                self.read(a.value)
+            elif argnums and i in argnums:
+                self.donate_expr(a, call)
+            else:
+                if isinstance(a, ast.Name) and a.id in self.nested:
+                    self._apply_effects(a.id, call)
+                self.read(a)
+        for kw in call.keywords:
+            if isinstance(kw.value, ast.Name) and kw.value.id in self.nested:
+                self._apply_effects(kw.value.id, call)
+            self.read(kw.value)
+        # Calling a nested closure directly runs its donation effects.
+        if isinstance(f, ast.Name) and f.id in self.nested:
+            self._apply_effects(f.id, call)
+
+    def _handle_dispatch_call(self, call, spec):
+        fn_i, args_i = spec["fn_arg"], spec["args_arg"]
+        fn_expr = call.args[fn_i] if len(call.args) > fn_i else None
+        args_expr = call.args[args_i] if len(call.args) > args_i else None
+        argnums = (self._resolve_callee(fn_expr)
+                   if fn_expr is not None else None)
+        for i, a in enumerate(call.args):
+            if i == args_i and argnums:
+                continue
+            self.read(a)
+        for kw in call.keywords:
+            self.read(kw.value)
+        if args_expr is None:
+            return
+        if not argnums:
+            self.read(args_expr)
+            return
+        self.sites += 1
+        if isinstance(args_expr, ast.Tuple):
+            for i, e in enumerate(args_expr.elts):
+                if i in argnums:
+                    self.donate_expr(e, call)
+                else:
+                    self.read(e)
+        elif isinstance(args_expr, ast.Name):
+            keys = self.tuples.get(args_expr.id)
+            if keys is not None:
+                for n in argnums:
+                    if n < len(keys):
+                        self.donate_key(keys[n], call)
+            else:
+                self.donate_key(args_expr.id, call)
+        else:
+            self.read(args_expr)
+
+
+def _audit_donation(ctx: _ModuleCtx, tree, out: list[Finding],
+                    waived: list[str]) -> int:
+    """Walk every function in the module; returns donation sites seen."""
+    sites = 0
+
+    def visit(node, prefix):
+        nonlocal sites
+        for child in node.body if hasattr(node, "body") else ():
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                rep = _Reporter(ctx, qual, out, waived)
+                spec = DISPATCH_WRAPPERS.get(child.name)
+                walk = _DonationWalk(ctx, child, qual, rep,
+                                     dispatch_spec=spec)
+                walk.run()
+                sites += walk.sites
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}.{child.name}" if prefix
+                      else child.name)
+
+    visit(tree, "")
+    return sites
+
+
+# --------------------------------------------------------------------------
+# pass (b): lock discipline
+# --------------------------------------------------------------------------
+
+@dataclass
+class _ClassLocks:
+    qual: str
+    locks: set[str] = field(default_factory=set)       # self.<attr> locks
+    thread_targets: dict[str, object] = field(default_factory=dict)
+    abandonable: bool = False    # some launcher joins with a timeout
+
+
+def _collect_class_locks(cls: ast.ClassDef, prefix: str) -> _ClassLocks:
+    qual = f"{prefix}.{cls.name}" if prefix else cls.name
+    cl = _ClassLocks(qual=qual)
+    methods = {m.name: m for m in cls.body
+               if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for m in methods.values():
+        for node in ast.walk(m):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t, v = node.targets[0], node.value
+                if isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self" and _lock_ctor_name(v):
+                    cl.locks.add(t.attr)
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "Thread":
+                    for kw in node.keywords:
+                        if kw.arg != "target":
+                            continue
+                        tgt = kw.value
+                        if isinstance(tgt, ast.Name) \
+                                and tgt.id in _local_defs(m):
+                            cl.thread_targets[f"{m.name}.{tgt.id}"] = (
+                                _local_defs(m)[tgt.id])
+                        elif isinstance(tgt, ast.Attribute) \
+                                and tgt.attr in methods:
+                            cl.thread_targets[tgt.attr] = methods[tgt.attr]
+                if isinstance(f, ast.Attribute) and f.attr == "join":
+                    timed = bool(node.args) or any(
+                        kw.arg == "timeout" for kw in node.keywords)
+                    if timed:
+                        cl.abandonable = True
+    return cl
+
+
+def _local_defs(fn) -> dict[str, object]:
+    return {n.name: n for n in _own_walk(fn)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+class _LockWalk:
+    """Walk one thread-target function: writes to shared state must hold
+    a lock; abandonable threads need a generation fence in the locked
+    result-write region."""
+
+    def __init__(self, ctx: _ModuleCtx, cl: _ClassLocks, fn, qual: str,
+                 rep: _Reporter):
+        self.ctx = ctx
+        self.cl = cl
+        self.fn = fn
+        self.qual = qual
+        self.rep = rep
+        self.local: set[str] = set()
+        self.shared_writes: set[str] = set()   # self attrs written here
+
+    def run(self):
+        args = self.fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            self.local.add(a.arg)
+        # Names assigned anywhere in the target are locals (Python scoping:
+        # assignment without nonlocal makes the name local).
+        for n in _own_walk(self.fn):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    self._collect_local(t)
+            elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+                self._collect_local(n.target)
+            elif isinstance(n, ast.Nonlocal):
+                for name in n.names:
+                    self.local.discard(name)
+        self.walk_block(self.fn.body, held=())
+
+    def _collect_local(self, t):
+        if isinstance(t, ast.Name):
+            self.local.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._collect_local(e)
+        elif isinstance(t, ast.Starred):
+            self._collect_local(t.value)
+
+    def _is_lock_key(self, key: str | None) -> bool:
+        return key is not None and key.startswith("self.") \
+            and key.split(".")[1] in self.cl.locks
+
+    def _shared_write_key(self, t) -> str | None:
+        """Dotted key if ``t`` is a write to shared state (self attr /
+        subscript on one, or a closure name), else None."""
+        node = t.value if isinstance(t, ast.Subscript) else t
+        key = _key_of(node)
+        if key is None:
+            return None
+        root = key.split(".", 1)[0]
+        if root == "self":
+            return key
+        if root not in self.local:
+            return key
+        return None
+
+    def walk_block(self, stmts, held):
+        for st in stmts:
+            self.walk_stmt(st, held)
+
+    def walk_stmt(self, st, held):
+        if isinstance(st, ast.With):
+            new = list(held)
+            for item in st.items:
+                key = _key_of(item.context_expr)
+                if self._is_lock_key(key):
+                    new.append(key)
+            if len(new) > len(held) and new[-1] not in held:
+                block_writes: list[tuple] = []
+                self._scan_locked_block(st.body, block_writes)
+                if self.cl.abandonable and block_writes \
+                        and not self._has_fence(st.body):
+                    self.rep.flag(
+                        "stale-thread-write", st,
+                        "result write in an abandonable thread (its "
+                        "launcher joins with a timeout) lacks a generation "
+                        "fence: a timed-out, abandoned run can still "
+                        "publish its result — the PR 6 watchdog race")
+            self.walk_block(st.body, tuple(new))
+            return
+        targets = []
+        if isinstance(st, ast.Assign):
+            targets = st.targets
+        elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            targets = [st.target]
+        for t in targets:
+            self._flag_write(t, st, held)
+        if isinstance(st, ast.Expr) and isinstance(st.value, ast.Call):
+            f = st.value.func
+            if isinstance(f, ast.Attribute) and f.attr in _MUTATORS:
+                key = self._shared_write_key(f.value)
+                if key is not None and not held:
+                    self._unlocked(key, st)
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.stmt):
+                self.walk_stmt(child, held)
+            elif hasattr(child, "body") and isinstance(
+                    child, (ast.ExceptHandler,)):
+                self.walk_block(child.body, held)
+
+    def _flag_write(self, t, st, held):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._flag_write(e, st, held)
+            return
+        key = self._shared_write_key(t)
+        if key is None:
+            return
+        self.shared_writes.add(key)
+        if not held:
+            self._unlocked(key, st)
+
+    def _unlocked(self, key, st):
+        self.rep.flag(
+            "unlocked-thread-write", st,
+            f"'{key}' is written inside a background thread with no lock "
+            "held — racing every reader in the launching thread")
+
+    def _scan_locked_block(self, stmts, out):
+        for n in stmts:
+            for t in ([*n.targets] if isinstance(n, ast.Assign)
+                      else [n.target] if isinstance(n, (ast.AugAssign,
+                                                        ast.AnnAssign))
+                      else []):
+                key = self._shared_write_key(t) if not isinstance(
+                    t, (ast.Tuple, ast.List)) else None
+                if key is not None:
+                    out.append((key, n))
+            if isinstance(n, ast.Expr) and isinstance(n.value, ast.Call):
+                f = n.value.func
+                if isinstance(f, ast.Attribute) and f.attr in _MUTATORS:
+                    key = self._shared_write_key(f.value)
+                    if key is not None:
+                        out.append((key, n))
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, ast.stmt):
+                    self._scan_locked_block([child], out)
+                elif isinstance(child, ast.ExceptHandler):
+                    self._scan_locked_block(child.body, out)
+
+    def _has_fence(self, stmts) -> bool:
+        """A generation fence: an If comparing a plain name against
+        shared state, whose body bails out (return/continue/raise)."""
+        for n in stmts:
+            if not isinstance(n, ast.If):
+                continue
+            cmp_ok = any(
+                isinstance(c, ast.Compare)
+                and any(isinstance(x, ast.Name)
+                        for x in [c.left, *c.comparators])
+                and any(isinstance(x, ast.Attribute)
+                        for x in [c.left, *c.comparators])
+                for c in ast.walk(n.test))
+            bails = any(isinstance(x, (ast.Return, ast.Continue, ast.Raise))
+                        for x in ast.walk(n))
+            if cmp_ok and bails:
+                return True
+        return False
+
+
+def _audit_guard_epochs(ctx: _ModuleCtx, fn, qual: str, rep: _Reporter):
+    """The PR 9 class: a loop guard that raises on a mix of state sampled
+    *before* the round's mutating call and state sampled after it."""
+    for loop in ast.walk(fn):
+        if not isinstance(loop, (ast.While, ast.For)):
+            continue
+        seq = loop.body
+        assigned_at: dict[str, int] = {}
+        mut_at: list[int] = []
+        for i, st in enumerate(seq):
+            if isinstance(st, ast.Expr) and isinstance(st.value, ast.Call):
+                f = st.value.func
+                if isinstance(f, ast.Attribute):
+                    root = f.value
+                    while isinstance(root, (ast.Attribute, ast.Subscript)):
+                        root = root.value
+                    if isinstance(root, ast.Name) and (
+                            root.id == "self" or root.id in assigned_at):
+                        mut_at.append(i)
+            if isinstance(st, ast.Assign):
+                for t in st.targets:
+                    if isinstance(t, ast.Name):
+                        assigned_at[t.id] = i
+            if not isinstance(st, ast.If):
+                continue
+            if not any(isinstance(x, ast.Raise) for x in ast.walk(st)):
+                continue
+            muts_before = [m for m in mut_at if m < i]
+            if not muts_before:
+                continue
+            last_mut = muts_before[-1]
+            test = st.test
+            conjuncts = (test.values if isinstance(test, ast.BoolOp)
+                         and isinstance(test.op, ast.And) else [test])
+            stale, fresh = [], False
+            for c in conjuncts:
+                names = {n.id for n in ast.walk(c)
+                         if isinstance(n, ast.Name)
+                         and not self_attr_root(n, c)}
+                attrs = any(isinstance(n, ast.Attribute)
+                            for n in ast.walk(c))
+                stale_names = {n for n in names
+                               if n in assigned_at
+                               and assigned_at[n] < last_mut}
+                fresh_names = {n for n in names
+                               if n in assigned_at
+                               and assigned_at[n] > last_mut}
+                if attrs or fresh_names:
+                    fresh = True
+                    continue  # delta compares (before vs after) count fresh
+                if stale_names:
+                    stale.append((c, sorted(stale_names)))
+            if stale and fresh:
+                c, names = stale[0]
+                mut_line = seq[last_mut].lineno
+                rep.flag(
+                    "guard-epoch-mix", st,
+                    f"loop guard raises on {'/'.join(names)!s} sampled "
+                    f"before the round's mutating call at line {mut_line}, "
+                    "mixed with state sampled after it — the PR 9 "
+                    "no-progress-guard race; sample every conjunct after "
+                    "the round")
+
+
+def self_attr_root(name_node, within):
+    """True if ``name_node`` is the root of an Attribute chain (so it is
+    the receiver, e.g. ``self`` in ``self.shared``, not a value read)."""
+    for n in ast.walk(within):
+        if isinstance(n, ast.Attribute) and n.value is name_node:
+            return True
+    return False
+
+
+def _audit_locks(ctx: _ModuleCtx, tree, out: list[Finding],
+                 waived: list[str], edges: set[tuple[str, str]],
+                 inventory: dict):
+    n_locks = n_threads = 0
+
+    def walk_edges(fn, qual, lock_keys, cls_qual):
+        # Lexical lock-nesting edges for the acquisition-order graph,
+        # plus bare acquire() discipline lint — over *every* method.
+        rep = _Reporter(ctx, qual, out, waived)
+
+        def rec(stmts, held):
+            for st in stmts:
+                if isinstance(st, ast.With):
+                    new = list(held)
+                    for item in st.items:
+                        key = _key_of(item.context_expr)
+                        if key in lock_keys:
+                            full = f"{cls_qual}.{key.split('.', 1)[1]}"
+                            if held:
+                                edges.add((held[-1], full))
+                            new.append(full)
+                    rec(st.body, tuple(new))
+                    continue
+                for node in ast.walk(st):
+                    if isinstance(node, ast.Call) \
+                            and isinstance(node.func, ast.Attribute) \
+                            and node.func.attr in ("acquire", "release") \
+                            and _key_of(node.func.value) in lock_keys:
+                        rep.flag(
+                            "bare-acquire", node,
+                            f"bare .{node.func.attr}() on a lock — use a "
+                            "with-block so the discipline is statically "
+                            "checkable (and exception-safe)",
+                            severity=Severity.WARN)
+                for child in ast.iter_child_nodes(st):
+                    if isinstance(child, ast.stmt):
+                        rec([child], held)
+                    elif isinstance(child, ast.ExceptHandler):
+                        rec(child.body, held)
+
+        rec(fn.body, ())
+
+    def visit(node, prefix):
+        nonlocal n_locks, n_threads
+        for child in node.body if hasattr(node, "body") else ():
+            if isinstance(child, ast.ClassDef):
+                cl = _collect_class_locks(child, prefix)
+                n_locks += len(cl.locks)
+                n_threads += len(cl.thread_targets)
+                lock_keys = {f"self.{a}" for a in cl.locks}
+                for m in child.body:
+                    if isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                        qual = f"{cl.qual}.{m.name}"
+                        walk_edges(m, qual, lock_keys, cl.qual)
+                        rep = _Reporter(ctx, qual, out, waived)
+                        _audit_guard_epochs(ctx, m, qual, rep)
+                for tname, tfn in cl.thread_targets.items():
+                    qual = f"{cl.qual}.{tname}"
+                    rep = _Reporter(ctx, qual, out, waived)
+                    lw = _LockWalk(ctx, cl, tfn, qual, rep)
+                    lw.run()
+                    _check_cross_thread(ctx, child, cl, lw, out, waived)
+                visit(child, cl.qual)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                rep = _Reporter(ctx, qual, out, waived)
+                _audit_guard_epochs(ctx, child, qual, rep)
+
+    visit(tree, "")
+    inventory["locks"] = inventory.get("locks", 0) + n_locks
+    inventory["threads"] = inventory.get("threads", 0) + n_threads
+
+
+def _check_cross_thread(ctx, cls, cl, lw: _LockWalk, out, waived):
+    """Attributes written by the thread target AND, un-locked, by other
+    methods of the class: both sides of the race must hold the lock."""
+    thread_attrs = {k for k in lw.shared_writes if k.startswith("self.")}
+    if not thread_attrs:
+        return
+    target_names = {getattr(fn, "name", "") for fn in
+                    cl.thread_targets.values()}
+    for m in cls.body:
+        if not isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if m.name in target_names:
+            continue
+        # Constructors run before any thread of this object can exist.
+        if m.name in ("__init__", "__post_init__"):
+            continue
+        qual = f"{cl.qual}.{m.name}"
+        rep = _Reporter(ctx, qual, out, waived)
+
+        def rec(stmts, held, m=m, rep=rep):
+            for st in stmts:
+                if isinstance(st, ast.With):
+                    new = held or any(
+                        _key_of(item.context_expr) is not None
+                        and _key_of(item.context_expr).startswith("self.")
+                        and _key_of(item.context_expr).split(".")[1]
+                        in cl.locks
+                        for item in st.items)
+                    rec(st.body, new)
+                    continue
+                targets = ([*st.targets] if isinstance(st, ast.Assign)
+                           else [st.target]
+                           if isinstance(st, (ast.AugAssign, ast.AnnAssign))
+                           else [])
+                flat = []
+                for t in targets:
+                    flat.extend(t.elts if isinstance(t, (ast.Tuple,
+                                                         ast.List)) else [t])
+                for t in flat:
+                    node = t.value if isinstance(t, ast.Subscript) else t
+                    key = _key_of(node)
+                    if key in thread_attrs and not held:
+                        rep.flag(
+                            "unlocked-shared-write", st,
+                            f"'{key}' is written by thread target "
+                            f"'{cl.qual}' and here without the lock — "
+                            "both sides of a cross-thread write must "
+                            "synchronize")
+                for child in ast.iter_child_nodes(st):
+                    if isinstance(child, ast.stmt):
+                        rec([child], held)
+                    elif isinstance(child, ast.ExceptHandler):
+                        rec(child.body, held)
+
+        rec(m.body, False)
+
+
+def _cycle(edges: set[tuple[str, str]]) -> list[str] | None:
+    graph: dict[str, set[str]] = {}
+    for a, b in edges:
+        graph.setdefault(a, set()).add(b)
+    seen: dict[str, int] = {}  # 1 = in stack, 2 = done
+
+    def dfs(n, path):
+        seen[n] = 1
+        for m in graph.get(n, ()):
+            if seen.get(m) == 1:
+                return path[path.index(n):] + [m] if n in path else [n, m]
+            if seen.get(m) is None:
+                got = dfs(m, path + [m])
+                if got:
+                    return got
+        seen[n] = 2
+        return None
+
+    for n in list(graph):
+        if seen.get(n) is None:
+            got = dfs(n, [n])
+            if got:
+                return got
+    return None
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def run_on_sources(sources: dict[str, str]) -> list[Finding]:
+    """Audit a {repo-path: source-text} mapping (real tree or fixtures)."""
+    registry = collect_registry(sources)
+    out: list[Finding] = []
+    waived: list[str] = []
+    edges: set[tuple[str, str]] = set()
+    inventory: dict = {}
+    total_sites = 0
+    for rel, src in sources.items():
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            out.append(error(PASS, f"{rel}:<module>",
+                             f"[parse] source does not parse: {e}"))
+            continue
+        ctx = _ModuleCtx(rel, src, registry)
+        total_sites += _audit_donation(ctx, tree, out, waived)
+        _audit_locks(ctx, tree, out, waived, edges, inventory)
+
+    cyc = _cycle(edges)
+    if cyc:
+        out.append(error(
+            PASS, "src/repro/analysis/hostsafety.py:lock-order",
+            f"[lock-cycle] lock acquisition order has a cycle: "
+            f"{' -> '.join(cyc)} — two threads taking these in opposite "
+            "order deadlock"))
+    n_err = sum(1 for f in out if f.severity >= Severity.ERROR)
+    n_don_waived = sum(1 for w in waived if "[use-after-donate]" in w)
+    out.append(info(
+        PASS, "src/repro/analysis/hostsafety.py:donation-lifetime",
+        f"{len(registry.attr_donors)} donating attributes + "
+        f"{len(registry.factories)} donating factories derived from the "
+        f"AST; {total_sites} donating call sites dataflow-walked, "
+        f"{n_don_waived} waived, {n_err} violations",
+        donors=len(registry.attr_donors) + len(registry.factories),
+        sites=total_sites, waived=n_don_waived))
+    out.append(info(
+        PASS, "src/repro/analysis/hostsafety.py:lock-discipline",
+        f"{inventory.get('locks', 0)} locks, "
+        f"{inventory.get('threads', 0)} thread targets inventoried; "
+        f"{len(edges)} nested acquisition edge(s), "
+        f"{'CYCLE' if cyc else 'acyclic'}",
+        locks=inventory.get("locks", 0),
+        threads=inventory.get("threads", 0), edges=len(edges)))
+    for w in waived:
+        out.append(info(PASS,
+                        "src/repro/analysis/hostsafety.py:waivers",
+                        f"waiver: {w}"))
+    return out
+
+
+def derived_registry() -> DonationRegistry:
+    """The donation registry derived from the real tree (for the
+    cross-check against ``audit_jit_entrypoints`` declarations)."""
+    return collect_registry(_read_tree_sources())
+
+
+def _read_tree_sources() -> dict[str, str]:
+    sources = {}
+    for rel in HOST_MODULES:
+        p = _REPO / rel
+        if p.exists():
+            sources[rel] = p.read_text()
+    return sources
+
+
+def run(cfg=None) -> list[Finding]:
+    """Audit the real tree.  ``cfg`` is ignored: host-tier safety is a
+    property of the source, not of any model configuration."""
+    del cfg
+    return run_on_sources(_read_tree_sources())

@@ -19,10 +19,13 @@ from repro.analysis.findings import Finding
 DEFAULT_ARCHS = ("rwkv6-1.6b", "recurrentgemma-2b", "gemma3-1b")
 
 #: pass name -> module (each module exposes ``run(cfg) -> list[Finding]``
-#: and a ``PASS`` constant matching its key here).  Ordered: pure shape
-#: math first, tracing passes next, the one executing pass (retrace)
-#: last — so a geometry error surfaces before anything compiles.
+#: and a ``PASS`` constant matching its key here).  Ordered: the jax-free
+#: host-tier AST audit first (it needs nothing to import, let alone
+#: compile), pure shape math next, tracing passes after, the one
+#: executing pass (retrace) last — so a host-code or geometry error
+#: surfaces before anything compiles.
 PASS_MODULES = {
+    "hostsafety": "repro.analysis.hostsafety",
     "resources": "repro.analysis.resources",
     "ringslack": "repro.analysis.ringslack",
     "paging": "repro.analysis.paging",

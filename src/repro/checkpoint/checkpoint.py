@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.watchdog import make_lock
+
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
@@ -97,34 +99,73 @@ class AsyncSaver:
     next ``save_async`` or ``wait`` call.  A consumer that restores from
     "the last snapshot" must find out that the last snapshot never landed
     — a recovery source that failed silently is worse than none.
+
+    A *stalled* write is not allowed to hang the caller either:
+    :meth:`wait` joins the writer with a timeout (``timeout_s``, per-call
+    overridable) and raises :class:`AsyncSaverError` if the thread is
+    still alive when it expires.  The abandoned writer is fenced off by a
+    generation counter — like the step watchdog's, because a Python
+    thread cannot be killed: if it eventually finishes, its late error
+    (or success) is discarded (``stale_discarded`` counts them) instead
+    of being misattributed to a later write.
     """
 
-    def __init__(self):
+    def __init__(self, timeout_s: float = 600.0):
+        self.timeout_s = timeout_s
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
+        self._gen = 0
+        self._lock = make_lock()
+        self.stale_discarded = 0
+        self.stalls = 0
 
-    def _write(self, directory, step, host_tree, mesh_shape):
+    def _write(self, directory, step, host_tree, mesh_shape, gen):
         try:
             save(directory, step, host_tree, mesh_shape=mesh_shape)
+            err = None
         except BaseException as e:  # noqa: BLE001 — re-raised at next drain
-            self._error = e
+            err = e
+        with self._lock:
+            if gen != self._gen:        # fenced: a timed-out wait() moved on
+                self.stale_discarded += 1
+                return
+            if err is not None:
+                self._error = err
 
     def save_async(self, directory, step, tree, *, mesh_shape=None):
         self.wait()
         # Snapshot to host synchronously (cheap vs. step time), write async.
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        with self._lock:
+            self._gen += 1
+            gen = self._gen
         self._thread = threading.Thread(
-            target=self._write, args=(directory, step, host_tree, mesh_shape),
+            target=self._write,
+            args=(directory, step, host_tree, mesh_shape, gen),
             daemon=True,
         )
         self._thread.start()
 
-    def wait(self):
-        if self._thread is not None:
-            self._thread.join()
+    def wait(self, timeout_s: float | None = None):
+        t = self._thread
+        if t is not None:
+            limit = self.timeout_s if timeout_s is None else timeout_s
+            t.join(limit)
+            if t.is_alive():
+                with self._lock:
+                    # Fence the stalled writer off before abandoning it:
+                    # its eventual result belongs to no one now.
+                    self._gen += 1
+                    self.stalls += 1
+                self._thread = None
+                raise AsyncSaverError(
+                    f"background checkpoint write still running after "
+                    f"{limit}s — stalled writer abandoned (its late "
+                    "result will be discarded)")
             self._thread = None
-        if self._error is not None:
+        with self._lock:
             err, self._error = self._error, None
+        if err is not None:
             raise AsyncSaverError("background checkpoint save failed") from err
 
 

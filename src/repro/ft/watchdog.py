@@ -32,6 +32,31 @@ import time
 from typing import Any, Callable
 
 
+_lock_factory: Callable[[], Any] = threading.Lock
+
+
+def make_lock():
+    """Construct a mutex for host-tier shared state.
+
+    Every lock in the serve/ft/checkpoint stack comes from here so the
+    deterministic interleaving drill (:mod:`repro.serve.interleave`) can
+    swap in instrumented locks that force a preemption window at every
+    acquire/release — the runtime witness for the static lock-discipline
+    audit (``repro.analysis.hostsafety``).
+    """
+    return _lock_factory()
+
+
+def set_lock_factory(factory: Callable[[], Any] | None):
+    """Install (or, with ``None``, reset) the lock constructor used by
+    :func:`make_lock`.  Returns the previous factory so callers can
+    restore it."""
+    global _lock_factory
+    prev = _lock_factory
+    _lock_factory = threading.Lock if factory is None else factory
+    return prev
+
+
 class StepTimeout(RuntimeError):
     pass
 
@@ -58,7 +83,7 @@ class StepWatchdog:
     def __init__(self, timeout_s: float):
         self.timeout_s = timeout_s
         self._gen = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock()
         self.stale_discarded = 0
         self.timeouts = 0
         # Heartbeat: every completed run() bumps ``beats`` and stamps
@@ -74,7 +99,10 @@ class StepWatchdog:
         with self._lock:
             self._gen += 1
             gen = self._gen
-        self.cancelled = lambda: gen != self._gen
+            # Published under the lock: a previous generation's worker
+            # polling the *old* closure still compares against the bumped
+            # ``_gen``, and sees the rebind or the bump, never neither.
+            self.cancelled = lambda: gen != self._gen
         outcome: list[tuple[bool, Any]] = []
 
         def target():

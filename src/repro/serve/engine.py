@@ -38,6 +38,13 @@ from repro.model.attention import KVCache, PagedKVCache
 from repro.model.recurrent import RecState
 from repro.serve import paging
 
+#: Optional dispatch-boundary hook, called as ``hook(phase, kind)`` with
+#: phase ``"pre"``/``"post"`` around every fault-plumbed jit dispatch —
+#: inside the watchdog worker thread when one is active.  The
+#: deterministic interleaving drill (:mod:`repro.serve.interleave`)
+#: installs a forced-preemption point here; production leaves it None.
+dispatch_hook = None
+
 
 def make_prefill_step(cfg):
     """(params, tokens, **extras) -> logits (B, S, V).
@@ -240,34 +247,35 @@ def audit_jit_entrypoints(cfg, *, batch: int = 2, max_len: int = 64,
         JitEntry(
             "serve.decode_step", eng._decode,
             (params, state, sds((b, 1), i32), sds((), i32)),
-            f"{here}.__post_init__",
+            f"{here}.__post_init__", donor="_decode",
         ),
         JitEntry(
             "serve.prefill", eng._prefill,
             (params, state, sds((b, p), i32), vec),
             "src/repro/serve/engine.py:make_cache_prefill_step",
+            donor="make_cache_prefill_step",
         ),
         JitEntry(
             "serve.window", eng._window_step(k, last=False),
             (params, state, sds((b, 1), i32), vec),
-            f"{here}._window_step",
+            f"{here}._window_step", donor="_window_step",
         ),
         JitEntry(
             "serve.serve_window", eng._serve_window(k, 0.0, 0, None),
             (params, state, sds((b, 1), i32), vec, vec, vec,
              sds((b,), jnp.bool_), vec, key),
-            f"{here}._serve_window",
+            f"{here}._serve_window", donor="_serve_window",
         ),
         JitEntry(
             "serve.admit", eng._admit_step(p, 0.0, 0, None),
             (params, state, sds((b, p), i32), sds((b,), jnp.bool_), vec,
              vec, vec, vec, vec, vec, sds((b,), jnp.bool_),
              sds((b, 1), i32), key),
-            f"{here}._admit_step",
+            f"{here}._admit_step", donor="_admit_step",
         ),
         JitEntry(
             "serve.shadow_checksum", eng._shadow_csum, (state,),
-            f"{here}.__post_init__", donated=None,
+            f"{here}.__post_init__", donated=None, donate_argnums=None,
         ),
     ] + _paged_jit_entrypoints(cfg, batch=batch, max_len=max_len,
                                decode_window=decode_window, prompt=prompt)
@@ -306,7 +314,7 @@ def _paged_jit_entrypoints(cfg, *, batch, max_len, decode_window, prompt):
             "serve.paged_window", eng._serve_window(k, 0.0, 0, None),
             (params, state, sds((b, 1), i32), vec, vec, vec, bvec, vec,
              key),
-            f"{here}._serve_window",
+            f"{here}._serve_window", donor="_serve_window",
         ),
         JitEntry(
             "serve.paged_admit",
@@ -314,7 +322,7 @@ def _paged_jit_entrypoints(cfg, *, batch, max_len, decode_window, prompt):
             (params, state, sds((b, p), i32), bvec, vec, vec, bvec,
              tables, tables, rec, ring, vec, vec, vec, vec, vec, bvec,
              sds((b, 1), i32), key),
-            f"{here}._admit_step_paged",
+            f"{here}._admit_step_paged", donor="_admit_step_paged",
         ),
     ]
 
@@ -921,18 +929,30 @@ class ServeEngine:
         """
 
         def call():
+            hook = dispatch_hook
+            if hook is not None:
+                hook("pre", kind)
             if chaos is not None:
                 chaos.before_dispatch(
                     kind, index,
                     cancelled=(watchdog.cancelled if watchdog is not None
                                else None),
                 )
-            return fn(*args)
+            out = fn(*args)
+            if hook is not None:
+                hook("post", kind)
+            return out
 
         attempt = 0
         while True:
             try:
                 t0 = time.monotonic()
+                # hostsafety: ok(retry re-passes args only pre-consumption)
+                # A retried dispatch passes the donated args tuple again —
+                # legal because every retried failure (chaos drop, hang at
+                # the watchdog fence) raises *before* fn consumes the
+                # buffers; post-consumption faults go to snapshot/restore,
+                # never back through this loop.
                 out = watchdog.run(call) if watchdog is not None else call()
                 if straggler is not None and kind == "window":
                     if straggler.observe(time.monotonic() - t0):

@@ -36,6 +36,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.ft.watchdog import make_lock
+
 HEALTHY = "healthy"
 DEGRADED = "degraded"
 DEAD = "dead"
@@ -64,6 +66,12 @@ class ReplicaMonitor:
     def __post_init__(self):
         if self.window < 1:
             raise ValueError("window must be >= 1")
+        # Observations may come from a health-probe thread while the
+        # router loop reads the verdict: every mutation happens under
+        # this lock, and :meth:`status` reads (state, reason) under it —
+        # a reader never sees a new state with a stale reason (or a
+        # ``dead`` that heals).
+        self._lock = make_lock()
         self.state = HEALTHY
         self.reason = ""
         self._faults: list[int] = []     # recent per-observation fault counts
@@ -88,6 +96,13 @@ class ReplicaMonitor:
         replica producing them at a sustained rate has a sick device,
         and routing fresh requests onto it just grows the handoff.
         """
+        with self._lock:
+            return self._observe_locked(
+                faults=faults, straggler=straggler,
+                watchdog_timeout=watchdog_timeout)
+
+    def _observe_locked(self, *, faults: int, straggler: bool,
+                        watchdog_timeout: bool) -> str:
         if self.state == DEAD:
             return self.state
         self._faults.append(int(faults))
@@ -127,9 +142,18 @@ class ReplicaMonitor:
     def mark_dead(self, reason: str):
         """Terminal, externally observed death (ReplicaKilled, dispatch
         retries exhausted, device error).  Idempotent."""
-        self._goto(DEAD, reason)
+        with self._lock:
+            self._goto(DEAD, reason)
+
+    def status(self) -> tuple[str, str]:
+        """Atomic (state, reason) pair — the torn-read-free way for a
+        router loop to report a verdict an observer thread may be
+        changing concurrently."""
+        with self._lock:
+            return self.state, self.reason
 
     @property
     def routable(self) -> bool:
         """True iff the router may place NEW requests here."""
-        return self.state == HEALTHY
+        with self._lock:
+            return self.state == HEALTHY

@@ -197,6 +197,7 @@ def audit_jit_entrypoints(cfg, *, batch: int | None = None, seq: int = 16):
             "train.step", make_jitted_train_step(cfg),
             (abstract_train_state(cfg), bt),
             "src/repro/train/step.py:make_jitted_train_step",
-            donated="TrainState",
+            donated="TrainState", donate_argnums=(0,),
+            donor="make_jitted_train_step",
         ),
     ]

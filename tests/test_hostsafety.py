@@ -1,0 +1,304 @@
+"""Host-tier safety audit (``repro.analysis.hostsafety``): the clean
+tree audits zero-error with its waivers surfaced; four reintroduced
+historical/likely bugs (use-after-donate in the decode loop, the PR 6
+unlocked watchdog result-write, a dropped stale-thread fence, the PR 9
+pre-round ``busy`` sample) are each caught at the right location with
+ERROR severity; the AST-derived donation registry agrees with the live
+``audit_jit_entrypoints`` declarations; synthetic fixtures cover the
+lock-order cycle detector and the waiver downgrade path.
+
+Everything here is jax-free except the registry cross-check (which
+builds the real entrypoint declarations to diff against the AST).
+"""
+
+import pytest
+
+from repro.analysis import hostsafety as HS
+from repro.analysis.findings import Severity
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _errors(findings):
+    return [f for f in findings if f.severity >= Severity.ERROR]
+
+
+def _warns(findings):
+    return [f for f in findings if f.severity == Severity.WARN]
+
+
+def _mutated(rel, old, new):
+    """Real tree sources with ``old`` -> ``new`` applied in ``rel``.
+
+    Asserts the anchor text still exists exactly once, so a refactor
+    that moves the code fails loudly here instead of silently turning
+    the drill into a no-op.
+    """
+    srcs = HS._read_tree_sources()
+    assert rel in srcs, f"{rel} missing from HOST_MODULES sources"
+    assert srcs[rel].count(old) == 1, (
+        f"mutation anchor drifted in {rel}: {old!r} found "
+        f"{srcs[rel].count(old)} times")
+    srcs[rel] = srcs[rel].replace(old, new)
+    return srcs
+
+
+def _the_error(findings, rule, loc_parts):
+    """The single ERROR matching ``rule``; asserts its location."""
+    errs = [f for f in _errors(findings) if f"[{rule}]" in f.message]
+    assert errs, (
+        f"mutation not caught: no [{rule}] ERROR in "
+        f"{[f.message for f in _errors(findings)]}")
+    f = errs[0]
+    for part in loc_parts:
+        assert part in f.location, (
+            f"[{rule}] caught at {f.location}, expected {part!r} in it")
+    assert f.severity == Severity.ERROR
+    return f
+
+
+# --------------------------------------------------------------------------
+# clean tree
+# --------------------------------------------------------------------------
+
+
+class TestCleanTree:
+    def test_zero_errors_zero_warns(self):
+        findings = HS.run()
+        assert findings, "audit produced no findings at all"
+        assert _errors(findings) == []
+        assert _warns(findings) == []
+
+    def test_intentional_findings_are_waived_not_silent(self):
+        """The known-intentional patterns (the ``_dispatch`` retry
+        re-pass, the instrumented-lock wrapper's bare acquire) must
+        surface as waived INFO findings — auditable, not invisible."""
+        msgs = [f.message for f in HS.run()]
+        assert any("[use-after-donate]" in m and "waived" in m
+                   for m in msgs)
+        assert any("[bare-acquire]" in m and "waived" in m for m in msgs)
+
+    def test_summaries_report_real_coverage(self):
+        findings = HS.run()
+        don = [f for f in findings if "donation-lifetime" in f.location]
+        lck = [f for f in findings if "lock-discipline" in f.location]
+        assert don and don[0].metrics["sites"] >= 10
+        assert don[0].metrics["donors"] >= 6
+        assert "0 violations" in don[0].message
+        assert lck and lck[0].metrics["locks"] >= 3
+        assert lck[0].metrics["threads"] >= 2
+        assert "acyclic" in lck[0].message
+
+
+# --------------------------------------------------------------------------
+# mutation drills: reintroduce four real bug classes
+# --------------------------------------------------------------------------
+
+
+class TestMutationDrills:
+    def test_use_after_donate_in_decode_loop(self):
+        """Rebinding the window step's output to a fresh name leaves the
+        loop re-passing the already-donated state next iteration —
+        silent garbage on hardware that honors donation."""
+        srcs = _mutated(
+            "src/repro/serve/engine.py",
+            "toks, state, cur, pos = fn(self.params, state, cur, pos)",
+            "toks, new_state, cur, pos = fn(self.params, state, cur, pos)",
+        )
+        f = _the_error(HS.run_on_sources(srcs), "use-after-donate",
+                       ["src/repro/serve/engine.py", "generate"])
+        assert "state" in f.message
+
+    WATCHDOG_RESULT_BLOCK = (
+        "            with self._lock:\n"
+        "                if gen != self._gen:        "
+        "# fenced: step was abandoned\n"
+        "                    self.stale_discarded += 1\n"
+        "                    return\n"
+        "                outcome.append((ok, value))"
+    )
+
+    def test_unlocked_watchdog_result_write(self):
+        """The PR 6 bug class: the worker thread publishing its result
+        without the lock races the timeout path's generation bump."""
+        srcs = _mutated(
+            "src/repro/ft/watchdog.py",
+            self.WATCHDOG_RESULT_BLOCK,
+            "            if gen != self._gen:        "
+            "# fenced: step was abandoned\n"
+            "                self.stale_discarded += 1\n"
+            "                return\n"
+            "            outcome.append((ok, value))",
+        )
+        _the_error(HS.run_on_sources(srcs), "unlocked-thread-write",
+                   ["src/repro/ft/watchdog.py", "StepWatchdog"])
+
+    def test_dropped_stale_thread_fence(self):
+        """Lock kept but generation fence dropped: an abandoned worker's
+        late result lands in a restarted step's outcome list."""
+        srcs = _mutated(
+            "src/repro/ft/watchdog.py",
+            self.WATCHDOG_RESULT_BLOCK,
+            "            with self._lock:\n"
+            "                outcome.append((ok, value))",
+        )
+        _the_error(HS.run_on_sources(srcs), "stale-thread-write",
+                   ["src/repro/ft/watchdog.py", "StepWatchdog"])
+
+    def test_busy_sampled_pre_round(self):
+        """The PR 9 bug class: the wedge guard's ``busy`` sampled before
+        ``step_round()`` mutates the very state it guards."""
+        srcs = _mutated(
+            "src/repro/serve/fleet.py",
+            "                self.step_round()\n"
+            "                after = sum(1 for r in self.record "
+            "if r is not None)\n"
+            "                # Post-round state: a round that completed "
+            "nothing is\n"
+            "                # still progress if work remains in flight "
+            "(busy\n"
+            "                # session) or schedulable (shared queue) — "
+            "only the\n"
+            "                # all-idle, all-drained case is a wedge.\n"
+            "                busy = any(self.sessions[i].busy "
+            "for i in self._live())",
+            "                busy = any(self.sessions[i].busy "
+            "for i in self._live())\n"
+            "                self.step_round()\n"
+            "                after = sum(1 for r in self.record "
+            "if r is not None)",
+        )
+        _the_error(HS.run_on_sources(srcs), "guard-epoch-mix",
+                   ["src/repro/serve/fleet.py", "FleetRouter.run"])
+
+    def test_mutations_do_not_break_parsing(self):
+        """Paranoia: none of the drills above relied on a parse error."""
+        for srcs in (HS._read_tree_sources(),):
+            assert not any("[parse]" in f.message
+                           for f in HS.run_on_sources(srcs))
+
+
+# --------------------------------------------------------------------------
+# registry cross-check: AST-derived donors vs live declarations
+# --------------------------------------------------------------------------
+
+
+class TestRegistryCrossCheck:
+    def test_declared_donors_match_ast(self):
+        """Every ``JitEntry`` that declares a ``donor`` symbol must have
+        a matching AST-derived donor with the same ``donate_argnums`` —
+        so the live jit declarations and the static audit's registry
+        cannot drift apart silently."""
+        from repro.analysis.registry import jit_entries
+        from repro.configs.registry import get_config
+
+        reg = HS.derived_registry()
+        derived = dict(reg.attr_donors)
+        derived.update(reg.factories)
+        entries = jit_entries(get_config("rwkv6-1.6b").reduced())
+        assert entries
+        checked = 0
+        for e in entries:
+            if e.donated is None:
+                assert e.donate_argnums is None, e.name
+                continue
+            assert e.donor is not None, (
+                f"{e.name}: donating entrypoint without a donor symbol "
+                "for the hostsafety cross-check")
+            assert e.donor in derived, (
+                f"{e.name}: donor {e.donor!r} not derived from the AST "
+                f"(have {sorted(derived)})")
+            assert tuple(e.donate_argnums) == tuple(
+                derived[e.donor].argnums), (
+                f"{e.name}: declared donate_argnums {e.donate_argnums} "
+                f"!= AST-derived {derived[e.donor].argnums} for {e.donor}")
+            checked += 1
+        assert checked >= 5
+
+    def test_train_step_donates_state(self):
+        reg = HS.derived_registry()
+        assert reg.factories["make_jitted_train_step"].argnums == (0,)
+
+    def test_decode_attr_donor(self):
+        reg = HS.derived_registry()
+        assert reg.attr_donors["_decode"].argnums == (1,)
+
+
+# --------------------------------------------------------------------------
+# synthetic fixtures: cycle detector + waiver downgrade
+# --------------------------------------------------------------------------
+
+LOCK_CYCLE_FIXTURE = '''\
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.x = 0
+        self.y = 0
+
+    def fwd(self):
+        with self._a:
+            with self._b:
+                self.x += 1
+
+    def rev(self):
+        with self._b:
+            with self._a:
+                self.y += 1
+'''
+
+
+BARE_ACQUIRE_FIXTURE = '''\
+import threading
+
+
+class Holder:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def grab(self):
+        self._lock.acquire(){waiver}
+        self.n += 1
+        self._lock.release(){waiver}
+'''
+
+
+class TestSyntheticFixtures:
+    def test_lock_order_cycle_is_an_error(self):
+        findings = HS.run_on_sources({"fix/pair.py": LOCK_CYCLE_FIXTURE})
+        errs = [f for f in _errors(findings)
+                if "[lock-cycle]" in f.message]
+        assert errs, [f.message for f in findings]
+        assert "deadlock" in errs[0].message
+
+    def test_bare_acquire_warns_without_waiver(self):
+        src = BARE_ACQUIRE_FIXTURE.format(waiver="")
+        findings = HS.run_on_sources({"fix/holder.py": src})
+        assert any("[bare-acquire]" in f.message for f in _warns(findings))
+        assert _errors(findings) == []
+
+    def test_waiver_downgrades_to_info_and_is_listed(self):
+        src = BARE_ACQUIRE_FIXTURE.format(
+            waiver="  # hostsafety: ok(fixture)")
+        findings = HS.run_on_sources({"fix/holder.py": src})
+        assert _warns(findings) == []
+        assert _errors(findings) == []
+        waived = [f for f in findings
+                  if "[bare-acquire]" in f.message and "waived" in f.message]
+        assert len(waived) == 2
+        assert any(f.location.endswith(":waivers") and "fixture"
+                   in f.message for f in findings)
+
+    def test_parse_error_is_a_finding_not_a_crash(self):
+        findings = HS.run_on_sources({"fix/broken.py": "def f(:\n"})
+        assert any("[parse]" in f.message for f in _errors(findings))
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))

@@ -1,0 +1,133 @@
+"""Deterministic interleaving drill (``repro.serve.interleave``):
+schedule decisions are a pure function of (seed, tag, index); the
+instrumented lock behaves as a lock while forcing preemption windows;
+``installed()`` restores the production hooks on every exit path; and a
+small two-replica chaos drill stays bit-identical under forced
+schedules (the full 8-schedule version is tier-1 lane 3f)."""
+
+import threading
+
+import pytest
+
+from repro.ft import watchdog as W
+from repro.serve import interleave as I
+
+
+class TestForcedSchedule:
+    def test_decisions_are_seed_deterministic(self):
+        a = I.ForcedSchedule(3).decisions("lock.acquire", 64)
+        b = I.ForcedSchedule(3).decisions("lock.acquire", 64)
+        assert a == b
+        assert True in a and False in a
+
+    def test_different_seeds_and_tags_differ(self):
+        base = I.ForcedSchedule(3).decisions("lock.acquire", 64)
+        assert I.ForcedSchedule(4).decisions("lock.acquire", 64) != base
+        assert I.ForcedSchedule(3).decisions("lock.release", 64) != base
+
+    def test_point_counts_and_preempts(self):
+        sched = I.ForcedSchedule(0, p_preempt=1.0, max_sleep_s=0.0)
+        for _ in range(5):
+            sched.point("t")
+        assert sched.counts["t"] == 5
+        assert sched.preemptions == 5
+
+    def test_inactive_schedule_is_free(self):
+        sched = I.ForcedSchedule(0, p_preempt=1.0)
+        sched.active = False
+        sched.point("t")
+        assert sched.counts["t"] == 0
+        assert sched.preemptions == 0
+
+    def test_decision_sequence_matches_point_behavior(self):
+        """point() consumes exactly the decision stream decisions()
+        predicts — the property the bit-identity drill leans on."""
+        sched = I.ForcedSchedule(7, max_sleep_s=0.0)
+        want = sched.decisions("x", 32)
+        before = 0
+        got = []
+        for _ in range(32):
+            sched.point("x")
+            got.append(sched.preemptions > before)
+            before = sched.preemptions
+        assert got == want
+
+
+class TestInstrumentedLock:
+    def test_is_a_lock(self):
+        sched = I.ForcedSchedule(0, max_sleep_s=0.0)
+        lock = I.InstrumentedLock(sched)
+        assert not lock.locked()
+        with lock:
+            assert lock.locked()
+        assert not lock.locked()
+        assert sched.counts["lock.acquire"] == 1
+        assert sched.counts["lock.release"] == 1
+
+    def test_mutual_exclusion_under_forcing(self):
+        """A hammered counter stays exact: the wrapper forces windows
+        around the critical section, never inside its atomicity."""
+        sched = I.ForcedSchedule(1, p_preempt=0.3, max_sleep_s=1e-4)
+        lock = I.InstrumentedLock(sched)
+        state = {"n": 0}
+
+        def work():
+            for _ in range(50):
+                with lock:
+                    n = state["n"]
+                    state["n"] = n + 1
+
+        threads = [threading.Thread(target=work) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert state["n"] == 200
+        assert sched.preemptions > 0
+
+
+class TestInstalled:
+    def test_hooks_swapped_and_restored(self):
+        from repro.serve import engine as E
+
+        sched = I.ForcedSchedule(0, max_sleep_s=0.0)
+        prev_hook = E.dispatch_hook
+        with I.installed(sched):
+            assert isinstance(W.make_lock(), I.InstrumentedLock)
+            E.dispatch_hook("pre", "decode")
+        assert sched.counts["dispatch.pre.decode"] == 1
+        assert type(W.make_lock()) is type(threading.Lock())
+        assert E.dispatch_hook is prev_hook
+        assert sched.active is False
+
+    def test_restored_on_exception(self):
+        sched = I.ForcedSchedule(0, max_sleep_s=0.0)
+        with pytest.raises(RuntimeError):
+            with I.installed(sched):
+                raise RuntimeError("boom")
+        assert type(W.make_lock()) is type(threading.Lock())
+
+
+class TestDrill:
+    def test_two_schedule_chaos_drill_bit_identical(self):
+        stats = I.run_drill("rwkv6-1.6b", seeds=range(2))
+        assert stats["schedules"] == 2
+        assert stats["preemptions"] > 0
+        assert stats["points"] > stats["preemptions"]
+
+    def test_divergence_raises(self, monkeypatch):
+        """A drill that cannot fail witnesses nothing: poison the
+        baseline and require the drill to notice."""
+        import numpy as np
+
+        real = np.array_equal
+        monkeypatch.setattr(np, "array_equal", lambda a, b: False)
+        try:
+            with pytest.raises(RuntimeError, match="diverged"):
+                I.run_drill("rwkv6-1.6b", seeds=range(1))
+        finally:
+            monkeypatch.setattr(np, "array_equal", real)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))

@@ -10,6 +10,8 @@ and ``read_snapshot_host`` handoff validation."""
 
 import shutil
 import tempfile
+import threading
+import time
 from pathlib import Path
 
 import jax
@@ -235,6 +237,36 @@ class TestAsyncSaverFailure:
             saver.save_async(tmp_path, 1, {"x": np.zeros(2)})
         assert calls == [0]
 
+    def test_stalled_writer_surfaces_and_is_abandoned(
+            self, tmp_path, monkeypatch):
+        """A writer that hangs (dead NFS mount, wedged device sync) must
+        surface as an AsyncSaverError within the join budget — and its
+        eventual late completion is generation-fenced, never delivered
+        to a saver that has already moved on."""
+        release = threading.Event()
+        entered = threading.Event()
+
+        def stall(directory, step, tree, mesh_shape=None):
+            entered.set()
+            release.wait(10.0)
+
+        monkeypatch.setattr(C, "save", stall)
+        saver = C.AsyncSaver()
+        saver.save_async(tmp_path, 0, {"x": np.zeros(2)})
+        assert entered.wait(5.0)
+        with pytest.raises(C.AsyncSaverError, match="stalled"):
+            saver.wait(timeout_s=0.05)
+        assert saver.stalls == 1
+        # Unblock the abandoned writer: its result must be discarded
+        # against the bumped generation, not raised or recorded.
+        release.set()
+        deadline = time.monotonic() + 5.0
+        while saver.stale_discarded == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert saver.stale_discarded == 1
+        # The saver stays usable: a fresh wait() is clean.
+        saver.wait()
+
 
 class TestInjectorContracts:
     """Pinned ``bitflip_at`` / ``replica_kill_at`` fire exactly once
@@ -358,6 +390,52 @@ class TestReplicaMonitor:
     def test_window_validation(self):
         with pytest.raises(ValueError):
             H.ReplicaMonitor(window=0)
+
+    def test_concurrent_observation_no_torn_transitions(self):
+        """Observer threads hammer ``observe()`` while readers race
+        ``status()``: a reader must never see a non-healthy state with
+        an empty reason (a torn state/reason pair), never see the
+        monitor heal after DEAD, and once ``mark_dead`` fires the
+        verdict is exactly (DEAD, its reason) forever."""
+        mon = H.ReplicaMonitor(window=4, dead_after_degraded=10**9)
+        stop = threading.Event()
+        bad = []
+
+        def reader():
+            seen_dead = False
+            while not stop.is_set():
+                state, reason = mon.status()
+                if state == H.DEAD:
+                    seen_dead = True
+                    if reason != "external death":
+                        bad.append(("dead-with-wrong-reason", reason))
+                elif seen_dead:
+                    bad.append(("healed-after-dead", state))
+                if state != H.HEALTHY and not reason:
+                    bad.append(("state-without-reason", state))
+
+        def observer(seed):
+            rng = np.random.default_rng(seed)
+            for _ in range(400):
+                mon.observe(faults=int(rng.integers(0, 2)),
+                            straggler=bool(rng.integers(0, 2)))
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        observers = [threading.Thread(target=observer, args=(s,))
+                     for s in range(3)]
+        for t in readers + observers:
+            t.start()
+        for t in observers[:2]:
+            t.join()
+        mon.mark_dead("external death")
+        observers[2].join()
+        stop.set()
+        for t in readers:
+            t.join()
+        assert bad == []
+        assert mon.status() == (H.DEAD, "external death")
+        assert mon.transitions[-1] == (H.DEAD, "external death")
+        assert not mon.routable
 
 
 class TestFleetDrainModel:
